@@ -1,0 +1,55 @@
+"""Paper Fig. 1(b) / Fig. 10(d): supported event rate per method, plus the
+*measured* software throughput of our JAX/Pallas TOS implementations (the
+beyond-paper batched formulation vs the sequential-faithful one).
+
+Hardware-model rows reproduce the paper's Meps numbers; the measured rows
+time the actual kernels on this host (CPU; interpret-mode Pallas) — their
+purpose is the *ratio* batched/sequential, which is hardware-independent
+evidence for the event-parallel reformulation."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hwmodel as hw
+from repro.core import tos
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def rows():
+    out = []
+    # Fig. 1(b): max throughput per method (hardware model)
+    out.append(("fig1b_meps_eharris", 0.0, 0.15))         # [10]'s figure
+    out.append(("fig1b_meps_conventional_luvharris", 0.0,
+                hw.max_throughput_meps(1.2, nmc=False)))
+    out.append(("fig1b_meps_nmc_tos_1.2V", 0.0, hw.max_throughput_meps(1.2)))
+    out.append(("fig1b_meps_nmc_tos_0.6V", 0.0, hw.max_throughput_meps(0.6)))
+    out.append(("fig1b_meps_davis240_bandwidth", 0.0, 12.0))
+
+    # Measured software throughput (this host): sequential vs batched.
+    rng = np.random.default_rng(0)
+    h, w, e = 180, 240, 1024
+    xy = jnp.asarray(
+        np.stack([rng.integers(0, w, e), rng.integers(0, h, e)], 1), jnp.int32)
+    valid = jnp.ones((e,), bool)
+    surf = tos.tos_new(h, w)
+
+    t_seq = _time(lambda: tos.tos_update_sequential(surf, xy, valid))
+    t_bat = _time(lambda: tos.tos_update_batched(surf, xy, valid))
+    t_one = _time(lambda: tos.tos_update_batched_onehot(surf, xy, valid))
+    out.append(("sw_seq_us_per_kevent", t_seq * 1e6, e / t_seq / 1e6))
+    out.append(("sw_batched_us_per_kevent", t_bat * 1e6, e / t_bat / 1e6))
+    out.append(("sw_onehot_us_per_kevent", t_one * 1e6, e / t_one / 1e6))
+    out.append(("sw_batched_speedup_vs_seq", 0.0, t_seq / t_bat))
+    return out

@@ -1,0 +1,86 @@
+"""Beyond-paper: TPU-kernel cost model for the TOS update (§Perf cell 3).
+
+No TPU is attached, so wall-clock MFU is not measurable; instead this bench
+derives the analytic roofline terms of the two kernel formulations per chunk
+of E events on a (H, W) surface (v5e constants), plus interpret-mode
+correctness timing on this host.  The MXU-matmul formulation's compute term
+and the stream formulation's VPU term quantify the reformulation win — the
+numbers feeding EXPERIMENTS.md §Perf (TOS kernel hillclimb)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.mesh import HW
+
+# v5e VPU: 8x128 lanes x 4 ALUs x ~0.94 GHz ~= 4 Tops/s elementwise (f32)
+VPU_OPS = 4e12
+
+
+def kernel_terms(h=720, w=1280, e=1024, patch=7):
+    """Roofline terms (seconds per chunk) for the three formulations."""
+    px = h * w
+    out = {}
+
+    # (a) paper-faithful stream kernel: per event, one masked decrement over
+    # the VMEM-resident tile -> E * px vector ops; surface loaded+stored once
+    # per chunk (the near-memory property).
+    ops = e * px * 3.0            # compare+select+sub per pixel per event
+    out["stream_vpu_s"] = ops / VPU_OPS
+    out["stream_hbm_s"] = 2 * px * 1 / HW.HBM_BW       # uint8 in+out
+
+    # (b) event-parallel batched (scatter counts): E*P^2 scatter-adds (VPU,
+    # serialised by conflicts worst-case) + E^2 suffix pass + O(px) apply.
+    out["batched_vpu_s"] = (e * patch * patch * 4 + e * e * 2 + px * 4) / VPU_OPS
+    out["batched_hbm_s"] = 2 * px / HW.HBM_BW
+
+    # (c) MXU one-hot matmul: counts = (H,E)x(E,W) f32 matmul
+    out["onehot_mxu_s"] = 2.0 * h * e * w / HW.PEAK_BF16_FLOPS
+    out["onehot_vpu_s"] = (e * (h + w) + e * e * 2 + px * 4) / VPU_OPS
+    out["onehot_hbm_s"] = 2 * px / HW.HBM_BW
+    return out
+
+
+def binned_fraction(h, w, e, patch=7, seed=0):
+    """Measured mean per-tile event fraction after tile binning on a
+    shapes-like (spatially clustered) stream."""
+    from repro.events import synthetic
+    from repro.kernels.tos_update import TILE_H, TILE_W, bin_events_to_tiles
+
+    st = synthetic.shapes_stream(height=h, width=w, duration_us=20_000, seed=seed)
+    xy = jnp.asarray(st.xy[:e])
+    valid = jnp.ones((min(e, len(st)),), bool)
+    if len(st) < e:
+        pad = e - len(st)
+        xy = jnp.concatenate([xy, jnp.zeros((pad, 2), jnp.int32)])
+        valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
+    grid = ((h + TILE_H - 1) // TILE_H, (w + TILE_W - 1) // TILE_W)
+    binned, _ = bin_events_to_tiles(xy, valid, grid_hw=grid, patch=patch, cap=e)
+    per_tile = np.asarray(jnp.sum(binned[:, :, 2], axis=1))
+    return float(per_tile.mean()) / e, float(per_tile.max()) / e
+
+
+def rows():
+    out = []
+    for (h, w, e) in [(180, 240, 256), (720, 1280, 1024)]:
+        t = kernel_terms(h, w, e)
+        for k, v in t.items():
+            out.append((f"tos_kernel_{h}x{w}_E{e}_{k}", 0.0, v))
+        # headline: events/s capacity per formulation (dominant-term bound)
+        stream = max(t["stream_vpu_s"], t["stream_hbm_s"])
+        onehot = max(t["onehot_mxu_s"], t["onehot_vpu_s"], t["onehot_hbm_s"])
+        out.append((f"tos_kernel_{h}x{w}_E{e}_stream_meps", 0.0,
+                    e / stream / 1e6))
+        out.append((f"tos_kernel_{h}x{w}_E{e}_onehot_meps", 0.0,
+                    e / onehot / 1e6))
+        # iteration 3: tile binning — stream kernel's VPU term scales by the
+        # max per-tile fraction (critical path), MXU kernel's E by the same.
+        mean_f, max_f = binned_fraction(h, w, e)
+        out.append((f"tos_kernel_{h}x{w}_E{e}_bin_mean_frac", 0.0, mean_f))
+        out.append((f"tos_kernel_{h}x{w}_E{e}_bin_max_frac", 0.0, max_f))
+        out.append((f"tos_kernel_{h}x{w}_E{e}_binned_stream_meps", 0.0,
+                    e / (stream * max_f) / 1e6))
+    return out

@@ -1,0 +1,59 @@
+"""Render the dry-run JSONs into the EXPERIMENTS.md roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro import configs
+
+
+def load(out_dir="experiments/dryrun"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        recs.append(json.load(open(p)))
+    return recs
+
+
+def markdown_table(out_dir="experiments/dryrun", mesh="single") -> str:
+    recs = [r for r in load(out_dir) if r.get("mesh") == mesh and r.get("ok")
+            and not r.get("tag")]
+    by_key = {(r["arch"], r["shape"]): r for r in recs}
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | dominant | "
+        "MODEL/HLO FLOPs | note |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for cell in configs.cells(include_skipped=True):
+        key = (configs.canon(cell["arch"]), cell["shape"])
+        if cell["skip"]:
+            lines.append(
+                f"| {cell['arch']} | {cell['shape']} | — | — | — | — | — | "
+                f"SKIP: {cell['skip']} |")
+            continue
+        r = by_key.get(key)
+        if r is None:
+            lines.append(f"| {cell['arch']} | {cell['shape']} | ? | ? | ? | ? | ? | missing |")
+            continue
+        rf = r["roofline"]
+        lines.append(
+            f"| {cell['arch']} | {cell['shape']} | {rf['compute_s']:.3g} | "
+            f"{rf['memory_s']:.3g} | {rf['collective_s']:.3g} | "
+            f"{rf['dominant']} | {rf['useful_ratio']:.3f} | {rf.get('note','')} |"
+        )
+    return "\n".join(lines)
+
+
+def rows():
+    recs = [r for r in load() if r.get("ok") and not r.get("tag")]
+    out = []
+    for r in recs:
+        rf = r.get("roofline")
+        if rf and r["mesh"] == "single":
+            dom = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+            frac = rf["compute_s"] / dom if dom else 0.0
+            out.append((f"roofline_{r['arch']}_{r['shape']}_compute_frac",
+                        0.0, frac))
+    out.append(("dryrun_cells_ok", 0.0,
+                float(sum(1 for r in load() if r.get("ok")))))
+    return out

@@ -1,0 +1,50 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``us_per_call`` is host wall time
+where a software path is actually timed; hardware-model rows (SPICE-
+calibrated) carry 0 there and put the paper-comparable quantity in
+``derived``.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_auc,
+        bench_dvfs,
+        bench_hwmodel,
+        bench_throughput,
+        bench_tos_kernels,
+        roofline_table,
+    )
+
+    modules = [
+        ("hwmodel(fig9,fig10)", bench_hwmodel),
+        ("throughput(fig1b,fig10d)", bench_throughput),
+        ("dvfs(tableI,fig8)", bench_dvfs),
+        ("auc(fig11)", bench_auc),
+        ("tos_kernels(perf)", bench_tos_kernels),
+        ("roofline(dryrun)", roofline_table),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, mod in modules:
+        t0 = time.perf_counter()
+        try:
+            for name, us, derived in mod.rows():
+                print(f"{name},{us:.3f},{derived:.6g}")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{label}_ERROR,0,0  # {type(e).__name__}: {e}",
+                  file=sys.stderr)
+        dt = time.perf_counter() - t0
+        print(f"# {label} done in {dt:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

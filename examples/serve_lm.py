@@ -1,0 +1,26 @@
+"""Serve a small LM with batched greedy decoding (KV cache / SSM state).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch zamba2-1.2b
+
+Decodes a token batch with the family-appropriate cache: GQA KV cache for
+dense archs, compressed-latent cache for MLA, O(1) recurrent state for
+mamba2, ring-buffer sliding-window KV + SSM state for zamba2.
+"""
+import argparse
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-370m")
+    ap.add_argument("--steps", type=int, default=24)
+    args = ap.parse_args()
+    serve_mod.main([
+        "--arch", args.arch, "--smoke", "--batch", "4",
+        "--steps", str(args.steps), "--cache-len", "64",
+    ])
+
+
+if __name__ == "__main__":
+    main()

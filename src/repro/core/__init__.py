@@ -1,0 +1,24 @@
+"""Paper core: NMC-TOS corner detection for event cameras, in JAX.
+
+Submodules:
+  tos       — Threshold-Ordinal Surface updates (sequential oracle + exact batched)
+  harris    — frame-by-frame Harris response / corner LUT
+  stcf      — spatio-temporal correlation denoising
+  dvfs      — event-rate-tracking voltage/frequency controller simulation
+  ber       — low-voltage bit-error injection (5-bit storage model)
+  hwmodel   — calibrated latency/energy model of the 65nm macro
+  baselines — eHarris / evFAST / evARC
+  pr_eval   — precision-recall AUC
+  pipeline  — the full Fig.-2 system
+"""
+from repro.core import (  # noqa: F401
+    baselines,
+    ber,
+    dvfs,
+    harris,
+    hwmodel,
+    pipeline,
+    pr_eval,
+    stcf,
+    tos,
+)

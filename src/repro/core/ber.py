@@ -1,0 +1,63 @@
+"""Bit-error injection modelling the NMC macro's low-voltage non-ideality.
+
+Paper §V-C: Monte-Carlo SPICE gives BER = 0 above 0.62 V, 0.2% at 0.61 V and
+2.5% at 0.6 V.  Two structural properties bound the damage:
+
+  1. write-back is disabled when the stored value is 0, so errors only strike
+     pixels holding *valid* values;
+  2. only the low 5 bits are physical (the top 3 are elided), so corrupted
+     values stay in [224, 255].
+
+Storage code: c in [0, 31]; c == 0 encodes TOS value 0, c >= 1 encodes
+224 + c (i.e. 225..255 — exactly the {0} U [TH, 255] invariant with TH=225).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["encode5", "decode5", "inject_write_errors", "corrupt_surface"]
+
+_BASE = 224  # value encoded by code 1 is _BASE + 1 = 225 = default TH
+
+
+@jax.jit
+def encode5(tos: jax.Array) -> jax.Array:
+    """uint8 TOS -> 5-bit storage code (values below 225 collapse to 0)."""
+    v = tos.astype(jnp.int32)
+    code = jnp.where(v > _BASE, v - _BASE, 0)
+    return code.astype(jnp.uint8)
+
+
+@jax.jit
+def decode5(code: jax.Array) -> jax.Array:
+    c = code.astype(jnp.int32)
+    return jnp.where(c > 0, c + _BASE, 0).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("ber",))
+def inject_write_errors(key: jax.Array, tos: jax.Array, ber: float) -> jax.Array:
+    """Flip each stored bit of each *valid* (nonzero) pixel w.p. ``ber``.
+
+    Matches the macro: value-0 pixels skip write-back, hence cannot corrupt;
+    flips act on the 5 physical bits, so outputs stay in {0} U [225, 255]
+    modulo a corrupted code of 0 (which decodes to value 0 — also faithful:
+    an all-bits-low write is a legal cell state).
+    """
+    if ber <= 0.0:
+        return tos
+    code = encode5(tos).astype(jnp.int32)
+    flips = jax.random.bernoulli(key, ber, shape=(*tos.shape, 5))
+    bits = jnp.sum(flips.astype(jnp.int32) * (2 ** jnp.arange(5)), axis=-1)
+    corrupted = jnp.bitwise_xor(code, bits)
+    out = jnp.where(code > 0, corrupted, code)   # zero pixels: no write-back
+    return decode5(out.astype(jnp.uint8))
+
+
+def corrupt_surface(key: jax.Array, tos: jax.Array, vdd: float) -> jax.Array:
+    """Convenience: inject at the BER implied by the operating voltage."""
+    from repro.core import hwmodel
+
+    return inject_write_errors(key, tos, hwmodel.ber_at(vdd))

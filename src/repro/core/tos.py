@@ -1,0 +1,254 @@
+"""Threshold-Ordinal Surface (TOS) — the paper's core data structure.
+
+The TOS (luvHarris, Glover et al. 2021) encodes event *novelty* as an 8-bit
+unsigned surface.  Per event ``v`` at ``(x, y)`` (Algorithm 1 of the paper):
+
+    for every pixel p in the P x P patch centred on (x, y):
+        TOS[p] -= 1
+        if TOS[p] < TH:  TOS[p] = 0
+    TOS[x, y] = 255
+
+Invariant: every pixel value lies in ``{0} U [TH, 255]``.  With the paper's
+TH = 225 the live range is 32 values -> 5-bit storage (the NMC macro elides
+the constant top 3 bits).
+
+This module provides:
+
+  * ``tos_update_sequential``    — jit-able ``lax.scan`` oracle, event by event.
+  * ``tos_update_batched``       — closed-form, order-exact chunk update
+                                   (the TPU-native reformulation; DESIGN.md §4).
+  * ``tos_update_batched_onehot``— same maths, expressed as two one-hot
+                                   matmuls so the scatter-add runs on the MXU.
+  * ``TosState`` helpers for padding / polarity handling.
+
+All functions are pure; surfaces are ``uint8`` jax arrays of shape (H, W).
+Events are int32 arrays ``xy`` of shape (E, 2) in (x=col, y=row) order with a
+``valid`` bool mask (padding slots are ignored but MUST be in-bounds dummies).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "TOS_MAX",
+    "DEFAULT_TH",
+    "DEFAULT_PATCH",
+    "tos_new",
+    "tos_update_sequential",
+    "tos_update_batched",
+    "tos_update_batched_onehot",
+    "tos_invariant_ok",
+]
+
+TOS_MAX = 255
+DEFAULT_TH = 225          # paper: "the threshold typically does not go below ~225"
+DEFAULT_PATCH = 7         # paper evaluates 7x7 patches
+
+
+def tos_new(height: int, width: int) -> jax.Array:
+    """Fresh all-zero surface."""
+    return jnp.zeros((height, width), dtype=jnp.uint8)
+
+
+def _clamp_threshold(vals: jax.Array, th: int) -> jax.Array:
+    """Apply the TOS threshold rule on int32 working values."""
+    return jnp.where(vals >= th, vals, 0)
+
+
+# ---------------------------------------------------------------------------
+# Sequential oracle (Algorithm 1, event by event) — the ground truth.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("patch", "th"))
+def tos_update_sequential(
+    tos: jax.Array,
+    xy: jax.Array,
+    valid: jax.Array,
+    *,
+    patch: int = DEFAULT_PATCH,
+    th: int = DEFAULT_TH,
+) -> jax.Array:
+    """Event-by-event TOS update via ``lax.scan`` — bit-exact Algorithm 1.
+
+    This is the *paper-faithful baseline*: a serial read-modify-write chain,
+    exactly what the NMC macro pipelines in hardware.  O(E * H * W) work as
+    written (each step touches the whole surface through a mask); used as the
+    correctness oracle, not the fast path.
+    """
+    h, w = tos.shape
+    r = (patch - 1) // 2
+    rows = jnp.arange(h, dtype=jnp.int32)[:, None]
+    cols = jnp.arange(w, dtype=jnp.int32)[None, :]
+
+    def step(surface, ev):
+        x, y, ok = ev[0], ev[1], ev[2]
+        inside = (jnp.abs(rows - y) <= r) & (jnp.abs(cols - x) <= r)
+        vals = surface.astype(jnp.int32)
+        dec = _clamp_threshold(vals - 1, th)
+        vals = jnp.where(inside, dec, vals)
+        centre = (rows == y) & (cols == x)
+        vals = jnp.where(centre, TOS_MAX, vals)
+        vals = jnp.where(ok.astype(bool), vals, surface.astype(jnp.int32))
+        return vals.astype(jnp.uint8), None
+
+    ev = jnp.concatenate([xy.astype(jnp.int32), valid.astype(jnp.int32)[:, None]], axis=1)
+    out, _ = jax.lax.scan(step, tos, ev)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Order-exact batched update (DESIGN.md §4).
+# ---------------------------------------------------------------------------
+
+
+def _suffix_cover_counts(xy: jax.Array, valid: jax.Array, r: int) -> jax.Array:
+    """k_after[i] = #{ j > i : patch(e_j) contains centre(e_i) } (valid only)."""
+    x = xy[:, 0].astype(jnp.int32)
+    y = xy[:, 1].astype(jnp.int32)
+    dx = jnp.abs(x[None, :] - x[:, None])          # (i, j)
+    dy = jnp.abs(y[None, :] - y[:, None])
+    cover = (dx <= r) & (dy <= r)
+    e = xy.shape[0]
+    later = jnp.arange(e)[None, :] > jnp.arange(e)[:, None]
+    mask = cover & later & valid[None, :] & valid[:, None]
+    return jnp.sum(mask, axis=1).astype(jnp.int32)
+
+
+def _scatter_patch_counts(
+    shape: tuple[int, int], xy: jax.Array, valid: jax.Array, r: int
+) -> jax.Array:
+    """k_total(p) = #{ j : patch(e_j) contains p } via padded scatter-add."""
+    h, w = shape
+    pad = r
+    acc = jnp.zeros((h + 2 * pad, w + 2 * pad), dtype=jnp.int32)
+    offs = jnp.arange(-r, r + 1, dtype=jnp.int32)
+    # (E, P, P) absolute padded coordinates — always in-bounds by construction.
+    e, p = xy.shape[0], 2 * r + 1
+    py = jnp.broadcast_to(
+        xy[:, 1][:, None, None] + offs[None, :, None] + pad, (e, p, p)
+    )
+    px = jnp.broadcast_to(
+        xy[:, 0][:, None, None] + offs[None, None, :] + pad, (e, p, p)
+    )
+    upd = jnp.broadcast_to(valid.astype(jnp.int32)[:, None, None], (e, p, p))
+    acc = acc.at[py.reshape(-1), px.reshape(-1)].add(upd.reshape(-1))
+    return acc[pad : pad + h, pad : pad + w]
+
+
+def _scatter_last_center_value(
+    shape: tuple[int, int], xy: jax.Array, valid: jax.Array, values: jax.Array
+) -> jax.Array:
+    """Last-writer-wins scatter of per-event centre values.
+
+    Packs (event index, value) into one int32 key so a scatter-max recovers
+    the value written by the *latest* event at each pixel: key = i*512 + v.
+    Returns int32 surface with -1 where no valid event centred.
+    """
+    h, w = shape
+    e = xy.shape[0]
+    idx = jnp.arange(e, dtype=jnp.int32)
+    key = jnp.where(valid, idx * 512 + values, jnp.int32(-1))
+    buf = jnp.full((h, w), -1, dtype=jnp.int32)
+    buf = buf.at[xy[:, 1], xy[:, 0]].max(key)
+    return jnp.where(buf >= 0, buf % 512, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("patch", "th"))
+def tos_update_batched(
+    tos: jax.Array,
+    xy: jax.Array,
+    valid: jax.Array,
+    *,
+    patch: int = DEFAULT_PATCH,
+    th: int = DEFAULT_TH,
+) -> jax.Array:
+    """Order-exact batched TOS update for one chunk of events.
+
+    Equivalent to ``tos_update_sequential`` (property-tested) but fully
+    data-parallel: the serial RMW chain the paper pipelines in SRAM is
+    *eliminated* by the closed form
+
+        start(p)  = 255 if p was some event's centre else TOS_before(p)
+        k(p)      = #later-covering events (suffix from the last centre write)
+        TOS_after = start - k  if >= TH else 0
+    """
+    r = (patch - 1) // 2
+    shape = tos.shape
+
+    k_total = _scatter_patch_counts(shape, xy, valid, r)
+    new_bg = _clamp_threshold(tos.astype(jnp.int32) - k_total, th)
+
+    k_after = _suffix_cover_counts(xy, valid, r)
+    centre_vals = _clamp_threshold(TOS_MAX - k_after, th)
+    centre_surf = _scatter_last_center_value(shape, xy, valid, centre_vals)
+
+    out = jnp.where(centre_surf >= 0, centre_surf, new_bg)
+    return out.astype(jnp.uint8)
+
+
+def _onehot_band(coord: jax.Array, n: int, r: int, valid: jax.Array) -> jax.Array:
+    """(E, n) matrix: row j is 1 on [coord_j - r, coord_j + r] (clipped)."""
+    grid = jnp.arange(n, dtype=jnp.int32)[None, :]
+    band = (jnp.abs(grid - coord[:, None]) <= r) & valid[:, None]
+    return band
+
+
+@functools.partial(jax.jit, static_argnames=("patch", "th"))
+def tos_update_batched_onehot(
+    tos: jax.Array,
+    xy: jax.Array,
+    valid: jax.Array,
+    *,
+    patch: int = DEFAULT_PATCH,
+    th: int = DEFAULT_TH,
+) -> jax.Array:
+    """Same closed form, with k_total as a one-hot **matmul** (MXU path).
+
+    Patch membership is separable: inside(p, e) = row_band(e) x col_band(e),
+    so  k_total = RowBand^T @ ColBand  — an (H, E) x (E, W) matmul that maps
+    straight onto the systolic array.  This is the form the Pallas kernel and
+    the TPU perf work use; DESIGN.md §5 item 1.
+    """
+    r = (patch - 1) // 2
+    h, w = tos.shape
+
+    row_band = _onehot_band(xy[:, 1], h, r, valid)      # (E, H)
+    col_band = _onehot_band(xy[:, 0], w, r, valid)      # (E, W)
+    k_total = jnp.einsum(
+        "eh,ew->hw",
+        row_band.astype(jnp.float32),
+        col_band.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(jnp.int32)
+    new_bg = _clamp_threshold(tos.astype(jnp.int32) - k_total, th)
+
+    k_after = _suffix_cover_counts(xy, valid, r)
+    centre_vals = _clamp_threshold(TOS_MAX - k_after, th)
+    centre_surf = _scatter_last_center_value((h, w), xy, valid, centre_vals)
+
+    out = jnp.where(centre_surf >= 0, centre_surf, new_bg)
+    return out.astype(jnp.uint8)
+
+
+def tos_invariant_ok(tos: jax.Array, th: int = DEFAULT_TH) -> jax.Array:
+    """Check the TOS invariant: values in {0} U [TH, 255]."""
+    v = tos.astype(jnp.int32)
+    return jnp.all((v == 0) | ((v >= th) & (v <= TOS_MAX)))
+
+
+class TosStream(NamedTuple):
+    """Carry state when folding a long event stream chunk-by-chunk."""
+
+    surface: jax.Array
+
+    @staticmethod
+    def init(height: int, width: int) -> "TosStream":
+        return TosStream(tos_new(height, width))
+
+    def update(self, xy, valid, *, patch=DEFAULT_PATCH, th=DEFAULT_TH) -> "TosStream":
+        return TosStream(tos_update_batched(self.surface, xy, valid, patch=patch, th=th))

@@ -1,0 +1,2 @@
+"""Event-camera data substrate: synthetic streams, AER codec, chunked streaming."""
+from repro.events import aer, datasets, stream, synthetic  # noqa: F401

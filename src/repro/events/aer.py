@@ -1,0 +1,42 @@
+"""Address-Event-Representation codec (paper §II-A).
+
+AER word layout (little-endian uint64), DAVIS-style:
+
+    [63:48] reserved | [47] polarity | [46:32] y | [31:17] x | [16:0] unused
+    timestamp carried separately as uint32/int64 microseconds (as in AEDAT).
+
+We pack (x, y, p) into one uint32 word + a timestamp array — the layout used
+by the streaming layer and by the hardware cost model (one AER transaction ==
+one TOS patch update).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["pack", "unpack", "MAX_XY"]
+
+MAX_XY = (1 << 14) - 1  # 14-bit coordinates cover up to 16383 (IMX636 is 1280x720)
+
+_X_SHIFT = 0
+_Y_SHIFT = 14
+_P_SHIFT = 28
+
+
+def pack(xy: np.ndarray, pol: np.ndarray) -> np.ndarray:
+    """(E,2) int coords + (E,) polarity in {-1,+1} -> (E,) uint32 AER words."""
+    x = xy[:, 0].astype(np.uint32)
+    y = xy[:, 1].astype(np.uint32)
+    if (x > MAX_XY).any() or (y > MAX_XY).any():
+        raise ValueError("coordinate exceeds 14-bit AER field")
+    p = (pol > 0).astype(np.uint32)
+    return (x << _X_SHIFT) | (y << _Y_SHIFT) | (p << _P_SHIFT)
+
+
+def unpack(words: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """uint32 AER words -> ((E,2) int32 xy, (E,) int8 polarity)."""
+    words = words.astype(np.uint32)
+    x = (words >> _X_SHIFT) & MAX_XY
+    y = (words >> _Y_SHIFT) & MAX_XY
+    p = ((words >> _P_SHIFT) & 1).astype(np.int8)
+    pol = np.where(p == 1, np.int8(1), np.int8(-1))
+    return np.stack([x, y], 1).astype(np.int32), pol

@@ -1,0 +1,69 @@
+"""Chunked, double-buffered host->device event streaming.
+
+The serving/training analogue of a data pipeline for event streams: fixed-size
+chunks (padding the tail), background prefetch of the next chunk while the
+current one is being consumed, and deterministic resume (chunk index is the
+only cursor — checkpoint-friendly).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator
+
+import jax
+import numpy as np
+
+from repro.events.synthetic import EventStream
+
+__all__ = ["chunk_iterator", "PrefetchingLoader"]
+
+
+def chunk_iterator(
+    stream: EventStream, chunk: int, *, start_chunk: int = 0
+) -> Iterator[tuple[np.ndarray, np.ndarray, np.ndarray]]:
+    """Yield (xy, ts, valid) fixed-size chunks; tail padded with (0,0) dummies."""
+    e = len(stream)
+    n_chunks = (e + chunk - 1) // chunk
+    for c in range(start_chunk, n_chunks):
+        lo, hi = c * chunk, min((c + 1) * chunk, e)
+        n = hi - lo
+        xy = np.zeros((chunk, 2), np.int32)
+        ts = np.zeros((chunk,), np.int64)
+        xy[:n] = stream.xy[lo:hi]
+        ts[:n] = stream.ts[lo:hi]
+        if n:
+            ts[n:] = stream.ts[hi - 1]
+        valid = np.arange(chunk) < n
+        yield xy, ts, valid
+
+
+class PrefetchingLoader:
+    """Background-thread prefetch of device-put chunks (double buffering)."""
+
+    def __init__(self, stream: EventStream, chunk: int, *, depth: int = 2,
+                 start_chunk: int = 0):
+        self._it = chunk_iterator(stream, chunk, start_chunk=start_chunk)
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._done = object()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self):
+        try:
+            for xy, ts, valid in self._it:
+                self._q.put(
+                    (jax.device_put(xy), jax.device_put(ts.astype(np.int32)),
+                     jax.device_put(valid))
+                )
+        finally:
+            self._q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if item is self._done:
+            raise StopIteration
+        return item

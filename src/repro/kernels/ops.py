@@ -1,0 +1,102 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+``tos_update``      — chunked TOS update.  mode='nmc' streams events through
+                      the VMEM-resident tile (paper-faithful); mode='batched'
+                      uses the fused MXU formulation (beyond-paper).
+``harris_response`` — Pallas Harris when the surface fits VMEM, jnp fallback
+                      otherwise.
+
+Both auto-pad surfaces to tile multiples and crop back, so callers keep
+native sensor shapes (e.g. DAVIS240's 180 x 240).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tos import (
+    DEFAULT_PATCH,
+    DEFAULT_TH,
+    TOS_MAX,
+    _clamp_threshold,
+    _scatter_last_center_value,
+    _suffix_cover_counts,
+)
+from repro.kernels import harris_conv, tos_update
+
+__all__ = ["tos_update_op", "harris_response_op"]
+
+
+def _pad_to_tiles(tos: jax.Array) -> tuple[jax.Array, tuple[int, int]]:
+    h, w = tos.shape
+    hp = -h % tos_update.TILE_H
+    wp = -w % tos_update.TILE_W
+    return jnp.pad(tos, ((0, hp), (0, wp))), (h, w)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("patch", "th", "mode", "interpret")
+)
+def tos_update_op(
+    tos: jax.Array,
+    xy: jax.Array,
+    valid: jax.Array,
+    *,
+    patch: int = DEFAULT_PATCH,
+    th: int = DEFAULT_TH,
+    mode: str = "batched",
+    interpret: bool = True,
+) -> jax.Array:
+    """Chunked TOS update through the Pallas kernels (order-exact)."""
+    padded, (h, w) = _pad_to_tiles(tos)
+    if mode == "nmc":
+        out = tos_update.nmc_stream_call(
+            padded, xy, valid, patch=patch, th=th, interpret=interpret
+        )
+    elif mode == "nmc_binned":
+        out = tos_update.nmc_stream_binned_call(
+            padded, xy, valid, patch=patch, th=th, interpret=interpret
+        )
+    elif mode in ("batched", "batched_binned"):
+        r = (patch - 1) // 2
+        k_after = _suffix_cover_counts(xy, valid, r)
+        centre_vals = _clamp_threshold(TOS_MAX - k_after, th)
+        centre_surf = _scatter_last_center_value(
+            padded.shape, xy, valid, centre_vals
+        )
+        call = (tos_update.batched_fused_binned_call
+                if mode == "batched_binned" else tos_update.batched_fused_call)
+        out = call(
+            padded, xy, valid, centre_surf, patch=patch, th=th,
+            interpret=interpret,
+        )
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    return out[:h, :w]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sobel_size", "window_size", "k", "interpret")
+)
+def harris_response_op(
+    tos: jax.Array,
+    *,
+    sobel_size: int = 5,
+    window_size: int = 5,
+    k: float = 0.04,
+    interpret: bool = True,
+) -> jax.Array:
+    h, w = tos.shape
+    budget = 16 * 2**20  # one v5e core's VMEM, conservative
+    if harris_conv.vmem_bytes(h, w, sobel_size, window_size) > budget:
+        from repro.core.harris import harris_response
+
+        return harris_response(
+            tos, sobel_size=sobel_size, window_size=window_size, k=k
+        )
+    return harris_conv.harris_call(
+        tos, sobel_size=sobel_size, window_size=window_size, k=k,
+        interpret=interpret,
+    )

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the single source of correctness truth: each kernel's tests sweep
+shapes/dtypes and ``assert_allclose`` against these functions.  They alias the
+``repro.core`` implementations where those already exist (the core modules
+*are* pure jnp), re-exported here under kernel-facing names.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.harris import harris_response as harris_ref  # noqa: F401
+from repro.core.tos import (  # noqa: F401
+    tos_update_batched as tos_batched_ref,
+    tos_update_sequential as tos_seq_ref,
+)
+
+__all__ = ["tos_seq_ref", "tos_batched_ref", "harris_ref", "counts_ref"]
+
+
+def counts_ref(shape, xy, valid, r):
+    """Patch-coverage counts k_total(p) — oracle for the MXU counts kernel."""
+    h, w = shape
+    rows = jnp.arange(h, dtype=jnp.int32)[:, None]
+    cols = jnp.arange(w, dtype=jnp.int32)[None, :]
+    y = xy[:, 1].astype(jnp.int32)
+    x = xy[:, 0].astype(jnp.int32)
+    inside = (
+        (jnp.abs(rows[None] - y[:, None, None]) <= r)
+        & (jnp.abs(cols[None] - x[:, None, None]) <= r)
+        & valid[:, None, None]
+    )
+    return jnp.sum(inside.astype(jnp.int32), axis=0)

@@ -1,0 +1,360 @@
+"""Pallas TPU kernels for the TOS update — the paper's NMC macro, re-targeted.
+
+Two kernels, mirroring DESIGN.md §2:
+
+``nmc_stream_kernel``
+    The *paper-faithful* near-memory form.  Each grid cell owns one TOS tile
+    resident in VMEM (the "SRAM array"); the event chunk streams through a
+    ``fori_loop`` and every event applies a whole-patch vectorised
+    decrement/threshold/centre-set to the tile (the VPU plays the role of the
+    MO/CMP/WR peripheral rows — one *vector op* instead of one *SRAM row op*,
+    so the paper's O(P^2)->O(P) row parallelism becomes O(1) patch
+    parallelism).  Sequential-exact by construction.
+
+``batched_counts_kernel``
+    The beyond-paper MXU form.  Patch membership is separable, so the chunk's
+    total per-pixel decrement counts are one matmul:
+
+        k_total = RowBand^T (E x TH) @ ColBand (E x TW)
+
+    The wrapper (ops.py) resolves centre writes with the closed form of
+    DESIGN.md §4 and the kernel fuses count-matmul + threshold + centre
+    overlay in one VMEM pass.
+
+Event coordinates ride in SMEM (scalar memory) — they are control data, like
+the AER address bus feeding the macro's row/col selectors.
+
+Tiling: TOS tiles default to (128, 128) uint8->int32 working set; both MXU
+matmul dims are multiples of 8/128 when E is a multiple of 128 (callers pad).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.tos import TOS_MAX
+
+__all__ = ["nmc_stream_call", "batched_fused_call", "bin_events_to_tiles",
+           "nmc_stream_binned_call", "batched_fused_binned_call"]
+
+TILE_H = 128
+TILE_W = 128
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1 — paper-faithful: VMEM-resident tile, events streamed through.
+# ---------------------------------------------------------------------------
+
+
+def _nmc_stream_kernel(ev_ref, tos_ref, out_ref, *, n_events, patch, th):
+    r = (patch - 1) // 2
+    ti = pl.program_id(0)
+    tj = pl.program_id(1)
+    th_i = ti * TILE_H
+    tw_j = tj * TILE_W
+
+    tile_h, tile_w = out_ref.shape
+    rows = th_i + jax.lax.broadcasted_iota(jnp.int32, (tile_h, tile_w), 0)
+    cols = tw_j + jax.lax.broadcasted_iota(jnp.int32, (tile_h, tile_w), 1)
+
+    surface = tos_ref[...].astype(jnp.int32)
+
+    def body(i, surf):
+        x = ev_ref[i, 0]
+        y = ev_ref[i, 1]
+        ok = ev_ref[i, 2]
+        inside = (jnp.abs(rows - y) <= r) & (jnp.abs(cols - x) <= r) & (ok > 0)
+        dec = surf - 1
+        dec = jnp.where(dec >= th, dec, 0)
+        surf = jnp.where(inside, dec, surf)
+        centre = (rows == y) & (cols == x) & (ok > 0)
+        return jnp.where(centre, TOS_MAX, surf)
+
+    surface = jax.lax.fori_loop(0, n_events, body, surface)
+    out_ref[...] = surface.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("patch", "th", "interpret"))
+def nmc_stream_call(
+    tos: jax.Array,
+    xy: jax.Array,
+    valid: jax.Array,
+    *,
+    patch: int = 7,
+    th: int = 225,
+    interpret: bool = True,
+) -> jax.Array:
+    """Paper-faithful NMC TOS update.  tos: (H, W) uint8 (H, W multiples of
+    the tile size — callers pad), xy: (E, 2) int32, valid: (E,) bool."""
+    h, w = tos.shape
+    e = xy.shape[0]
+    ev = jnp.concatenate(
+        [xy.astype(jnp.int32), valid.astype(jnp.int32)[:, None]], axis=1
+    )
+    grid = (pl.cdiv(h, TILE_H), pl.cdiv(w, TILE_W))
+    return pl.pallas_call(
+        functools.partial(_nmc_stream_kernel, n_events=e, patch=patch, th=th),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),       # events: whole array
+            pl.BlockSpec((TILE_H, TILE_W), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_H, TILE_W), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.uint8),
+        interpret=interpret,
+    )(ev, tos)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper iteration 3: tile-local event binning (EXPERIMENTS.md §Perf).
+# Each grid cell replays ONLY the events whose patch intersects its tile —
+# the per-tile event count drops from E to ~E x (tile+halo)^2 / image_area
+# for spatially spread streams (load balance doubles as kernel-level
+# straggler mitigation).  Exact: order within a tile is preserved by the
+# stable sort, and cross-tile ordering is irrelevant (disjoint pixels).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("grid_hw", "patch", "cap"))
+def bin_events_to_tiles(xy, valid, *, grid_hw, patch: int, cap: int):
+    """Bucket events by the tiles their patch touches.
+
+    Returns (ev_binned (n_tiles, cap, 3) int32, overflow (n_tiles,) bool).
+    Events beyond ``cap`` per tile overflow — callers assert/fallback.
+    """
+    r = (patch - 1) // 2
+    ty, tx = grid_hw
+    n_tiles = ty * tx
+    e = xy.shape[0]
+    x = xy[:, 0][None, :]
+    y = xy[:, 1][None, :]
+    ti = jnp.arange(n_tiles, dtype=jnp.int32)
+    ty0 = (ti // tx)[:, None] * TILE_H
+    tx0 = (ti % tx)[:, None] * TILE_W
+    hit = (
+        (x >= tx0 - r) & (x < tx0 + TILE_W + r)
+        & (y >= ty0 - r) & (y < ty0 + TILE_H + r)
+        & valid[None, :]
+    )                                                   # (n_tiles, E)
+    counts = jnp.sum(hit, axis=1)
+    order = jnp.argsort(~hit, axis=1, stable=True)      # hits first, in order
+    take = order[:, :cap]                               # (n_tiles, cap)
+    ok = jnp.take_along_axis(hit, take, axis=1)
+    ev = jnp.concatenate(
+        [xy.astype(jnp.int32), valid.astype(jnp.int32)[:, None]], axis=1
+    )
+    binned = ev[take]                                   # (n_tiles, cap, 3)
+    binned = binned.at[:, :, 2].set(ok.astype(jnp.int32))
+    return binned, counts > cap
+
+
+def _nmc_stream_binned_kernel(ev_ref, tos_ref, out_ref, *, cap, patch, th):
+    r = (patch - 1) // 2
+    ti = pl.program_id(0)
+    tj = pl.program_id(1)
+    th_i = ti * TILE_H
+    tw_j = tj * TILE_W
+    tile_h, tile_w = out_ref.shape
+    rows = th_i + jax.lax.broadcasted_iota(jnp.int32, (tile_h, tile_w), 0)
+    cols = tw_j + jax.lax.broadcasted_iota(jnp.int32, (tile_h, tile_w), 1)
+    surface = tos_ref[...].astype(jnp.int32)
+
+    def body(i, surf):
+        x = ev_ref[0, i, 0]
+        y = ev_ref[0, i, 1]
+        ok = ev_ref[0, i, 2]
+        inside = (jnp.abs(rows - y) <= r) & (jnp.abs(cols - x) <= r) & (ok > 0)
+        dec = surf - 1
+        dec = jnp.where(dec >= th, dec, 0)
+        surf = jnp.where(inside, dec, surf)
+        centre = (rows == y) & (cols == x) & (ok > 0)
+        return jnp.where(centre, TOS_MAX, surf)
+
+    surface = jax.lax.fori_loop(0, cap, body, surface)
+    out_ref[...] = surface.astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("patch", "th", "cap", "interpret"))
+def nmc_stream_binned_call(
+    tos: jax.Array,
+    xy: jax.Array,
+    valid: jax.Array,
+    *,
+    patch: int = 7,
+    th: int = 225,
+    cap: int = 0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tile-binned NMC stream kernel.  cap=0 -> cap=E (lossless)."""
+    h, w = tos.shape
+    e = xy.shape[0]
+    cap = cap or e
+    grid = (pl.cdiv(h, TILE_H), pl.cdiv(w, TILE_W))
+    binned, overflow = bin_events_to_tiles(
+        xy, valid, grid_hw=grid, patch=patch, cap=cap)
+    n_tx = grid[1]
+    return pl.pallas_call(
+        functools.partial(_nmc_stream_binned_kernel, cap=cap, patch=patch,
+                          th=th),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cap, 3), lambda i, j, n_tx=n_tx: (i * n_tx + j, 0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((TILE_H, TILE_W), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_H, TILE_W), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.uint8),
+        interpret=interpret,
+    )(binned.reshape(grid[0] * grid[1], cap, 3), tos)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2 — beyond-paper: fused one-hot-matmul counts + threshold + centres.
+# ---------------------------------------------------------------------------
+
+
+def _batched_fused_kernel_vmem(ev_ref, tos_ref, centre_ref, out_ref, *,
+                               patch, th):
+    """k_total via an MXU matmul of one-hot bands built in-kernel, fused with
+    the threshold rule and the centre overlay.  Events ride in VMEM here
+    (they feed *vector* band construction, unlike the stream kernel where
+    they are scalar control data in SMEM)."""
+    r = (patch - 1) // 2
+    ti = pl.program_id(0)
+    tj = pl.program_id(1)
+    tile_h, tile_w = out_ref.shape
+    row0 = ti * TILE_H
+    col0 = tj * TILE_W
+
+    ev = ev_ref[...]                       # (E, 3) int32 in VMEM
+    x = ev[:, 0:1]                         # (E, 1)
+    y = ev[:, 1:2]
+    ok = ev[:, 2:3] > 0
+
+    rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (1, tile_h), 1)  # (1, TH)
+    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (1, tile_w), 1)
+    row_band = ((jnp.abs(rows - y) <= r) & ok).astype(jnp.float32)     # (E, TH)
+    col_band = ((jnp.abs(cols - x) <= r) & ok).astype(jnp.float32)     # (E, TW)
+
+    k_total = jax.lax.dot_general(
+        row_band, col_band,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(jnp.int32)                                                # (TH, TW)
+
+    bg = tos_ref[...].astype(jnp.int32) - k_total
+    bg = jnp.where(bg >= th, bg, 0)
+
+    centre = centre_ref[...]               # int32, -1 where no centre write
+    out = jnp.where(centre >= 0, centre, bg)
+    out_ref[...] = out.astype(jnp.uint8)
+
+
+def _batched_fused_binned_kernel(ev_ref, tos_ref, centre_ref, out_ref, *,
+                                 patch, th):
+    """Per-tile one-hot matmul over the tile's own event bucket: the E
+    dimension of the counts matmul shrinks from the global chunk to the
+    bucket capacity (§Perf cell C iteration 3, MXU form)."""
+    r = (patch - 1) // 2
+    ti = pl.program_id(0)
+    tj = pl.program_id(1)
+    tile_h, tile_w = out_ref.shape
+    row0 = ti * TILE_H
+    col0 = tj * TILE_W
+
+    ev = ev_ref[0]                          # (cap, 3) int32, this tile's bucket
+    x = ev[:, 0:1]
+    y = ev[:, 1:2]
+    ok = ev[:, 2:3] > 0
+
+    rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (1, tile_h), 1)
+    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (1, tile_w), 1)
+    row_band = ((jnp.abs(rows - y) <= r) & ok).astype(jnp.float32)   # (cap, TH)
+    col_band = ((jnp.abs(cols - x) <= r) & ok).astype(jnp.float32)   # (cap, TW)
+
+    k_total = jax.lax.dot_general(
+        row_band, col_band,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(jnp.int32)
+
+    bg = tos_ref[...].astype(jnp.int32) - k_total
+    bg = jnp.where(bg >= th, bg, 0)
+    centre = centre_ref[...]
+    out_ref[...] = jnp.where(centre >= 0, centre, bg).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("patch", "th", "cap", "interpret"))
+def batched_fused_binned_call(
+    tos: jax.Array,
+    xy: jax.Array,
+    valid: jax.Array,
+    centre_surf: jax.Array,
+    *,
+    patch: int = 7,
+    th: int = 225,
+    cap: int = 0,
+    interpret: bool = True,
+) -> jax.Array:
+    """Tile-binned fused batched update (counts matmul per tile bucket)."""
+    h, w = tos.shape
+    e = xy.shape[0]
+    cap = cap or e
+    grid = (pl.cdiv(h, TILE_H), pl.cdiv(w, TILE_W))
+    binned, _ = bin_events_to_tiles(xy, valid, grid_hw=grid, patch=patch,
+                                    cap=cap)
+    n_tx = grid[1]
+    return pl.pallas_call(
+        functools.partial(_batched_fused_binned_kernel, patch=patch, th=th),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cap, 3),
+                         lambda i, j, n_tx=n_tx: (i * n_tx + j, 0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((TILE_H, TILE_W), lambda i, j: (i, j)),
+            pl.BlockSpec((TILE_H, TILE_W), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_H, TILE_W), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.uint8),
+        interpret=interpret,
+    )(binned.reshape(grid[0] * grid[1], cap, 3), tos, centre_surf)
+
+
+@functools.partial(jax.jit, static_argnames=("patch", "th", "interpret"))
+def batched_fused_call(
+    tos: jax.Array,
+    xy: jax.Array,
+    valid: jax.Array,
+    centre_surf: jax.Array,
+    *,
+    patch: int = 7,
+    th: int = 225,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused batched TOS update (counts matmul + threshold + centre overlay).
+
+    ``centre_surf``: int32 (H, W), the last-writer-wins centre values
+    (-1 where no event centred) — produced by ``ops.tos_update`` via the
+    closed form; passing it in keeps the kernel free of scatter hazards.
+    """
+    h, w = tos.shape
+    ev = jnp.concatenate(
+        [xy.astype(jnp.int32), valid.astype(jnp.int32)[:, None]], axis=1
+    )
+    grid = (pl.cdiv(h, TILE_H), pl.cdiv(w, TILE_W))
+    return pl.pallas_call(
+        functools.partial(_batched_fused_kernel_vmem, patch=patch, th=th),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.VMEM),       # events, whole chunk
+            pl.BlockSpec((TILE_H, TILE_W), lambda i, j: (i, j)),
+            pl.BlockSpec((TILE_H, TILE_W), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_H, TILE_W), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.uint8),
+        interpret=interpret,
+    )(ev, tos, centre_surf)

@@ -1,0 +1,6 @@
+"""Launchers: production meshes, sharding rules, dry-run, roofline, drivers.
+
+NOTE: ``repro.launch.dryrun`` must be run as __main__ in a fresh process —
+it sets XLA_FLAGS (512 host devices) before importing jax.
+"""
+from repro.launch import mesh, roofline, sharding  # noqa: F401

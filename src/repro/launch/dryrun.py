@@ -1,0 +1,235 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and extract memory / cost / collective evidence.
+
+MUST be run as its own process (the XLA_FLAGS line above precedes every
+other import, including jax's first initialisation):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmoe-1b-7b \
+        --shape train_4k --mesh single --out experiments/dryrun
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Outputs one JSON per cell with:
+  * compile wall time, memory_analysis (bytes per device),
+  * cost_analysis (XLA's own flops/bytes — while bodies counted once),
+  * trip-weighted HLO accounting (collective bytes by kind, dot FLOPs,
+    fusion-boundary HBM bytes) from repro.utils.hlo_analysis,
+  * the three roofline terms + dominant bottleneck (single-pod mesh).
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch import roofline as rl
+from repro.launch import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.meshctx import use_mesh_rules
+from repro.models import transformer as T
+from repro.models.common import ModelConfig
+from repro.train.optimizer import AdamWConfig, adamw_init
+from repro.train.train_step import make_serve_step, make_train_step
+from repro.utils.hlo_analysis import analyze_hlo
+
+# deepseek-671b: bf16 optimizer state to fit 16 GB/chip (see EXPERIMENTS.md).
+_OPT_STATE_DTYPE = {"deepseek-v3-671b": jnp.bfloat16}
+
+
+def _abstract_like(tree, dtype=None):
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype or p.dtype), tree
+    )
+
+
+def build_lowerable(arch: str, shape_name: str, mesh, *, fsdp: bool = True,
+                    rule_overrides=None, cfg_overrides=None):
+    """Returns (lower_fn, kind, cfg): lower_fn() -> jax.stages.Lowered."""
+    cfg = configs.get(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    kind, seq, gb = configs.SHAPES[shape_name]
+    rules = sh.make_rules(cfg, mesh, fsdp=fsdp, global_batch=gb,
+                          overrides=rule_overrides)
+    aparams, axes = T.abstract_params(cfg)
+    param_sh = sh.param_shardings(mesh, axes, rules)
+
+    if kind == "train":
+        opt_cfg = AdamWConfig(
+            state_dtype=_OPT_STATE_DTYPE.get(cfg.name, jnp.float32)
+        )
+        aopt = {
+            "m": _abstract_like(aparams, opt_cfg.state_dtype),
+            "v": _abstract_like(aparams, opt_cfg.state_dtype),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        opt_sh = {
+            "m": param_sh, "v": param_sh,
+            "step": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+        }
+        batch = T.input_specs(cfg, kind, seq, gb)
+        batch_sh = sh.batch_shardings(mesh, batch, rules)
+        step = make_train_step(cfg, opt_cfg)
+
+        def lower():
+            with use_mesh_rules(mesh, rules):
+                return jax.jit(
+                    step,
+                    in_shardings=(param_sh, opt_sh, batch_sh),
+                    out_shardings=(param_sh, opt_sh, None),
+                ).lower(aparams, aopt, batch)
+
+        return lower, kind, cfg
+
+    if kind == "prefill":
+        batch = T.input_specs(cfg, kind, seq, gb)
+        batch_sh = sh.batch_shardings(mesh, batch, rules)
+
+        def fwd(params, batch):
+            return T.forward_prefill(params, batch, cfg)
+
+        def lower():
+            with use_mesh_rules(mesh, rules):
+                return jax.jit(
+                    fwd, in_shardings=(param_sh, batch_sh)
+                ).lower(aparams, batch)
+
+        return lower, kind, cfg
+
+    # decode
+    specs = T.input_specs(cfg, "decode", seq, gb)
+    cache_sh = sh.cache_shardings(mesh, specs["cache"], rules, cfg)
+    tok_sh = sh.batch_shardings(mesh, specs["tokens"], rules)
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    serve = make_serve_step(cfg)
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    def lower():
+        with use_mesh_rules(mesh, rules):
+            return jax.jit(
+                serve,
+                in_shardings=(param_sh, tok_sh, cache_sh, rep, rep),
+                out_shardings=(None, None, cache_sh),
+            ).lower(aparams, specs["tokens"], specs["cache"],
+                    specs["pos"], rng)
+
+    return lower, kind, cfg
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             *, fsdp: bool = True, rule_overrides=None, cfg_overrides=None,
+             tag: str = "") -> dict:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    kind, seq, gb = configs.SHAPES[shape_name]
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "chips": mesh.size, "kind": kind, "seq": seq, "batch": gb,
+        "fsdp": fsdp, "tag": tag,
+    }
+    t0 = time.perf_counter()
+    try:
+        lower_fn, kind, cfg = build_lowerable(
+            arch, shape_name, mesh, fsdp=fsdp,
+            rule_overrides=rule_overrides, cfg_overrides=cfg_overrides,
+        )
+        lowered = lower_fn()
+        rec["lower_s"] = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        rec["compile_s"] = time.perf_counter() - t1
+
+        try:
+            ma = compiled.memory_analysis()
+            rec["memory_analysis"] = {
+                k: int(getattr(ma, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, k)
+            }
+        except Exception as e:  # pragma: no cover
+            rec["memory_analysis"] = f"unavailable: {e}"
+
+        try:
+            ca = compiled.cost_analysis()
+            rec["cost_analysis"] = {
+                k: float(v) for k, v in ca.items()
+                if k in ("flops", "bytes accessed", "optimal_seconds")
+            }
+        except Exception as e:  # pragma: no cover
+            rec["cost_analysis"] = f"unavailable: {e}"
+
+        stats = analyze_hlo(compiled.as_text())
+        rec["hlo"] = {
+            "collective_bytes": stats.collective_bytes,
+            "dot_flops": stats.dot_flops,
+            "hbm_bytes": stats.hbm_bytes,
+            "n_collectives": stats.n_collectives,
+            "trip_counts": {k: v for k, v in sorted(
+                stats.trip_counts.items())[:20]},
+            "unresolved_loops": stats.unresolved_loops[:10],
+        }
+        report = rl.roofline_terms(
+            arch, shape_name, mesh_kind, mesh.size, stats, cfg, kind, seq, gb
+        )
+        rec["roofline"] = report.row()
+        rec["ok"] = True
+    except Exception as e:
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = time.perf_counter() - t0
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        path = os.path.join(
+            out_dir, f"{configs.canon(arch)}__{shape_name}__{mesh_kind}{suffix}.json"
+        )
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-fsdp", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = configs.cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [{"arch": args.arch, "shape": args.shape}]
+
+    results = []
+    for cell in cells:
+        for mk in meshes:
+            rec = run_cell(cell["arch"], cell["shape"], mk, args.out,
+                           fsdp=not args.no_fsdp)
+            status = "OK " if rec["ok"] else "FAIL"
+            print(f"[{status}] {cell['arch']:>20s} {cell['shape']:>12s} "
+                  f"{mk:>6s}  lower={rec.get('lower_s', 0):6.1f}s "
+                  f"compile={rec.get('compile_s', 0):6.1f}s "
+                  f"{rec.get('error', '')}", flush=True)
+            results.append(rec)
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} cells passed")
+    return 0 if n_ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

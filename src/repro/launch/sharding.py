@@ -1,0 +1,143 @@
+"""Sharding rules: logical axis names -> mesh axes, per architecture family.
+
+The model code annotates every parameter (ParamSpec.axes) and the key
+activations (``shard_act``) with *logical* names.  A rules table maps those
+names onto mesh axes; strategies are data:
+
+  * ``base_rules``     — TP on 'model', DP(+pod) on batch, FSDP off.
+  * ``fsdp_rules``     — adds FSDP: 'embed' (the axis every weight matrix
+    shares) is sharded over 'data', so param + optimizer-state memory scales
+    1/(data*model).  XLA inserts the all-gather before use (prefetchable).
+  * per-arch adjustments: MoE experts on 'model' (EP), kv_heads replicated
+    when n_kv < model-axis size (MQA), SSM inner dim on 'model'.
+
+``param_shardings(cfg, mesh, axes_tree, rules)`` maps a logical-axes pytree
+to NamedShardings for pjit in_shardings.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.meshctx import logical_to_spec
+from repro.models.common import ModelConfig
+
+__all__ = ["make_rules", "param_shardings", "batch_shardings", "data_axes"]
+
+
+def data_axes(mesh: Mesh) -> tuple:
+    """The mesh axes carrying the batch: ('pod','data') or ('data',)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = True,
+               global_batch: Optional[int] = None,
+               overrides: Optional[dict] = None) -> dict:
+    """Logical-axis -> mesh-axis rules for (cfg, mesh).
+
+    ``global_batch``: when given, the batch axes shrink to the largest prefix
+    of ('pod','data') whose product divides it (batch=1 long-context decode
+    replicates the batch instead of failing to shard).
+    """
+    batch = data_axes(mesh)
+    if global_batch is not None:
+        chosen = []
+        prod = 1
+        for a in batch:
+            if global_batch % (prod * mesh.shape[a]) == 0:
+                chosen.append(a)
+                prod *= mesh.shape[a]
+        batch = tuple(chosen)
+    model_size = mesh.shape.get("model", 1)
+
+    rules: dict = {
+        # --- activations ---------------------------------------------------
+        "batch": batch,
+        "seq": None,
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "expert": "model",       # EP
+        "expert_cap": batch,     # token groups stay data-sharded
+        # --- params ----------------------------------------------------------
+        "embed": "data" if fsdp else None,     # FSDP shard axis
+        "embed2": "model",                     # concat-input projections (TP)
+        "layers": None,
+        "head_dim": None,
+        "q_lora": None,
+        "kv_lora": None,
+        # SSM
+        "inner": "model",
+        "inner_all": "model",
+        "ssm_heads": None,
+    }
+
+    # Experts take the model axis (EP); the expert FF dim then stays local.
+    # If experts don't divide the axis, fall back to TP inside experts.
+    rules["expert_mlp"] = None
+    if cfg.n_experts and cfg.n_experts % model_size != 0:
+        rules["expert"] = None
+        rules["expert_mlp"] = "model"
+    # MQA / small-KV: replicating KV heads beats padding a size-<16 axis.
+    if 0 < cfg.n_kv < model_size:
+        rules["kv_heads"] = None
+    # Heads not divisible by the model axis (e.g. qwen2-0.5b's 14 heads):
+    # GSPMD would pad; replicate instead and keep TP on the MLP only.
+    if cfg.n_heads and cfg.n_heads % model_size != 0:
+        rules["heads"] = None
+    if cfg.vocab % model_size != 0:
+        rules["vocab"] = None
+
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def param_shardings(mesh: Mesh, axes_tree, rules: dict):
+    """Pytree of logical-axes tuples -> pytree of NamedShardings."""
+    def one(axes):
+        spec = logical_to_spec(axes, rules)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(
+        one, axes_tree, is_leaf=lambda x: isinstance(x, tuple)
+    )
+
+
+def batch_shardings(mesh: Mesh, batch_tree, rules: dict):
+    """Input batches: leading dim on the batch axes, rest replicated."""
+    batch = rules.get("batch")
+
+    def one(leaf):
+        nd = len(leaf.shape)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(batch, *([None] * (nd - 1))))
+
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_shardings(mesh: Mesh, cache_tree, rules: dict, cfg: ModelConfig):
+    """Decode caches: (layers/sites, batch, ...) -> batch on axis 1; the
+    kv-head axis (if present and sharded) follows the rules.  ``enc_out``
+    (whisper's encoder output) is the one un-stacked leaf: batch-first."""
+    batch = rules.get("batch")
+
+    def one(path, leaf):
+        names = "/".join(str(getattr(k, "key", k)) for k in path)
+        nd = len(leaf.shape)
+        if "enc_out" in names:
+            return NamedSharding(mesh, P(batch, *([None] * (nd - 1))))
+        if nd >= 4 and cfg.n_kv and leaf.shape[-2] == cfg.n_kv:
+            kv = rules.get("kv_heads")
+            return NamedSharding(
+                mesh, P(None, batch, *([None] * (nd - 4)), kv, None)
+            )
+        if nd >= 2:
+            return NamedSharding(mesh, P(None, batch, *([None] * (nd - 2))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)

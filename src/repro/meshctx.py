@@ -1,0 +1,58 @@
+"""Ambient-mesh activation sharding.
+
+Model code calls ``shard_act(x, 'batch', 'seq', None)`` with *logical* axis
+names; if a mesh + rules are active (set by the launcher / dry-run), this
+becomes ``with_sharding_constraint`` with the mapped ``PartitionSpec``;
+otherwise it is the identity — so the same model code runs on 1 CPU device
+and on a 512-chip mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["use_mesh_rules", "shard_act", "current_mesh", "current_rules", "logical_to_spec"]
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def current_rules() -> dict:
+    return getattr(_state, "rules", {})
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Mesh, rules: dict):
+    """Activate (mesh, logical->mesh-axis rules) for model tracing."""
+    prev = (current_mesh(), current_rules())
+    _state.mesh = mesh
+    _state.rules = dict(rules)
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def logical_to_spec(axes, rules: dict) -> P:
+    """Map logical axis names to a PartitionSpec through the rules table.
+
+    A rule value may be a mesh axis name, a tuple of mesh axes, or None.
+    Unknown logical names map to None (replicated).
+    """
+    return P(*[rules.get(a) if a is not None else None for a in axes])
+
+
+def shard_act(x: jax.Array, *axes) -> jax.Array:
+    """Constrain activation sharding by logical axis names (no-op w/o mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(axes, current_rules())
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,4 @@
+"""Model zoo: one assembly (`transformer`) covering dense GQA, MoE, MLA+MTP,
+SSD (Mamba2), hybrid (Zamba2), enc-dec (Whisper) and VLM-stub families."""
+from repro.models import attention, common, mlp, ssm, transformer  # noqa: F401
+from repro.models.common import ModelConfig  # noqa: F401

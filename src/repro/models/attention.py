@@ -1,0 +1,362 @@
+"""Attention blocks: GQA (with MQA as n_kv=1) and DeepSeek-style MLA.
+
+Conventions:
+  x          : (B, S, D) activations
+  GQA cache  : {'k': (B, L, K, dh), 'v': (B, L, K, dh)} updated at ``pos``
+  MLA cache  : {'ckv': (B, L, r_kv), 'krope': (B, L, d_rope)} — the compressed
+               cache that makes 32k-decode MLA-cheap (paper: DeepSeek-V3)
+  masks      : causal within the current segment; optional sliding window.
+
+All softmax/logit math in f32; outputs cast back to the activation dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.meshctx import shard_act
+from repro.models.common import ModelConfig, ParamSpec, apply_rope, rms_norm
+
+__all__ = [
+    "gqa_spec", "gqa_train", "gqa_decode", "gqa_cache_spec",
+    "mla_spec", "mla_train", "mla_decode", "mla_cache_spec",
+]
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+
+def gqa_spec(cfg: ModelConfig) -> dict:
+    d, h, k, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    spec = {
+        "wq": ParamSpec((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, k, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, k, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = ParamSpec((h, dh), ("heads", "head_dim"), init="zeros")
+        spec["bk"] = ParamSpec((k, dh), ("kv_heads", "head_dim"), init="zeros")
+        spec["bv"] = ParamSpec((k, dh), ("kv_heads", "head_dim"), init="zeros")
+    return spec
+
+
+def _qkv(p, x, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    kk = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        kk = kk + p["bk"]
+        v = v + p["bv"]
+    return q, kk, v
+
+
+def _attend(q, k, v, mask, cfg: ModelConfig):
+    """q: (B,Sq,H,dh); k,v: (B,Sk,K,dh); mask: (B|1, 1, Sq, Sk) additive f32."""
+    b, sq, h, dh = q.shape
+    kheads = k.shape[2]
+    g = h // kheads
+    qf = q.reshape(b, sq, kheads, g, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf) / jnp.sqrt(dh)
+    scores = scores + mask[:, :, None, :, :]
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, vf)
+    return out.reshape(b, sq, h, v.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) causal attention — O(chunk^2) score memory.
+# ---------------------------------------------------------------------------
+
+BLOCKWISE_MIN_SEQ = 2048     # use blockwise self-attention above this length
+DEFAULT_ATTN_CHUNK = 1024
+
+
+def _attend_blockwise_causal(q, k, v, cfg: ModelConfig, chunk: int):
+    """Causal self-attention via online softmax over (q-block, k-block) tiles.
+
+    Never materialises more than (B, K, G, C, C) scores.  Equivalent to
+    ``_attend`` with a causal mask (tested to float tolerance).  Supports an
+    optional sliding window.  Sq == Sk assumed (self-attention, offset 0).
+    """
+    b, s, h, dh = q.shape
+    kheads = k.shape[2]
+    vd = v.shape[-1]
+    g = h // kheads
+    c = min(chunk, s)
+    assert s % c == 0, f"seq {s} %% attn chunk {c} != 0"
+    n = s // c
+
+    qf = q.reshape(b, n, c, kheads, g, dh).astype(jnp.float32)
+    kf = k.reshape(b, n, c, kheads, dh).astype(jnp.float32)
+    vf = v.reshape(b, n, c, kheads, vd).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(dh)
+
+    qpos_in = jnp.arange(c)[:, None]
+    kpos_in = jnp.arange(c)[None, :]
+
+    def q_block(qi_and_q):
+        qi, qb = qi_and_q                                # qb: (B, C, K, G, dh)
+
+        def kv_step(carry, ki_and_kv):
+            m_prev, l_prev, acc = carry
+            ki, kb, vb = ki_and_kv
+            scores = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb) * scale
+            qpos = qi * c + qpos_in
+            kpos = ki * c + kpos_in
+            ok = kpos <= qpos
+            if cfg.sliding_window > 0:
+                ok &= kpos > qpos - cfg.sliding_window
+            scores = jnp.where(ok[None, None, None], scores, -jnp.inf)
+            m_new = jnp.maximum(m_prev, jnp.max(scores, -1))
+            # guard fully-masked rows (m == -inf)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(scores - m_safe[..., None])
+            p = jnp.where(ok[None, None, None], p, 0.0)
+            corr = jnp.exp(jnp.where(jnp.isfinite(m_prev), m_prev - m_safe, -jnp.inf))
+            corr = jnp.where(jnp.isfinite(corr), corr, 0.0)
+            l_new = l_prev * corr + jnp.sum(p, -1)
+            acc = acc * corr[..., None] + jnp.einsum("bkgqs,bskd->bkgqd", p, vb)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kheads, g, c), -jnp.inf)
+        l0 = jnp.zeros((b, kheads, g, c))
+        a0 = jnp.zeros((b, kheads, g, c, vd))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(n), kf.transpose(1, 0, 2, 3, 4), vf.transpose(1, 0, 2, 3, 4)),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4)              # (B, C, K, G, dh)
+
+    outs = jax.lax.map(q_block, (jnp.arange(n), qf.transpose(1, 0, 2, 3, 4, 5)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, h, vd)
+    return out.astype(q.dtype)
+
+
+def _self_attend(q, k, v, cfg: ModelConfig):
+    """Causal self-attention; picks blockwise automatically for long seqs."""
+    s = q.shape[1]
+    chunk = cfg.attn_chunk or DEFAULT_ATTN_CHUNK
+    if s >= BLOCKWISE_MIN_SEQ and s % chunk == 0:
+        return _attend_blockwise_causal(q, k, v, cfg, chunk)
+    mask = _causal_mask(s, s, 0, cfg.sliding_window)
+    return _attend(q, k, v, mask, cfg)
+
+
+def _causal_mask(sq: int, sk: int, offset: int, window: int) -> jax.Array:
+    """Additive mask (1, 1, sq, sk). offset = absolute position of q[0]."""
+    qpos = offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    ok = kpos <= qpos
+    if window > 0:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)[None, None]
+
+
+def gqa_train(p, x, cos, sin, cfg: ModelConfig, *, return_kv: bool = False):
+    q, k, v = _qkv(p, x, cfg)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = shard_act(q, "batch", "seq", "heads", None)
+    k = shard_act(k, "batch", "seq", "kv_heads", None)
+    out = _self_attend(q, k, v, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    out = shard_act(out, "batch", "seq", "act_embed")
+    if return_kv:
+        return out, (k, v)      # RoPE'd K — exactly what the decode cache holds
+    return out
+
+
+def gqa_cache_spec(cfg: ModelConfig, batch: int, length: int):
+    k, dh = cfg.n_kv, cfg.head_dim
+    if cfg.kv_quant:
+        # int8 per-(token, head) symmetric quantisation: values + f32 scales.
+        kv = jax.ShapeDtypeStruct((batch, length, k, dh), jnp.int8)
+        sc = jax.ShapeDtypeStruct((batch, length, k, 1), jnp.float32)
+        return {"k": kv, "k_scale": sc, "v": kv, "v_scale": sc}
+    kv = jax.ShapeDtypeStruct((batch, length, k, dh), cfg.act_dtype)
+    return {"k": kv, "v": kv}
+
+
+def _kv_quant(x):
+    """(B,1,K,dh) -> int8 values + per-(token,head) scale."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(scale, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _kv_dequant(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def gqa_decode(p, x, cache, pos, cfg: ModelConfig, write_pos=None):
+    """One-token decode. x: (B, 1, D); pos: scalar int32 current position.
+
+    Returns (out, new_cache).  Attends over cache[0:pos] + the new token.
+
+    ``write_pos``: physical cache slot (defaults to ``pos``).  Ring-buffer
+    sliding-window caches pass ``pos % window`` here and clamp ``pos`` to
+    ``min(pos, window-1)``: attention is permutation-invariant over keys
+    (RoPE is already baked into cached K at insert time), so 'first N slots
+    valid' is exact regardless of ring rotation.
+    """
+    b = x.shape[0]
+    cos, sin = _rope_at(pos, cfg)
+    q, k, v = _qkv(p, x, cfg)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    wp = pos if write_pos is None else write_pos
+    mask_pos = pos if write_pos is None else jnp.minimum(pos, cache["k"].shape[1] - 1)
+    if cfg.kv_quant:
+        kq, ks = _kv_quant(k)
+        vq, vs = _kv_quant(v)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, wp, 0, 0)),
+            "k_scale": jax.lax.dynamic_update_slice(
+                cache["k_scale"], ks, (0, wp, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, wp, 0, 0)),
+            "v_scale": jax.lax.dynamic_update_slice(
+                cache["v_scale"], vs, (0, wp, 0, 0)),
+        }
+        ck = _kv_dequant(new_cache["k"], new_cache["k_scale"], k.dtype)
+        cv = _kv_dequant(new_cache["v"], new_cache["v_scale"], v.dtype)
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, wp, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, wp, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+    length = ck.shape[1]
+    kpos = jnp.arange(length)[None, :]
+    ok = kpos <= mask_pos
+    if cfg.sliding_window > 0 and write_pos is None:
+        ok &= kpos > pos - cfg.sliding_window
+    mask = jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)[:, None, None, :]
+    out = _attend(q, ck, cv, mask, cfg)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, new_cache
+
+
+def _rope_at(pos, cfg: ModelConfig):
+    from repro.models.common import make_rope
+
+    dim = cfg.qk_rope_dim if cfg.mla else cfg.head_dim
+    return make_rope(jnp.asarray(pos)[None, None], dim, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (DeepSeek-V2/V3)
+# ---------------------------------------------------------------------------
+
+
+def mla_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h = cfg.n_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_a": ParamSpec((d, rq), ("embed", "q_lora")),
+        "q_norm": ParamSpec((rq,), ("q_lora",), init="ones"),
+        "wq_b": ParamSpec((rq, h, dn + dr), ("q_lora", "heads", "head_dim")),
+        "wkv_a": ParamSpec((d, rkv + dr), ("embed", "kv_lora")),
+        "kv_norm": ParamSpec((rkv,), ("kv_lora",), init="ones"),
+        "wk_b": ParamSpec((rkv, h, dn), ("kv_lora", "heads", "head_dim")),
+        "wv_b": ParamSpec((rkv, h, dv), ("kv_lora", "heads", "head_dim")),
+        "wo": ParamSpec((h, dv, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _mla_qkv_latent(p, x, cfg: ModelConfig):
+    """Shared front: q heads (nope+rope) and the compressed kv latent."""
+    rkv, dr = cfg.kv_lora_rank, cfg.qk_rope_dim
+    cq = rms_norm(jnp.einsum("bsd,dr->bsr", x, p["wq_a"]), p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wq_b"])
+    q_nope, q_rope = q[..., : cfg.qk_nope_dim], q[..., cfg.qk_nope_dim :]
+    kv_a = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])
+    ckv = rms_norm(kv_a[..., :rkv], p["kv_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., rkv:]                        # (B, S, dr), shared by heads
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_train(p, x, cos, sin, cfg: ModelConfig, *, return_kv: bool = False):
+    b, s, _ = x.shape
+    h, dn, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim
+    q_nope, q_rope, ckv, k_rope = _mla_qkv_latent(p, x, cfg)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    latent_cache = (ckv, k_rope)
+
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["wk_b"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv, p["wv_b"])
+
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+    kf = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, cfg.qk_rope_dim))],
+        -1,
+    )
+    qf = shard_act(qf, "batch", "seq", "heads", None)
+    kf = shard_act(kf, "batch", "seq", "heads", None)
+
+    # MLA is full MHA over (dn+dr)-dim keys and dv-dim values; reuse the
+    # blockwise path (kheads == n_heads, distinct v dim).
+    out = _self_attend(qf, kf, v, cfg)
+    out = jnp.einsum("bqhv,hvd->bqd", out, p["wo"])
+    out = shard_act(out, "batch", "seq", "act_embed")
+    if return_kv:
+        return out, latent_cache   # compressed (ckv, k_rope) decode cache
+    return out
+
+
+def mla_cache_spec(cfg: ModelConfig, batch: int, length: int):
+    return {
+        "ckv": jax.ShapeDtypeStruct((batch, length, cfg.kv_lora_rank), cfg.act_dtype),
+        "krope": jax.ShapeDtypeStruct((batch, length, cfg.qk_rope_dim), cfg.act_dtype),
+    }
+
+
+def mla_decode(p, x, cache, pos, cfg: ModelConfig):
+    """Absorbed-matrix MLA decode: attention runs entirely in the compressed
+    latent space — per-step KV read is (L, r_kv + d_rope) instead of
+    (L, H*(dn+dr)); this is *the* reason deepseek's 32k decode is
+    memory-light and is reflected in the roofline table."""
+    b = x.shape[0]
+    h, dn, dv, rkv = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    cos, sin = _rope_at(pos, cfg)
+
+    q_nope, q_rope, ckv_new, k_rope_new = _mla_qkv_latent(p, x, cfg)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], cos, sin)[:, :, 0, :]
+
+    ckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, pos, 0)
+    )
+    krope = jax.lax.dynamic_update_slice(
+        cache["krope"], k_rope_new.astype(cache["krope"].dtype), (0, pos, 0)
+    )
+
+    # Absorb W_k^b into the query:  q_lat (B,1,H,rkv)
+    q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope.astype(jnp.float32),
+                       p["wk_b"].astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(dn + cfg.qk_rope_dim)
+    s_lat = jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhk,bsk->bhqs", q_rope.astype(jnp.float32),
+                        krope.astype(jnp.float32))
+    scores = (s_lat + s_rope) * scale
+    length = ckv.shape[1]
+    ok = jnp.arange(length)[None, :] <= pos
+    mask = jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)[:, None, None, :]
+    w = jax.nn.softmax(scores + mask, axis=-1)
+    # Attend in latent space, then expand through W_v^b once per output token.
+    o_lat = jnp.einsum("bhqs,bsr->bqhr", w, ckv.astype(jnp.float32))
+    out = jnp.einsum("bqhr,rhv->bqhv", o_lat, p["wv_b"].astype(jnp.float32))
+    out = jnp.einsum("bqhv,hvd->bqd", out.astype(x.dtype), p["wo"])
+    return out, {"ckv": ckv, "krope": krope}

@@ -1,0 +1,226 @@
+"""Model substrate: configs, param trees with logical sharding axes, norms,
+embeddings, RoPE.
+
+Design choices (MaxText-style, dependency-free):
+
+  * Parameters are plain pytrees of ``jax.Array``; every leaf is created via
+    ``Param`` which carries *logical axis names* (e.g. ('embed', 'mlp')).
+    ``repro.launch.sharding`` maps logical names -> mesh axes through a rules
+    table, so parallelism strategies are data, not code.
+  * Layer stacks are **scanned**: per-layer params are stacked on a leading
+    'layers' axis and the block body is ``jax.lax.scan``-ed (+remat), keeping
+    HLO size independent of depth — essential for 61-layer 671B dry-runs on a
+    CPU host.
+  * dtype policy: params bf16 by default, activations bf16, reductions and
+    softmax in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "ModelConfig",
+    "ParamSpec",
+    "init_dense",
+    "rms_norm",
+    "layer_norm",
+    "make_rope",
+    "apply_rope",
+    "Axes",
+]
+
+Axes = tuple[Optional[str], ...]
+
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config describes every architecture family in the zoo."""
+
+    name: str = "model"
+    family: str = "dense"        # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv: int = 4
+    d_head: int = 0              # 0 -> d_model // n_heads
+    d_ff: int = 1024
+    vocab: int = 32000
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    rope_theta: float = 10000.0
+    max_seq: int = 131072
+
+    # --- MoE ---------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    d_expert: int = 0            # expert FF width (may differ from d_ff)
+    n_shared_experts: int = 0
+    router_aux_weight: float = 0.001
+    moe_a2a: bool = False        # shard_map all-to-all dispatch (§Perf)
+
+    # --- MLA (DeepSeek) ----------------------------------------------------
+    mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    mtp: bool = False            # multi-token-prediction auxiliary head
+
+    # --- SSM (Mamba2 / SSD) --------------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # --- hybrid (Zamba2) -----------------------------------------------------
+    shared_attn_every: int = 0   # shared attention block period (0 = none)
+
+    # --- encoder-decoder (Whisper) -------------------------------------------
+    n_enc_layers: int = 0
+    n_audio_frames: int = 1500
+    max_target_len: int = 448
+
+    # --- vision (Phi-3-vision) -----------------------------------------------
+    n_img_tokens: int = 0        # patch-embedding stub slots per sample
+
+    # --- attention behaviour --------------------------------------------------
+    sliding_window: int = 0      # 0 = full causal; >0 = window (hybrid 500k)
+    attn_chunk: int = 0          # blockwise attention chunk (0 = one shot)
+    kv_quant: bool = False       # int8 KV cache for decode (§Perf lever)
+
+    # --- numerics / training ---------------------------------------------------
+    param_dtype: Any = jnp.bfloat16
+    act_dtype: Any = jnp.bfloat16
+    remat: str = "dots"          # none | dots | full
+    loss_chunk: int = 512        # sequence chunk for the CE loss
+
+    @property
+    def head_dim(self) -> int:
+        if self.n_heads == 0:
+            return self.d_head    # attention-free (SSM) families
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def bytes_per_param(self) -> int:
+        return jnp.dtype(self.param_dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# Param creation with logical axes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: Axes
+    init: str = "normal"         # normal | zeros | ones | small
+    scale: float = 1.0
+
+
+def _init_leaf(key, spec: ParamSpec, dtype) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    fan_in = spec.shape[0] if len(spec.shape) >= 2 else max(spec.shape[0], 1)
+    std = spec.scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_dense(key, tree_spec: dict, dtype) -> tuple[dict, dict]:
+    """Materialise (params, logical_axes) pytrees from a spec tree."""
+    leaves, treedef = jax.tree.flatten(
+        tree_spec, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    params = [
+        _init_leaf(k, s, dtype) for k, s in zip(keys, leaves)
+    ]
+    axes = [s.axes for s in leaves]
+    return jax.tree.unflatten(treedef, params), jax.tree.unflatten(treedef, axes)
+
+
+def abstract_params(tree_spec: dict, dtype) -> tuple[dict, dict]:
+    """ShapeDtypeStruct version of init_dense — no allocation (dry-run)."""
+    leaves, treedef = jax.tree.flatten(
+        tree_spec, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    params = [jax.ShapeDtypeStruct(s.shape, dtype) for s in leaves]
+    axes = [s.axes for s in leaves]
+    return jax.tree.unflatten(treedef, params), jax.tree.unflatten(treedef, axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array, eps: float):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def make_rope(positions: jax.Array, dim: int, theta: float) -> tuple[jax.Array, jax.Array]:
+    """(..., S) int positions -> cos/sin tables (..., S, dim/2), f32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, D); cos/sin: (..., S, D/2) broadcast over heads."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    xf1 = x1.astype(jnp.float32)
+    xf2 = x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> np.ndarray:
+    """Whisper-style fixed positional embeddings."""
+    pos = np.arange(n)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    out = np.zeros((n, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out

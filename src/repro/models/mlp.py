@@ -1,0 +1,275 @@
+"""MLP blocks: SwiGLU dense FFN and token-choice top-k MoE.
+
+MoE uses sort-based grouped dispatch (dropless up to a capacity factor):
+
+  1. router scores -> top-k (expert, weight) per token,
+  2. stable-sort assignments by expert, position-in-expert by offset
+     subtraction (no (T, E, C) one-hot — that intermediate is what kills
+     memory at 256 experts),
+  3. gather tokens into (E, C, D) groups, batched-einsum the expert FFNs
+     (MXU-friendly: one (E,C,D)x(E,D,F) contraction),
+  4. weighted scatter-add back.
+
+Sharding: the expert dimension E carries the 'expert' logical axis (mapped to
+the 'model' mesh axis = expert parallelism); token gathers/scatters across the
+data axis lower to collective traffic the dry-run accounts for.  Aux
+load-balance loss follows Switch; DeepSeek-V3 style sigmoid scoring +
+normalised top-k is selected by ``score_fn='sigmoid'``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.meshctx import shard_act
+from repro.models.common import ModelConfig, ParamSpec
+
+__all__ = ["mlp_spec", "mlp_apply", "moe_spec", "moe_apply"]
+
+
+# ---------------------------------------------------------------------------
+# Dense SwiGLU
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "wg": ParamSpec((d, f), ("embed", "mlp")),
+        "wu": ParamSpec((d, f), ("embed", "mlp")),
+        "wd": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp_apply(p, x):
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    h = shard_act(h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, p["wd"])
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def moe_spec(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_expert or cfg.d_ff, cfg.n_experts
+    spec = {
+        "router": ParamSpec((d, e), ("embed", "expert"), scale=0.1),
+        "wg": ParamSpec((e, d, f), ("expert", "embed", "expert_mlp")),
+        "wu": ParamSpec((e, d, f), ("expert", "embed", "expert_mlp")),
+        "wd": ParamSpec((e, f, d), ("expert", "expert_mlp", "embed")),
+    }
+    if cfg.n_shared_experts:
+        shared_f = cfg.n_shared_experts * f
+        spec["shared"] = mlp_spec(cfg, shared_f)
+    return spec
+
+
+def _route(logits: jax.Array, k: int, score_fn: str):
+    """(T, E) logits -> (topw, topi) with normalised weights + aux loss."""
+    lf = logits.astype(jnp.float32)
+    if score_fn == "sigmoid":                 # DeepSeek-V3
+        scores = jax.nn.sigmoid(lf)
+    else:
+        scores = jax.nn.softmax(lf, axis=-1)
+    topw, topi = jax.lax.top_k(scores, k)
+    topw = topw / jnp.maximum(jnp.sum(topw, -1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance loss: E * sum_e f_e * P_e
+    e = logits.shape[-1]
+    probs = jax.nn.softmax(lf, axis=-1)
+    dispatch = jax.nn.one_hot(topi[:, 0], e, dtype=jnp.float32)
+    f_e = jnp.mean(dispatch, axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f_e * p_e)
+    return topw, topi, aux
+
+
+def moe_apply(p, x, cfg: ModelConfig, *, capacity_factor: float = 1.25,
+              score_fn: str = "softmax", dropless: bool = False):
+    """x: (B, S, D) -> (out, aux_loss).
+
+    ``dropless=True`` sets capacity = t (no token can be dropped) — the
+    serving configuration: prefill and stepwise decode must agree exactly,
+    which capacity competition would break.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    x2 = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", x2, p["router"])
+    topw, topi, aux = _route(logits, k, score_fn)
+
+    capacity = t if dropless else max(int(t * k / e * capacity_factor), k)
+
+    flat_e = topi.reshape(-1)                           # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(t * k, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    keep = pos_in_e < capacity
+    token_of = (order // k).astype(jnp.int32)
+    slot_of = (order % k).astype(jnp.int32)
+
+    idx = jnp.full((e, capacity), t, dtype=jnp.int32)   # sentinel row = t
+    safe_pos = jnp.clip(pos_in_e, 0, capacity - 1)
+    idx = idx.at[sorted_e, safe_pos].set(jnp.where(keep, token_of, t))
+    wgt = jnp.zeros((e, capacity), dtype=jnp.float32)
+    wgt = wgt.at[sorted_e, safe_pos].set(
+        jnp.where(keep, topw.reshape(-1)[order], 0.0)
+    )
+
+    x_pad = jnp.concatenate([x2, jnp.zeros((1, d), x2.dtype)], axis=0)
+    xe = x_pad[idx]                                     # (E, C, D)
+    xe = shard_act(xe, "expert", "expert_cap", None)
+
+    g = jnp.einsum("ecd,edf->ecf", xe, p["wg"])
+    u = jnp.einsum("ecd,edf->ecf", xe, p["wu"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xe.dtype) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wd"])
+    ye = ye * wgt[..., None].astype(ye.dtype)
+    ye = shard_act(ye, "expert", "expert_cap", None)
+
+    out = jnp.zeros((t + 1, d), x2.dtype).at[idx.reshape(-1)].add(
+        ye.reshape(-1, d)
+    )[:t]
+
+    if cfg.n_shared_experts:
+        out = out + p_shared_apply(p["shared"], x2)
+
+    out = out.reshape(b, s, d)
+    return shard_act(out, "batch", "seq", "act_embed"), aux * cfg.router_aux_weight
+
+
+def p_shared_apply(p, x2):
+    g = jnp.einsum("td,df->tf", x2, p["wg"])
+    u = jnp.einsum("td,df->tf", x2, p["wu"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x2.dtype) * u
+    return jnp.einsum("tf,fd->td", h, p["wd"])
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: shard_map + all_to_all expert dispatch (EXPERIMENTS.md §Perf)
+# ---------------------------------------------------------------------------
+#
+# Under plain pjit the sort-based dispatch's gather/scatter over data-sharded
+# token buffers lowers to full-token all-gathers + all-reduces per layer —
+# the dominant collective cost of the MoE cells.  The production-correct
+# schedule is an all-to-all: each shard routes its own token slice, exchanges
+# expert groups along the model axis, runs its local experts, and reverses
+# the exchange.  shard_map makes that schedule explicit and differentiable.
+
+
+def _local_route_groups(x2, router, e, k, capacity, score_fn):
+    """Routing + (E, C) grouping of a LOCAL token slice.  Returns
+    (idx, wgt, aux) where idx indexes x2 rows (sentinel = t_loc)."""
+    t_loc = x2.shape[0]
+    logits = jnp.einsum("td,de->te", x2, router)
+    topw, topi, aux = _route(logits, k, score_fn)
+    flat_e = topi.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(t_loc * k, dtype=jnp.int32) - starts[sorted_e].astype(jnp.int32)
+    keep = pos < capacity
+    token_of = (order // k).astype(jnp.int32)
+    safe = jnp.clip(pos, 0, capacity - 1)
+    idx = jnp.full((e, capacity), t_loc, jnp.int32)
+    idx = idx.at[sorted_e, safe].set(jnp.where(keep, token_of, t_loc))
+    wgt = jnp.zeros((e, capacity), jnp.float32)
+    wgt = wgt.at[sorted_e, safe].set(jnp.where(keep, topw.reshape(-1)[order], 0.0))
+    return idx, wgt, aux
+
+
+def moe_apply_a2a(p, x, cfg: ModelConfig, *, capacity_factor: float = 1.25,
+                  score_fn: str = "softmax"):
+    """MoE with explicit all-to-all expert parallelism.
+
+    Requires an active mesh (repro.meshctx) whose 'model' axis divides
+    n_experts, and a token count divisible by (batch_shards x model).
+    Falls back to ``moe_apply`` otherwise.
+    """
+    from repro.meshctx import current_mesh, current_rules
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = current_mesh()
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    if mesh is None:
+        return moe_apply(p, x, cfg, capacity_factor=capacity_factor,
+                         score_fn=score_fn)
+    rules = current_rules()
+    batch_axes = rules.get("batch") or ()
+    if isinstance(batch_axes, str):
+        batch_axes = (batch_axes,)
+    m = mesh.shape.get("model", 1)
+    dp = 1
+    for a in batch_axes:
+        dp *= mesh.shape[a]
+    if (e % m != 0) or (t % (dp * m) != 0):
+        return moe_apply(p, x, cfg, capacity_factor=capacity_factor,
+                         score_fn=score_fn)
+
+    if s % m != 0:
+        return moe_apply(p, x, cfg, capacity_factor=capacity_factor,
+                         score_fn=score_fn)
+    t_shard = (b // dp) * (s // m)
+    capacity = max(int(t_shard * k / e * capacity_factor), 1)
+
+    # Keep (B, S, D) structure: batch stays on the data axes, the SEQUENCE
+    # axis splits over 'model' (sequence parallelism for the dispatch).  A
+    # flattened (t, d) re-layout across both axes makes GSPMD fall back to
+    # involuntary full rematerialisation at the shard_map boundary inside
+    # the scanned layer body (measured: +400 GB/dev of replicated-activation
+    # all-reduce on olmoe — EXPERIMENTS.md §Perf iteration 2).
+    xs_spec = P(batch_axes if batch_axes else None, "model", None)
+
+    def inner(x_loc, router, wg, wu, wd):
+        bl, sl, _ = x_loc.shape                    # (b/dp, s/m, d)
+        x2_loc = x_loc.reshape(bl * sl, d)
+        idx, wgt, aux = _local_route_groups(
+            x2_loc, router, e, k, capacity, score_fn)
+        x_pad = jnp.concatenate(
+            [x2_loc, jnp.zeros((1, d), x2_loc.dtype)], axis=0)
+        xe = x_pad[idx]                                   # (e, C, d)
+        # exchange: split experts over the model axis -> local experts hold
+        # every shard's token groups.   (e, C, d) -> (e/m, m*C, d)
+        xe = jax.lax.all_to_all(xe, "model", split_axis=0, concat_axis=1,
+                                tiled=True)
+        g = jnp.einsum("ecd,edf->ecf", xe, wg)
+        u = jnp.einsum("ecd,edf->ecf", xe, wu)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(xe.dtype) * u
+        ye = jnp.einsum("ecf,efd->ecd", h, wd)
+        # reverse exchange: (e/m, m*C, d) -> (e, C, d)
+        ye = jax.lax.all_to_all(ye, "model", split_axis=1, concat_axis=0,
+                                tiled=True)
+        ye = ye * wgt[..., None].astype(ye.dtype)
+        y2 = jnp.zeros((bl * sl + 1, d), x2_loc.dtype).at[
+            idx.reshape(-1)
+        ].add(ye.reshape(-1, d))[:bl * sl]
+        axes_all = tuple(batch_axes) + ("model",)
+        aux = jax.lax.pmean(aux, axes_all)
+        return y2.reshape(bl, sl, d), aux
+
+    wg_spec = P("model", None, None)
+    y3, aux = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(xs_spec, P(None, None), wg_spec, wg_spec, wg_spec),
+        out_specs=(xs_spec, P()),
+        check_vma=False,
+    )(x, p["router"].astype(x.dtype), p["wg"], p["wu"], p["wd"])
+
+    if cfg.n_shared_experts:
+        y3 = y3 + p_shared_apply(
+            p["shared"], x.reshape(t, d)).reshape(b, s, d)
+
+    return shard_act(y3, "batch", "seq", "act_embed"), aux * cfg.router_aux_weight

@@ -1,0 +1,186 @@
+"""Mamba2 / SSD (state-space duality) blocks — Dao & Gu 2024.
+
+The SSD chunked algorithm decomposes the linear recurrence
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t (B_t  x_t^T),      y_t = C_t h_t + D x_t
+
+into intra-chunk quadratic attention-like matmuls (MXU work) plus an
+inter-chunk state carry (a short ``lax.scan`` over L/Q chunks) — structurally
+the same serial->parallel decomposition as the paper's batched TOS update
+(DESIGN.md §6 note).
+
+Shapes (single layer):
+    x       : (B, L, D_model)
+    d_inner : expand * d_model;   heads H = d_inner / headdim P
+    B, C    : (B, L, N) with one group (G=1), N = ssm_state
+    dt      : (B, L, H) positive via softplus(+bias)
+    state   : (B, H, P, N) carried between chunks / decode steps
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.meshctx import shard_act
+from repro.models.common import ModelConfig, ParamSpec, rms_norm
+
+__all__ = ["ssm_spec", "ssm_train", "ssm_decode", "ssm_state_spec"]
+
+
+def ssm_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    cw = cfg.ssm_conv
+    return {
+        "in_proj": ParamSpec((d, 2 * di + 2 * n + h), ("embed", "inner_all")),
+        "conv_w": ParamSpec((cw, di + 2 * n), (None, "inner_all"), scale=0.5),
+        "conv_b": ParamSpec((di + 2 * n,), ("inner_all",), init="zeros"),
+        "a_log": ParamSpec((h,), ("ssm_heads",), init="ones"),
+        "d_skip": ParamSpec((h,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((h,), ("ssm_heads",), init="zeros"),
+        "norm": ParamSpec((di,), ("inner",), init="ones"),
+        "out_proj": ParamSpec((di, d), ("inner", "embed")),
+    }
+
+
+def _split_proj(p, x, cfg: ModelConfig):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = jnp.einsum("bld,de->ble", x, p["in_proj"])
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, cache=None):
+    """Depthwise causal conv over time. cache: (B, cw-1, C) trailing context."""
+    cw = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((xbc.shape[0], cw - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = cache.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        full[:, i : full.shape[1] - (cw - 1 - i), :] * w[i][None, None, :]
+        for i in range(cw)
+    )
+    out = jax.nn.silu((out + b).astype(jnp.float32)).astype(xbc.dtype)
+    new_cache = full[:, -(cw - 1) :, :]
+    return out, new_cache
+
+
+def _segsum(a):
+    """Stable 'segment sum': segsum(a)[..., i, j] = sum a[j+1..i], -inf above."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssm_train(p, x, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence SSD forward (chunked). x: (B, L, D). L % chunk == 0."""
+    b, l, _ = x.shape
+    hn, pn, n, q = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_chunk
+    assert l % q == 0, f"seq {l} not divisible by ssm_chunk {q}"
+    nc = l // q
+
+    z, xbc, dt = _split_proj(p, x, cfg)
+    xbc, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., : cfg.d_inner].reshape(b, l, hn, pn)
+    bmat = xbc[..., cfg.d_inner : cfg.d_inner + n]
+    cmat = xbc[..., cfg.d_inner + n :]
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))           # (H,)
+    da = dt * a[None, None, :]                              # (B, L, H)
+
+    # chunk: (B, NC, Q, ...)
+    xs_c = xs.reshape(b, nc, q, hn, pn).astype(jnp.float32)
+    b_c = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    c_c = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+    da_c = da.reshape(b, nc, q, hn)
+    dt_c = dt.reshape(b, nc, q, hn)
+
+    da_cs = jnp.cumsum(da_c, axis=2)                        # (B,NC,Q,H)
+
+    # --- intra-chunk (quadratic, MXU) ----------------------------------
+    lmat = jnp.exp(_segsum(da_c.transpose(0, 1, 3, 2)))     # (B,NC,H,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", c_c, b_c)        # (B,NC,Q,Q)
+    y_diag = jnp.einsum(
+        "bcqk,bchqk,bckh,bckhp->bcqhp", scores, lmat, dt_c, xs_c
+    )
+
+    # --- chunk states ----------------------------------------------------
+    decay_states = jnp.exp(da_cs[:, :, -1:, :] - da_cs)     # (B,NC,Q,H)
+    states = jnp.einsum(
+        "bckn,bckh,bckhp->bchpn", b_c, decay_states * dt_c, xs_c
+    )                                                        # (B,NC,H,P,N)
+
+    # --- inter-chunk recurrence (serial over NC) --------------------------
+    chunk_decay = jnp.exp(da_cs[:, :, -1, :])               # (B,NC,H)
+
+    def carry_fn(h_prev, inp):
+        s_c, dec = inp                                       # (B,H,P,N), (B,H)
+        h_new = h_prev * dec[..., None, None] + s_c
+        return h_new, h_prev
+
+    h0 = jnp.zeros((b, hn, pn, n), jnp.float32)
+    _, h_prevs = jax.lax.scan(
+        carry_fn, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)              # (B,NC,H,P,N)
+
+    # --- inter-chunk output ------------------------------------------------
+    decay_out = jnp.exp(da_cs)                               # (B,NC,Q,H)
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp", c_c, h_prevs, decay_out)
+
+    y = (y_diag + y_off).reshape(b, l, hn, pn)
+    y = y + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, l, cfg.d_inner).astype(x.dtype)
+
+    # gated RMSNorm + out projection
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bli,id->bld", y, p["out_proj"])
+    return shard_act(out, "batch", "seq", "act_embed")
+
+
+def ssm_state_spec(cfg: ModelConfig, batch: int):
+    hn, pn, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    return {
+        "h": jax.ShapeDtypeStruct((batch, hn, pn, n), jnp.float32),
+        "conv": jax.ShapeDtypeStruct(
+            (batch, cfg.ssm_conv - 1, cfg.d_inner + 2 * n), cfg.act_dtype
+        ),
+    }
+
+
+def ssm_decode(p, x, state, cfg: ModelConfig):
+    """Single-token recurrent step. x: (B, 1, D); O(1) in context length —
+    the reason mamba2/zamba2 run the 500k-decode cell."""
+    b = x.shape[0]
+    hn, pn, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+
+    z, xbc, dt = _split_proj(p, x, cfg)
+    xbc, conv_cache = _causal_conv(xbc, p["conv_w"], p["conv_b"], state["conv"])
+    xs = xbc[:, 0, : cfg.d_inner].reshape(b, hn, pn).astype(jnp.float32)
+    bvec = xbc[:, 0, cfg.d_inner : cfg.d_inner + n].astype(jnp.float32)
+    cvec = xbc[:, 0, cfg.d_inner + n :].astype(jnp.float32)
+    dt1 = dt[:, 0, :]                                       # (B, H)
+
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dt1 * a[None, :])                         # (B, H)
+    h_new = state["h"] * dec[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt1, xs, bvec
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h_new, cvec)
+    y = y + xs * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                 p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bli,id->bld", y, p["out_proj"])
+    return out, {"h": h_new, "conv": conv_cache}

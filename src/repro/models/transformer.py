@@ -1,0 +1,679 @@
+"""Model assembly: decoder-only LM (dense / MoE / SSM / hybrid / VLM) and
+encoder-decoder (Whisper), with scanned + remat'd layer stacks.
+
+Public surface:
+    init_spec(cfg)            -> pytree of ParamSpec (stacked layers)
+    init_params(cfg, key)     -> (params, logical_axes)
+    abstract_params(cfg)      -> (ShapeDtypeStructs, logical_axes)  [dry-run]
+    forward_train(params, batch, cfg) -> (loss, metrics)
+    init_cache(cfg, batch, length)    -> decode cache ShapeDtypeStructs
+    forward_decode(params, tokens, cache, pos, cfg) -> (logits, cache)
+
+Layer stacks are scanned: per-layer params are stacked on axis 0 ('layers'
+logical axis) and the block is ``jax.lax.scan`` over that axis with
+``jax.checkpoint`` applied per policy — HLO stays depth-independent.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.meshctx import shard_act
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import (
+    ModelConfig,
+    ParamSpec,
+    abstract_params as _abstract,
+    init_dense,
+    make_rope,
+    rms_norm,
+    sinusoidal_positions,
+)
+
+__all__ = [
+    "init_spec", "init_params", "abstract_params",
+    "forward_train", "forward_decode", "init_cache", "input_specs",
+]
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def _block_spec(cfg: ModelConfig) -> dict:
+    """Spec of ONE decoder block (unstacked)."""
+    d = cfg.d_model
+    if cfg.family == "ssm":
+        return {
+            "norm1": ParamSpec((d,), ("embed",), init="ones"),
+            "ssm": ssm_mod.ssm_spec(cfg),
+        }
+    if cfg.family == "hybrid":
+        return {
+            "norm1": ParamSpec((d,), ("embed",), init="ones"),
+            "ssm": ssm_mod.ssm_spec(cfg),
+        }
+    block = {
+        "norm1": ParamSpec((d,), ("embed",), init="ones"),
+        "attn": attn.mla_spec(cfg) if cfg.mla else attn.gqa_spec(cfg),
+        "norm2": ParamSpec((d,), ("embed",), init="ones"),
+    }
+    if cfg.family == "moe":
+        block["moe"] = mlp_mod.moe_spec(cfg)
+    else:
+        block["mlp"] = mlp_mod.mlp_spec(cfg)
+    return block
+
+
+def _shared_attn_spec(cfg: ModelConfig) -> dict:
+    """Zamba2's shared transformer block (concat(h, x0) input)."""
+    d = cfg.d_model
+    return {
+        "in_proj": ParamSpec((2 * d, d), ("embed2", "embed")),
+        "norm1": ParamSpec((d,), ("embed",), init="ones"),
+        "attn": attn.gqa_spec(cfg),
+        "norm2": ParamSpec((d,), ("embed",), init="ones"),
+        "mlp": mlp_mod.mlp_spec(cfg),
+    }
+
+
+def _enc_block_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "norm1": ParamSpec((d,), ("embed",), init="ones"),
+        "attn": attn.gqa_spec(cfg),
+        "norm2": ParamSpec((d,), ("embed",), init="ones"),
+        "mlp": mlp_mod.mlp_spec(cfg),
+    }
+
+
+def _dec_block_spec_encdec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "norm1": ParamSpec((d,), ("embed",), init="ones"),
+        "attn": attn.gqa_spec(cfg),
+        "normx": ParamSpec((d,), ("embed",), init="ones"),
+        "xattn": attn.gqa_spec(cfg),
+        "norm2": ParamSpec((d,), ("embed",), init="ones"),
+        "mlp": mlp_mod.mlp_spec(cfg),
+    }
+
+
+def _stack(spec: dict, n: int) -> dict:
+    """Prepend a stacked 'layers' axis to every leaf of a block spec."""
+    def f(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n, *s.shape), ("layers", *s.axes), init=s.init,
+                         scale=s.scale)
+    return jax.tree.map(f, spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def init_spec(cfg: ModelConfig) -> dict:
+    d, v = cfg.d_model, cfg.vocab
+    spec: dict[str, Any] = {
+        "embed": ParamSpec((v, d), ("vocab", "embed"), scale=1.0),
+        "final_norm": ParamSpec((d,), ("embed",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = ParamSpec((d, v), ("embed", "vocab"))
+
+    if cfg.family == "encdec":
+        spec["enc"] = _stack(_enc_block_spec(cfg), cfg.n_enc_layers)
+        spec["enc_norm"] = ParamSpec((d,), ("embed",), init="ones")
+        spec["dec"] = _stack(_dec_block_spec_encdec(cfg), cfg.n_layers)
+        return spec
+
+    spec["blocks"] = _stack(_block_spec(cfg), cfg.n_layers)
+    if cfg.family == "hybrid" and cfg.shared_attn_every:
+        spec["shared_attn"] = _shared_attn_spec(cfg)
+    if cfg.mtp:
+        spec["mtp_proj"] = ParamSpec((2 * d, d), ("embed2", "embed"))
+        spec["mtp_block"] = _block_spec(cfg)
+        spec["mtp_norm"] = ParamSpec((d,), ("embed",), init="ones")
+    return spec
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return init_dense(key, init_spec(cfg), cfg.param_dtype)
+
+
+def abstract_params(cfg: ModelConfig):
+    return _abstract(init_spec(cfg), cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocks (train path)
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    policy = (
+        jax.checkpoint_policies.nothing_saveable
+        if cfg.remat == "full"
+        else jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    )
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _dense_block(p, x, cos, sin, cfg: ModelConfig):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    h = attn.mla_train(p["attn"], h, cos, sin, cfg) if cfg.mla else \
+        attn.gqa_train(p["attn"], h, cos, sin, cfg)
+    x = x + h
+    h = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if "moe" in p:
+        moe_fn = mlp_mod.moe_apply_a2a if cfg.moe_a2a else mlp_mod.moe_apply
+        h, aux = moe_fn(
+            p["moe"], h, cfg,
+            score_fn="sigmoid" if cfg.mla else "softmax",
+        )
+    else:
+        h, aux = mlp_mod.mlp_apply(p["mlp"], h), 0.0
+    return x + h, aux
+
+
+def _ssm_block(p, x, cfg: ModelConfig):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    return x + ssm_mod.ssm_train(p["ssm"], h, cfg), 0.0
+
+
+def _shared_block_apply(sp, x, x0, cos, sin, cfg: ModelConfig):
+    h = jnp.einsum("bse,ed->bsd", jnp.concatenate([x, x0], -1), sp["in_proj"])
+    a = rms_norm(h, sp["norm1"], cfg.norm_eps)
+    h = h + attn.gqa_train(sp["attn"], a, cos, sin, cfg)
+    m = rms_norm(h, sp["norm2"], cfg.norm_eps)
+    return x + h + mlp_mod.mlp_apply(sp["mlp"], m)
+
+
+def _decoder_stack(params, x, cos, sin, cfg: ModelConfig):
+    """Scan the stacked blocks; returns (h, aux_loss_sum)."""
+    x0 = x
+    shared = params.get("shared_attn")
+
+    def body(carry, layer_params_and_idx):
+        h, aux = carry
+        lp, idx = layer_params_and_idx
+        if cfg.family == "ssm":
+            h, a = _ssm_block(lp, h, cfg)
+        elif cfg.family == "hybrid":
+            h, a = _ssm_block(lp, h, cfg)
+            if cfg.shared_attn_every:
+                period = cfg.shared_attn_every
+                h = jax.lax.cond(
+                    (idx % period) == (period - 1),
+                    lambda hh: _shared_block_apply(shared, hh, x0, cos, sin, cfg),
+                    lambda hh: hh,
+                    h,
+                )
+        else:
+            h, a = _dense_block(lp, h, cos, sin, cfg)
+        h = shard_act(h, "batch", "seq", "act_embed")
+        return (h, aux + a), None
+
+    body = _remat(body, cfg)
+    idxs = jnp.arange(cfg.n_layers)
+    (h, aux), _ = jax.lax.scan(body, (x, 0.0), (params["blocks"], idxs))
+    return h, aux
+
+
+# ---------------------------------------------------------------------------
+# Train forward + chunked CE loss
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, tokens, cfg: ModelConfig):
+    e = params["embed"][tokens]
+    return e.astype(cfg.act_dtype)
+
+
+def _lm_head(params, h, cfg: ModelConfig):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,dv->bsv", h, w)
+
+
+def _chunked_ce(params, h, labels, mask, cfg: ModelConfig):
+    """CE over sequence chunks: never materialises (B, S, V) at once."""
+    b, s, d = h.shape
+    c = min(cfg.loss_chunk, s)
+    assert s % c == 0, f"seq {s} %% loss_chunk {c} != 0"
+    nc = s // c
+    h_c = h.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    l_c = labels.reshape(b, nc, c).transpose(1, 0, 2)
+    m_c = mask.reshape(b, nc, c).transpose(1, 0, 2)
+
+    def body(acc, inp):
+        hh, ll, mm = inp
+        logits = _lm_head(params, hh, cfg).astype(jnp.float32)
+        logits = shard_act(logits, "batch", "seq", "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mm
+        return (acc[0] + jnp.sum(nll), acc[1] + jnp.sum(mm)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (h_c, l_c, m_c))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def forward_train(params, batch, cfg: ModelConfig):
+    """batch: tokens (B,S) int32, labels (B,S) int32, mask (B,S) f32.
+    vlm adds 'img_embeds' (B, n_img, D); encdec adds 'frames' (B, T, D)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+
+    if cfg.family == "encdec":
+        return _encdec_train(params, batch, cfg)
+
+    x = _embed(params, tokens, cfg)
+    if cfg.family == "vlm":
+        img = batch["img_embeds"].astype(cfg.act_dtype)
+        x = jnp.concatenate([img, x[:, : s - cfg.n_img_tokens]], axis=1)
+    x = shard_act(x, "batch", "seq", "act_embed")
+
+    positions = jnp.arange(x.shape[1])[None, :]
+    rope_dim = (cfg.qk_rope_dim if cfg.mla else cfg.head_dim) or 2
+    cos, sin = make_rope(positions, rope_dim, cfg.rope_theta)
+
+    h, aux = _decoder_stack(params, x, cos, sin, cfg)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+    loss = _chunked_ce(params, h, batch["labels"], batch["mask"], cfg)
+    metrics = {"ce": loss, "aux": aux}
+
+    if cfg.mtp:
+        # DeepSeek-V3 MTP: one extra block predicts token t+2 from
+        # [h_t ; embed(token_{t+1})] — shared head, weighted loss.
+        emb_next = _embed(params, batch["labels"], cfg)
+        hm = jnp.einsum(
+            "bse,ed->bsd",
+            jnp.concatenate(
+                [rms_norm(h, params["mtp_norm"], cfg.norm_eps), emb_next], -1
+            ),
+            params["mtp_proj"],
+        )
+        hm, _ = _dense_block(params["mtp_block"], hm, cos, sin, cfg)
+        mtp_labels = jnp.roll(batch["labels"], -1, axis=1)
+        mtp_mask = batch["mask"] * (
+            jnp.arange(s)[None, :] < s - 1
+        ).astype(batch["mask"].dtype)
+        mtp_loss = _chunked_ce(params, hm, mtp_labels, mtp_mask, cfg)
+        metrics["mtp"] = mtp_loss
+        loss = loss + 0.3 * mtp_loss
+
+    return loss + aux, metrics
+
+
+def forward_prefill_cache(params, batch, cfg: ModelConfig, cache_len: int):
+    """Serving prefill for attention families: run the stack over the prompt
+    AND materialise the decode cache (RoPE'd K/V per layer for GQA; the
+    compressed (ckv, k_rope) latents for MLA), padded to ``cache_len``.
+
+    Returns (last_logits, cache, next_pos).  Parity-tested against
+    token-by-token ``forward_decode`` (tests/test_serving_parity.py).
+    """
+    if cfg.family not in ("dense", "vlm", "moe"):
+        raise NotImplementedError(
+            "cache-filling prefill covers attention decoder families; "
+            "ssm/hybrid decode from the SSD state, encdec from enc_out")
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = _embed(params, tokens, cfg)
+    if cfg.family == "vlm":
+        img = batch["img_embeds"].astype(cfg.act_dtype)
+        x = jnp.concatenate([img, x[:, : s - cfg.n_img_tokens]], axis=1)
+    x = shard_act(x, "batch", "seq", "act_embed")
+    positions = jnp.arange(x.shape[1])[None, :]
+    rope_dim = (cfg.qk_rope_dim if cfg.mla else cfg.head_dim) or 2
+    cos, sin = make_rope(positions, rope_dim, cfg.rope_theta)
+
+    def body(carry, lp):
+        h, aux = carry
+        hh = rms_norm(h, lp["norm1"], cfg.norm_eps)
+        if cfg.mla:
+            o, kv = attn.mla_train(lp["attn"], hh, cos, sin, cfg,
+                                   return_kv=True)
+        else:
+            o, kv = attn.gqa_train(lp["attn"], hh, cos, sin, cfg,
+                                   return_kv=True)
+        h = h + o
+        m = rms_norm(h, lp["norm2"], cfg.norm_eps)
+        if "moe" in lp:
+            f, a = mlp_mod.moe_apply(
+                lp["moe"], m, cfg,
+                score_fn="sigmoid" if cfg.mla else "softmax",
+                dropless=True,     # serving: must match stepwise decode
+            )
+        else:
+            f, a = mlp_mod.mlp_apply(lp["mlp"], m), 0.0
+        return (h + f, aux + a), kv
+
+    (h, _), kvs = jax.lax.scan(body, (x, 0.0), params["blocks"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _lm_head(params, h[:, -1:, :], cfg)
+
+    seq = x.shape[1]
+    pad = cache_len - seq
+    if pad < 0:
+        raise ValueError(f"cache_len {cache_len} < prompt {seq}")
+
+    if cfg.mla:
+        ckv, krope = kvs                      # (L,B,S,rkv), (L,B,S,dr)
+        cache = {"kv": {
+            "ckv": jnp.pad(ckv, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(cfg.act_dtype),
+            "krope": jnp.pad(krope, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(cfg.act_dtype),
+        }}
+    else:
+        k, v = kvs                             # (L,B,S,K,dh)
+        cache = {"kv": {
+            "k": jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(cfg.act_dtype),
+            "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))).astype(cfg.act_dtype),
+        }}
+    return logits, cache, jnp.int32(seq)
+
+
+def forward_prefill(params, batch, cfg: ModelConfig):
+    """Inference prefill: run the stack over the prompt, return last-position
+    logits.  (Cache materialisation is the serve path's job; the prefill
+    cell's compute/memory/collective profile is the stack itself.)"""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    if cfg.family == "encdec":
+        loss, _ = _encdec_train(params, batch, cfg)
+        return loss
+    x = _embed(params, tokens, cfg)
+    if cfg.family == "vlm":
+        img = batch["img_embeds"].astype(cfg.act_dtype)
+        x = jnp.concatenate([img, x[:, : s - cfg.n_img_tokens]], axis=1)
+    x = shard_act(x, "batch", "seq", "act_embed")
+    positions = jnp.arange(x.shape[1])[None, :]
+    rope_dim = (cfg.qk_rope_dim if cfg.mla else cfg.head_dim) or 2
+    cos, sin = make_rope(positions, rope_dim, cfg.rope_theta)
+    h, _ = _decoder_stack(params, x, cos, sin, cfg)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _lm_head(params, h[:, -1:, :], cfg)
+    return shard_act(logits, "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (Whisper)
+# ---------------------------------------------------------------------------
+
+
+def _xattn_train(p, x, enc_out, cfg: ModelConfig):
+    """Cross-attention: q from x, k/v from encoder output (no RoPE)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", enc_out, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc_out, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    zero = jnp.zeros((1, 1, q.shape[1], k.shape[1]), jnp.float32)
+    out = attn._attend(q, k, v, zero, cfg)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def _encdec_train(params, batch, cfg: ModelConfig):
+    frames = batch["frames"].astype(cfg.act_dtype)     # (B, T, D) stub frontend
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+
+    pos_enc = jnp.asarray(
+        sinusoidal_positions(frames.shape[1], cfg.d_model), cfg.act_dtype
+    )
+    x = frames + pos_enc[None]
+    x = shard_act(x, "batch", "seq", "act_embed")
+    t = frames.shape[1]
+    cos_e, sin_e = make_rope(jnp.arange(t)[None, :], cfg.head_dim, cfg.rope_theta)
+    zero_cos = jnp.ones_like(cos_e)
+    zero_sin = jnp.zeros_like(sin_e)
+
+    def enc_body(carry, lp):
+        h = carry
+        a = rms_norm(h, lp["norm1"], cfg.norm_eps)
+        # bidirectional: no causal mask
+        q = jnp.einsum("bsd,dhk->bshk", a, lp["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", a, lp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", a, lp["attn"]["wv"])
+        if cfg.qkv_bias:
+            q = q + lp["attn"]["bq"]; k = k + lp["attn"]["bk"]; v = v + lp["attn"]["bv"]
+        zero = jnp.zeros((1, 1, t, t), jnp.float32)
+        o = attn._attend(q, k, v, zero, cfg)
+        h = h + jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+        m = rms_norm(h, lp["norm2"], cfg.norm_eps)
+        h = h + mlp_mod.mlp_apply(lp["mlp"], m)
+        return h, None
+
+    enc_body = _remat(enc_body, cfg)
+    enc_out, _ = jax.lax.scan(enc_body, x, params["enc"])
+    enc_out = rms_norm(enc_out, params["enc_norm"], cfg.norm_eps)
+
+    y = _embed(params, tokens, cfg)
+    cos, sin = make_rope(jnp.arange(s)[None, :], cfg.head_dim, cfg.rope_theta)
+
+    def dec_body(carry, lp):
+        h, aux = carry
+        a = rms_norm(h, lp["norm1"], cfg.norm_eps)
+        h = h + attn.gqa_train(lp["attn"], a, cos, sin, cfg)
+        cx = rms_norm(h, lp["normx"], cfg.norm_eps)
+        h = h + _xattn_train(lp["xattn"], cx, enc_out, cfg)
+        m = rms_norm(h, lp["norm2"], cfg.norm_eps)
+        h = h + mlp_mod.mlp_apply(lp["mlp"], m)
+        return (h, aux), None
+
+    dec_body = _remat(dec_body, cfg)
+    (h, _), _ = jax.lax.scan(dec_body, (y, 0.0), params["dec"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    loss = _chunked_ce(params, h, batch["labels"], batch["mask"], cfg)
+    return loss, {"ce": loss}
+
+
+# ---------------------------------------------------------------------------
+# Decode path (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, length: int):
+    """ShapeDtypeStruct cache tree, stacked over layers where scanned."""
+    def stack(tree):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.n_layers, *s.shape), s.dtype), tree
+        )
+
+    if cfg.family == "ssm":
+        return {"ssm": stack(ssm_mod.ssm_state_spec(cfg, batch))}
+    if cfg.family == "hybrid":
+        c = {"ssm": stack(ssm_mod.ssm_state_spec(cfg, batch))}
+        if cfg.shared_attn_every:
+            n_sites = cfg.n_layers // cfg.shared_attn_every
+            win = min(length, cfg.sliding_window) if cfg.sliding_window else length
+            kv = attn.gqa_cache_spec(cfg, batch, win)
+            c["shared_kv"] = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct((n_sites, *s.shape), s.dtype), kv
+            )
+        return c
+    if cfg.family == "encdec":
+        sl = min(length, cfg.max_target_len)
+        return {
+            "kv": stack_n(attn.gqa_cache_spec(cfg, batch, sl), cfg.n_layers),
+            "enc_out": jax.ShapeDtypeStruct(
+                (batch, cfg.n_audio_frames, cfg.d_model), cfg.act_dtype
+            ),
+        }
+    if cfg.mla:
+        return {"kv": stack_n(attn.mla_cache_spec(cfg, batch, length), cfg.n_layers)}
+    return {"kv": stack_n(attn.gqa_cache_spec(cfg, batch, length), cfg.n_layers)}
+
+
+def stack_n(tree, n):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n, *s.shape), s.dtype), tree
+    )
+
+
+def zeros_cache(cfg: ModelConfig, batch: int, length: int):
+    """Materialised (all-zero) decode cache for real serving runs."""
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), init_cache(cfg, batch, length)
+    )
+
+
+def forward_decode(params, tokens, cache, pos, cfg: ModelConfig):
+    """One decode step. tokens: (B, 1); pos: scalar int32.  Returns
+    (logits (B, 1, V), new_cache)."""
+    x = _embed(params, tokens, cfg)
+    x = shard_act(x, "batch", None, "act_embed")
+
+    if cfg.family == "ssm":
+        def body(h, xs):
+            lp, st = xs
+            a = rms_norm(h, lp["norm1"], cfg.norm_eps)
+            o, st2 = ssm_mod.ssm_decode(lp["ssm"], a, st, cfg)
+            return h + o, st2
+        h, new_ssm = jax.lax.scan(body, x, (params["blocks"], cache["ssm"]))
+        new_cache = {"ssm": new_ssm}
+    elif cfg.family == "hybrid":
+        h, new_cache = _hybrid_decode(params, x, cache, pos, cfg)
+    elif cfg.family == "encdec":
+        h, new_cache = _encdec_decode(params, x, cache, pos, cfg)
+    else:
+        decode_fn = attn.mla_decode if cfg.mla else attn.gqa_decode
+        def body(h, xs):
+            lp, kv = xs
+            a = rms_norm(h, lp["norm1"], cfg.norm_eps)
+            o, kv2 = decode_fn(lp["attn"], a, kv, pos, cfg)
+            h = h + o
+            m = rms_norm(h, lp["norm2"], cfg.norm_eps)
+            if "moe" in lp:
+                f, _ = mlp_mod.moe_apply(
+                    lp["moe"], m, cfg,
+                    score_fn="sigmoid" if cfg.mla else "softmax",
+                    dropless=True,     # serving: no capacity competition
+                )
+            else:
+                f = mlp_mod.mlp_apply(lp["mlp"], m)
+            return h + f, kv2
+        h, new_kv = jax.lax.scan(body, x, (params["blocks"], cache["kv"]))
+        new_cache = {"kv": new_kv}
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _lm_head(params, h, cfg)
+    logits = shard_act(logits, "batch", None, "vocab")
+    return logits, new_cache
+
+
+def _hybrid_decode(params, x, cache, pos, cfg: ModelConfig):
+    period = cfg.shared_attn_every
+    x0 = x
+    h = x
+    new_ssm = []
+    new_kv = []
+    # Hybrid decode unrolls in python over *sites*, scanning mamba runs in
+    # between (sites are few: 38/6 = 6).
+    n_sites = cfg.n_layers // period if period else 0
+    blocks = params["blocks"]
+
+    def mamba_run(h, lo, hi):
+        seg = jax.tree.map(lambda a: a[lo:hi], blocks)
+        seg_state = jax.tree.map(lambda a: a[lo:hi], cache["ssm"])
+
+        def body(hh, xs):
+            lp, st = xs
+            a = rms_norm(hh, lp["norm1"], cfg.norm_eps)
+            o, st2 = ssm_mod.ssm_decode(lp["ssm"], a, st, cfg)
+            return hh + o, st2
+
+        return jax.lax.scan(body, h, (seg, seg_state))
+
+    site = 0
+    lo = 0
+    states = []
+    kvs = []
+    sp = params.get("shared_attn")
+    while lo < cfg.n_layers:
+        hi = min(lo + period, cfg.n_layers) if period else cfg.n_layers
+        h, st = mamba_run(h, lo, hi)
+        states.append(st)
+        if period and hi == lo + period and site < n_sites:
+            kv = jax.tree.map(lambda a: a[site], cache["shared_kv"])
+            hh = jnp.einsum("bse,ed->bsd", jnp.concatenate([h, x0], -1),
+                            sp["in_proj"])
+            a = rms_norm(hh, sp["norm1"], cfg.norm_eps)
+            win = kv["k"].shape[1]
+            o, kv2 = attn.gqa_decode(
+                sp["attn"], a, kv, pos, cfg,
+                write_pos=(pos % win) if cfg.sliding_window else None)
+            hh = hh + o
+            m = rms_norm(hh, sp["norm2"], cfg.norm_eps)
+            h = h + hh + mlp_mod.mlp_apply(sp["mlp"], m)
+            kvs.append(kv2)
+            site += 1
+        lo = hi
+
+    new_cache = {
+        "ssm": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *states),
+    }
+    if kvs:
+        new_cache["shared_kv"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs, 0), *kvs
+        )
+    return h, new_cache
+
+
+def _encdec_decode(params, x, cache, pos, cfg: ModelConfig):
+    enc_out = cache["enc_out"]
+
+    def body(h, xs):
+        lp, kv = xs
+        a = rms_norm(h, lp["norm1"], cfg.norm_eps)
+        o, kv2 = attn.gqa_decode(lp["attn"], a, kv, pos, cfg)
+        h = h + o
+        cx = rms_norm(h, lp["normx"], cfg.norm_eps)
+        h = h + _xattn_train(lp["xattn"], cx, enc_out, cfg)
+        m = rms_norm(h, lp["norm2"], cfg.norm_eps)
+        h = h + mlp_mod.mlp_apply(lp["mlp"], m)
+        return h, kv2
+
+    h, new_kv = jax.lax.scan(body, x, (params["dec"], cache["kv"]))
+    return h, {"kv": new_kv, "enc_out": enc_out}
+
+
+# ---------------------------------------------------------------------------
+# input_specs — ShapeDtypeStruct stand-ins for the dry-run
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape_kind: str, seq: int, batch: int) -> dict:
+    """Abstract inputs for (cfg, shape).  shape_kind: train | prefill | decode."""
+    i32 = jnp.int32
+    if shape_kind in ("train", "prefill"):
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((batch, seq), i32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), i32),
+            "mask": jax.ShapeDtypeStruct((batch, seq), jnp.float32),
+        }
+        if cfg.family == "vlm":
+            specs["img_embeds"] = jax.ShapeDtypeStruct(
+                (batch, cfg.n_img_tokens, cfg.d_model), cfg.act_dtype
+            )
+        if cfg.family == "encdec":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (batch, cfg.n_audio_frames, cfg.d_model), cfg.act_dtype
+            )
+            # decoder side trains on max_target_len tokens
+            tl = min(seq, cfg.max_target_len)
+            specs["tokens"] = jax.ShapeDtypeStruct((batch, tl), i32)
+            specs["labels"] = jax.ShapeDtypeStruct((batch, tl), i32)
+            specs["mask"] = jax.ShapeDtypeStruct((batch, tl), jnp.float32)
+        return specs
+    if shape_kind == "decode":
+        return {
+            "tokens": jax.ShapeDtypeStruct((batch, 1), i32),
+            "cache": init_cache(cfg, batch, seq),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+    raise ValueError(shape_kind)

@@ -1,0 +1,9 @@
+"""Training substrate: optimizer, step builders, checkpointing, fault
+tolerance, gradient compression."""
+from repro.train import (  # noqa: F401
+    checkpoint,
+    compression,
+    fault_tolerance,
+    optimizer,
+    train_step,
+)

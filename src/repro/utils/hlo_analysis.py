@@ -1,0 +1,351 @@
+"""Post-SPMD HLO accounting for the roofline analysis.
+
+Parses ``compiled.as_text()`` (optimized, partitioned HLO — shapes are the
+per-device shards, collectives are explicit) and produces:
+
+  * collective_bytes   — per kind (all-gather / all-reduce / reduce-scatter /
+                         all-to-all / collective-permute), result sizes
+                         summed, **weighted by loop trip counts**;
+  * dot_flops          — 2 * prod(out_shape) * contracted_size per dot,
+                         trip-weighted;
+  * hbm_bytes          — fusion-boundary traffic model: every non-fused
+                         compute instruction at computation scope reads its
+                         operands and writes its output once, trip-weighted.
+
+Trip counts: XLA's ``HloCostAnalysis`` visits a while body ONCE, so scanned
+layer stacks would be undercounted ~n_layers x.  We recover trip counts from
+each while's *condition* computation: the loop bound rides in an
+``s32[] constant(N)`` that feeds the ROOT compare (possibly via a
+``wrapped_compare`` kLoop fusion).  Multipliers propagate through nested
+whiles from the entry computation.  Unrecognised conditions fall back to
+multiplier 1 and are listed in ``unresolved_loops`` (the dry-run prints
+them; cross-check against cost_analysis + the analytic 6ND model).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["analyze_hlo", "HloStats"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# Ops whose operand/result bytes are NOT HBM traffic at this scope: control
+# flow (bodies counted separately), tuples/parameters (aliases), collectives
+# (counted in the collective term), -done halves of async pairs.
+_SKIP_HBM = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "partition-id", "replica-id", "domain", "while",
+    "conditional", "call", "custom-call", "copy-start", "copy-done",
+    "send", "recv", "send-done", "recv-done", "infeed", "outfeed",
+    "opt-barrier", "add-dependency",
+} | set(_COLLECTIVES) | {c + "-start" for c in _COLLECTIVES} | {
+    c + "-done" for c in _COLLECTIVES
+}
+
+_HEADER_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_OP_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"((?:\([^=]*?\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\("
+)
+_CONST_RE = re.compile(r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*s32\[\]\s*constant\((\-?\d+)\)")
+
+
+@dataclasses.dataclass
+class HloStats:
+    collective_bytes: dict
+    dot_flops: float
+    hbm_bytes: float
+    trip_counts: dict
+    n_collectives: int
+    unresolved_loops: list
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> tuple[dict[str, list[str]], str | None]:
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur = None
+    for line in hlo.splitlines():
+        m = _HEADER_RE.match(line)
+        if m and "=" not in line.split("(", 1)[0]:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+            continue
+        s = line.strip()
+        if s.startswith("}"):
+            cur = None
+            continue
+        if cur is not None and s:
+            comps[cur].append(s)
+    return comps, entry
+
+
+def _trip_count(cond_lines: list[str]) -> int | None:
+    """Loop bound = the s32[] constant feeding the ROOT compare (directly or
+    through a wrapped_compare fusion).  Assumes the lax.scan LT pattern."""
+    consts = {}
+    for ln in cond_lines:
+        m = _CONST_RE.match(ln)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    if not consts:
+        return None
+    for ln in cond_lines:
+        if ln.startswith("ROOT"):
+            args = ln.split("(", 2)
+            if len(args) < 3:
+                continue
+            arg_str = args[2].split(")")[0]
+            vals = [
+                consts[n] for n in re.findall(r"%([\w\.\-]+)", arg_str)
+                if n in consts
+            ]
+            if vals:
+                return max(vals)
+    return max(consts.values())
+
+
+def _while_edges(lines):
+    for ln in lines:
+        if " while(" in ln:
+            mb = re.search(r"body=%?([\w\.\-]+)", ln)
+            mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+            if mb and mc:
+                yield mb.group(1), mc.group(1)
+
+
+def _multipliers(comps, entry):
+    mult: dict[str, float] = {}
+    unresolved = []
+    if entry is None:
+        return {name: 1.0 for name in comps}, ["no entry found"]
+    mult[entry] = 1.0
+    frontier = [entry]
+    while frontier:
+        comp = frontier.pop()
+        lines = comps.get(comp, [])
+        for body, cond in _while_edges(lines):
+            n = _trip_count(comps.get(cond, []))
+            if n is None:
+                n = 1
+                unresolved.append(body)
+            if body not in mult:
+                mult[body] = mult[comp] * max(n, 1)
+                frontier.append(body)
+        for ln in lines:
+            for m in re.finditer(
+                r"(?:true_computation|false_computation|to_apply)=\{?%?([\w\.\-]+)",
+                ln,
+            ):
+                sub = m.group(1)
+                if sub in comps and sub not in mult:
+                    mult[sub] = mult[comp]
+                    frontier.append(sub)
+            mb = re.search(r"branch_computations=\{([^}]*)\}", ln)
+            if mb:
+                for sub in re.findall(r"%?([\w\.\-]+)", mb.group(1)):
+                    if sub in comps and sub not in mult:
+                        mult[sub] = mult[comp]
+                        frontier.append(sub)
+    return mult, unresolved
+
+
+def analyze_hlo(hlo: str) -> HloStats:
+    comps, entry = _split_computations(hlo)
+    mult, unresolved = _multipliers(comps, entry)
+
+    coll_bytes: dict[str, float] = defaultdict(float)
+    n_coll = 0
+    dot_flops = 0.0
+    hbm = 0.0
+
+    # --- fusion read/write refinement -------------------------------------
+    # A fusion that consumes a big carried buffer through dynamic-slice only
+    # reads the slice; a fusion rooted in dynamic-update-slice writes (and is
+    # aliased with) the slice, not the whole buffer.  Without this, loop
+    # bodies look like they stream the entire carry every iteration and the
+    # memory term inflates ~100x.
+    fusion_param_bytes: dict[str, dict[int, int]] = {}
+    fusion_out_bytes: dict[str, int] = {}
+    for comp, lines in comps.items():
+        params: dict[str, tuple[int, str]] = {}
+        for ln in lines:
+            pm = re.match(
+                r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+                r"((?:\([^=]*?\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))\s*parameter\((\d+)\)",
+                ln,
+            )
+            if pm:
+                params[pm.group(1)] = (int(pm.group(3)), pm.group(2))
+        if not params:
+            continue
+        pbytes: dict[int, int] = {}
+        for pname, (idx, ptype) in params.items():
+            uses = [ln for ln in lines
+                    if re.search(rf"[(,]\s*%{re.escape(pname)}\b", ln)]
+            slice_only = bool(uses) and all(
+                " dynamic-slice(" in u or " dynamic-update-slice(" in u
+                for u in uses
+            )
+            if slice_only:
+                b = 0
+                for u in uses:
+                    ms = re.search(r"dynamic_slice_sizes=\{([\d,]*)\}", u)
+                    if ms and ms.group(1):
+                        n = 1
+                        for d in ms.group(1).split(","):
+                            n *= int(d)
+                        mdt = _SHAPE_RE.search(ptype)
+                        b += n * _DTYPE_BYTES.get(mdt.group(1), 4) if mdt else 0
+                    elif " dynamic-update-slice(" in u:
+                        # reads only the aliased region it overwrites
+                        pass
+                pbytes[idx] = b
+            else:
+                pbytes[idx] = _shape_bytes(ptype)
+        fusion_param_bytes[comp] = pbytes
+        for ln in lines:
+            if ln.startswith("ROOT") and " dynamic-update-slice(" in ln:
+                args = ln.split("dynamic-update-slice(", 1)[1].split(")")[0]
+                names = re.findall(r"%([\w\.\-]+)", args)
+                upd_bytes = 0
+                if len(names) >= 2:
+                    # update operand is arg 1
+                    for cand in lines:
+                        cm = re.match(
+                            rf"^(?:ROOT\s+)?%{re.escape(names[1])}\s*=\s*"
+                            r"((?:\([^=]*?\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))",
+                            cand)
+                        if cm:
+                            upd_bytes = _shape_bytes(cm.group(1))
+                            break
+                fusion_out_bytes[comp] = max(upd_bytes, 1)
+
+    for comp, lines in comps.items():
+        w = mult.get(comp, 0.0)
+        if not w:
+            continue
+        # result-type lookup for operand byte counting + dot contraction
+        defs: dict[str, str] = {}
+        for ln in lines:
+            m = _OP_RE.match(ln)
+            if m:
+                defs[m.group(1)] = m.group(2)
+            else:
+                mc = re.match(
+                    r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+                    r"((?:\([^=]*?\))|(?:\w+\[[\d,]*\](?:\{[^}]*\})?))", ln)
+                if mc:
+                    defs[mc.group(1)] = mc.group(2)
+
+        for ln in lines:
+            m = _OP_RE.match(ln)
+            if not m:
+                continue
+            name, rtype, op = m.groups()
+            out_bytes = _shape_bytes(rtype)
+
+            base = op[:-6] if op.endswith("-start") else op
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                coll_bytes[base] += w * out_bytes
+                n_coll += 1
+
+            if op == "dot":
+                arg_str = ln.split("dot(", 1)[1].split(")")[0]
+                arg_names = re.findall(r"%([\w\.\-]+)", arg_str)
+                csize = 1
+                cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
+                if arg_names and cdims and cdims.group(1):
+                    lhs_t = defs.get(arg_names[0], "")
+                    mm = _SHAPE_RE.search(lhs_t)
+                    if mm:
+                        dims = [int(d) for d in mm.group(2).split(",") if d]
+                        for ci in cdims.group(1).split(","):
+                            ci = int(ci)
+                            if ci < len(dims):
+                                csize *= dims[ci]
+                elems = 0
+                for dt, dims in _SHAPE_RE.findall(rtype):
+                    if dt in _DTYPE_BYTES:
+                        n = 1
+                        for d in dims.split(","):
+                            if d:
+                                n *= int(d)
+                        elems += n
+                dot_flops += w * 2.0 * elems * csize
+
+            if op not in _SKIP_HBM:
+                write_bytes = out_bytes
+                operand_bytes = 0
+                if op == "fusion":
+                    mcall = re.search(r"calls=%?([\w\.\-]+)", ln)
+                    fname = mcall.group(1) if mcall else None
+                    pb = fusion_param_bytes.get(fname, {})
+                    if fname in fusion_out_bytes:
+                        write_bytes = fusion_out_bytes[fname]
+                    call = ln.find("(")
+                    arg_str = ln[call + 1:].split(")")[0]
+                    for i, an in enumerate(re.findall(r"%([\w\.\-]+)", arg_str)):
+                        if i in pb:
+                            operand_bytes += pb[i]
+                        else:
+                            t = defs.get(an)
+                            if t:
+                                operand_bytes += _shape_bytes(t)
+                elif op == "dynamic-slice":
+                    ms = re.search(r"dynamic_slice_sizes=\{([\d,]*)\}", ln)
+                    operand_bytes = 0          # reads only what it outputs
+                elif op == "dynamic-update-slice":
+                    arg_str = ln.split("dynamic-update-slice(", 1)[1].split(")")[0]
+                    names = re.findall(r"%([\w\.\-]+)", arg_str)
+                    ub = _shape_bytes(defs.get(names[1], "")) if len(names) > 1 else 0
+                    operand_bytes = ub
+                    write_bytes = ub           # in-place aliased update
+                else:
+                    call = ln.find("(")
+                    if call >= 0:
+                        arg_str = ln[call + 1:].split(")")[0]
+                        for an in re.findall(r"%([\w\.\-]+)", arg_str):
+                            t = defs.get(an)
+                            if t:
+                                operand_bytes += _shape_bytes(t)
+                hbm += w * (write_bytes + operand_bytes)
+
+    return HloStats(
+        collective_bytes=dict(coll_bytes),
+        dot_flops=dot_flops,
+        hbm_bytes=hbm,
+        trip_counts={k: v for k, v in mult.items() if v > 1.0},
+        n_collectives=n_coll,
+        unresolved_loops=unresolved,
+    )

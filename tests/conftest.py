@@ -1,0 +1,22 @@
+"""Test config: single-device CPU (do NOT set the 512-device XLA flag here —
+only the dry-run process uses it)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_tos(rng, h, w, th=225):
+    """Random surface satisfying the TOS invariant {0} U [th, 255]."""
+    t = rng.integers(0, 256, (h, w)).astype(np.int32)
+    return np.where(t >= th, t, 0).astype(np.uint8)
+
+
+def make_events(rng, h, w, e, valid_frac=0.9):
+    xy = np.stack([rng.integers(0, w, e), rng.integers(0, h, e)], 1).astype(np.int32)
+    valid = rng.random(e) < valid_frac
+    xy[~valid] = 0
+    return xy, valid

@@ -1,0 +1,53 @@
+"""eHarris / evFAST / evARC baselines: sanity + discrimination."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, stcf
+
+
+def _corner_sae(h=48, w=48, t_new=10_000):
+    """SAE with an L-shaped recent edge meeting at (24, 24) — a corner —
+    plus stale background."""
+    sae = np.full((h, w), -(2**30), np.int32)
+    sae[24, 4:25] = t_new - np.arange(21)[::-1] * 10     # horizontal arm
+    sae[4:25, 24] = t_new - np.arange(21)[::-1] * 10     # vertical arm
+    return jnp.asarray(sae)
+
+
+def test_eharris_corner_scores_higher_than_edge():
+    sae = _corner_sae()
+    xy = jnp.asarray([[24, 24], [12, 24], [40, 40]], jnp.int32)   # corner, edge, empty
+    ts = jnp.asarray([10_000, 10_000, 10_000], jnp.int32)
+    valid = jnp.ones(3, bool)
+    s = np.asarray(baselines.eharris_scores(sae, xy, ts, valid))
+    # Harris: corners strongly positive, edges negative, flat ~0.
+    assert s[0] > s[2] > s[1]
+
+
+def test_fast_scores_finite_and_gated():
+    sae = _corner_sae()
+    xy = jnp.asarray([[24, 24], [40, 40]], jnp.int32)
+    ts = jnp.asarray([10_000, 10_000], jnp.int32)
+    valid = jnp.asarray([True, False])
+    s = np.asarray(baselines.fast_scores(sae, xy, ts, valid))
+    assert np.isfinite(s[0])
+    assert s[1] == -np.inf
+
+
+def test_arc_scores_band():
+    sae = _corner_sae()
+    xy = jnp.asarray([[24, 24]], jnp.int32)
+    ts = jnp.asarray([10_000], jnp.int32)
+    s = np.asarray(baselines.arc_scores(sae, xy, ts, jnp.asarray([True])))
+    assert np.isfinite(s[0])
+
+
+def test_circle_geometry():
+    assert baselines.CIRCLE3.shape == (16, 2)
+    assert baselines.CIRCLE4.shape == (20, 2)
+    # all points at (Euclidean) ring radius ~3 / ~4 (Bresenham circles
+    # include diagonal points like (2,2) whose Chebyshev radius is lower)
+    r3 = np.linalg.norm(baselines.CIRCLE3, axis=1)
+    r4 = np.linalg.norm(baselines.CIRCLE4, axis=1)
+    assert np.all((r3 > 2.7) & (r3 < 3.3))
+    assert np.all((r4 > 3.5) & (r4 < 4.4))

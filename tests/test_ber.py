@@ -1,0 +1,38 @@
+"""Bit-error injection: storage model faithfulness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from conftest import make_tos
+from repro.core import ber
+
+
+def test_encode_decode_roundtrip(rng):
+    t = jnp.asarray(make_tos(rng, 64, 64))
+    assert bool(jnp.all(ber.decode5(ber.encode5(t)) == t))
+
+
+def test_zero_ber_is_identity(rng):
+    t = jnp.asarray(make_tos(rng, 32, 32))
+    out = ber.inject_write_errors(jax.random.PRNGKey(0), t, 0.0)
+    assert bool(jnp.all(out == t))
+
+
+def test_zero_pixels_never_corrupted(rng):
+    t = jnp.zeros((64, 64), jnp.uint8)
+    out = ber.inject_write_errors(jax.random.PRNGKey(1), t, 0.5)
+    assert bool(jnp.all(out == 0))
+
+
+def test_corrupted_values_stay_in_valid_range(rng):
+    t = jnp.asarray(make_tos(rng, 128, 128))
+    out = np.asarray(ber.inject_write_errors(jax.random.PRNGKey(2), t, 0.025))
+    assert np.all((out == 0) | (out >= 225))
+
+
+def test_flip_rate_matches(rng):
+    t = jnp.full((256, 256), 255, jnp.uint8)
+    out = np.asarray(ber.inject_write_errors(jax.random.PRNGKey(3), t, 0.025))
+    frac_changed = np.mean(out != 255)
+    # P(any of 5 bits flips) = 1-(1-p)^5 ~ 11.9%
+    assert 0.08 < frac_changed < 0.16

@@ -1,0 +1,67 @@
+"""Event substrate: generators, AER codec, streaming loader."""
+import numpy as np
+import pytest
+
+from repro.events import aer, datasets, stream, synthetic
+
+
+def test_shapes_stream_properties():
+    st = synthetic.shapes_stream(duration_us=50_000, seed=1)
+    assert len(st) > 1000
+    assert np.all(np.diff(st.ts) >= 0)
+    assert st.xy[:, 0].max() < st.width and st.xy[:, 1].max() < st.height
+    assert 0.05 < st.is_corner.mean() < 0.8
+
+
+def test_dynamic_stream_busier_than_shapes():
+    a = synthetic.shapes_stream(duration_us=50_000, seed=2)
+    b = synthetic.dynamic_stream(duration_us=50_000, seed=2)
+    assert len(b) > len(a) * 0.8
+
+
+def test_rate_profile_stream_counts():
+    prof = np.array([1e-3, 4e-3, 1e-3])
+    st = synthetic.rate_profile_stream(prof, window_us=10_000, seed=0)
+    mid = np.sum((st.ts >= 10_000) & (st.ts < 20_000))
+    lo = np.sum(st.ts < 10_000)
+    assert mid > 2 * lo
+
+
+def test_aer_roundtrip():
+    rng = np.random.default_rng(0)
+    xy = np.stack([rng.integers(0, 1280, 100), rng.integers(0, 720, 100)], 1)
+    pol = rng.choice(np.array([-1, 1], np.int8), 100)
+    words = aer.pack(xy.astype(np.int32), pol)
+    xy2, pol2 = aer.unpack(words)
+    np.testing.assert_array_equal(xy, xy2)
+    np.testing.assert_array_equal(pol, pol2)
+
+
+def test_aer_range_check():
+    with pytest.raises(ValueError):
+        aer.pack(np.asarray([[20000, 0]], np.int32), np.asarray([1], np.int8))
+
+
+def test_chunk_iterator_covers_stream():
+    st = synthetic.shapes_stream(duration_us=20_000, seed=3)
+    chunks = list(stream.chunk_iterator(st, 256))
+    n_valid = sum(int(v.sum()) for _, _, v in chunks)
+    assert n_valid == len(st)
+    for xy, ts, v in chunks:
+        assert xy.shape == (256, 2)
+
+
+def test_prefetch_loader():
+    st = synthetic.shapes_stream(duration_us=20_000, seed=4)
+    loader = stream.PrefetchingLoader(st, 512)
+    n = sum(int(np.asarray(v).sum()) for _, _, v in loader)
+    assert n == len(st)
+
+
+def test_dataset_registry():
+    assert set(datasets.DATASETS) == {
+        "driving", "laser", "spinner", "dynamic_dof", "shapes_dof"}
+    prof = datasets.load_profile("driving")
+    spec = datasets.DATASETS["driving"]
+    assert prof.max() <= spec.max_rate_meps + 1e-9
+    assert prof.max() > 0.5 * spec.max_rate_meps

@@ -1,0 +1,66 @@
+"""Hardware-model calibration: every headline ratio of the paper must hold."""
+import numpy as np
+import pytest
+
+from repro.core import hwmodel as hw
+
+
+def test_conventional_baseline():
+    assert hw.patch_latency_ns(1.2, nmc=False) == pytest.approx(392.0)
+    assert hw.max_throughput_meps(1.2, nmc=False) == pytest.approx(2.55, abs=0.05)
+
+
+def test_paper_latencies():
+    # Fig. 9(a): 16 ns @ 1.2 V, 203 ns @ 0.6 V
+    assert hw.patch_latency_ns(1.2) == pytest.approx(15.87, abs=0.1)
+    assert hw.patch_latency_ns(0.6) == pytest.approx(203.0, abs=0.5)
+
+
+def test_paper_speedups():
+    # Fig. 9(b): NMC alone 13.0x, NMC+pipeline 24.7x @ 1.2 V; 1.93x @ 0.6 V
+    conv = hw.patch_latency_ns(1.2, nmc=False)
+    assert conv / hw.patch_latency_ns(1.2, pipeline=False) == pytest.approx(13.0, abs=0.1)
+    assert conv / hw.patch_latency_ns(1.2) == pytest.approx(24.7, abs=0.1)
+    assert conv / hw.patch_latency_ns(0.6) == pytest.approx(1.93, abs=0.02)
+
+
+def test_paper_throughputs():
+    # Fig. 1(b)/10(d): 63.1 -> 4.9 Meps
+    assert hw.max_throughput_meps(1.2) == pytest.approx(63.1, abs=1.0)
+    assert hw.max_throughput_meps(0.6) == pytest.approx(4.93, abs=0.1)
+
+
+def test_paper_energies():
+    # Fig. 9(a)/(c): 139 pJ @ 1.2 V, 26 pJ @ 0.6 V; 1.2x / 6.6x vs conventional
+    assert hw.patch_energy_pj(1.2) == pytest.approx(139.0)
+    assert hw.patch_energy_pj(0.6) == pytest.approx(26.0)
+    conv = hw.patch_energy_pj(1.2, nmc=False)
+    assert conv / hw.patch_energy_pj(1.2) == pytest.approx(1.2, abs=0.05)
+    assert conv / hw.patch_energy_pj(0.6) == pytest.approx(6.6, abs=0.05)
+
+
+def test_phase_fractions_sum():
+    f = hw.phase_fractions()
+    assert sum(f.values()) == pytest.approx(1.0, abs=0.01)
+    assert max(f, key=f.get) == "MO"   # Fig. 10(c): minus-one dominates
+
+
+def test_ber_thresholds():
+    assert hw.ber_at(0.62) == 0.0
+    assert hw.ber_at(0.61) == pytest.approx(0.002)
+    assert hw.ber_at(0.60) == pytest.approx(0.025)
+
+
+def test_monotonic_scaling():
+    vs = np.linspace(0.6, 1.2, 13)
+    lats = [hw.patch_latency_ns(v) for v in vs]
+    es = [hw.patch_energy_pj(v) for v in vs]
+    assert all(a > b for a, b in zip(lats, lats[1:]))   # faster at higher V
+    assert all(a < b for a, b in zip(es, es[1:]))        # cheaper at lower V
+
+
+def test_dvfs_lut_consistency():
+    lut = hw.dvfs_lut()
+    assert [p["vdd"] for p in lut] == sorted(p["vdd"] for p in lut)
+    caps = [p["max_meps"] for p in lut]
+    assert all(a < b for a, b in zip(caps, caps[1:]))

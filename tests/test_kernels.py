@@ -1,0 +1,61 @@
+"""Pallas kernels vs pure-jnp oracles: shape sweeps, interpret mode."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import make_events, make_tos
+from repro.kernels import ops, ref
+
+TOS_CASES = [
+    (64, 64, 16, 7, 225),
+    (180, 240, 96, 7, 225),       # DAVIS240
+    (100, 130, 33, 5, 240),
+    (128, 200, 128, 9, 200),
+    (260, 350, 64, 3, 225),       # > one tile each way
+]
+
+
+@pytest.mark.parametrize("h,w,e,patch,th", TOS_CASES)
+@pytest.mark.parametrize("mode", ["nmc", "batched", "nmc_binned",
+                                  "batched_binned"])
+def test_tos_kernel_vs_oracle(rng, h, w, e, patch, th, mode):
+    xy, valid = make_events(rng, h, w, e)
+    t0 = jnp.asarray(make_tos(rng, h, w, th))
+    gold = ref.tos_seq_ref(t0, jnp.asarray(xy), jnp.asarray(valid),
+                           patch=patch, th=th)
+    out = ops.tos_update_op(t0, jnp.asarray(xy), jnp.asarray(valid),
+                            patch=patch, th=th, mode=mode)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(gold))
+
+
+HARRIS_CASES = [
+    (64, 96, 5, 5), (180, 240, 5, 5), (128, 128, 7, 7), (90, 150, 3, 5),
+    (181, 241, 5, 3),                  # non-multiple-of-strip sizes
+]
+
+
+@pytest.mark.parametrize("h,w,sobel,win", HARRIS_CASES)
+def test_harris_kernel_vs_oracle(rng, h, w, sobel, win):
+    t = jnp.asarray(make_tos(rng, h, w))
+    out = ops.harris_response_op(t, sobel_size=sobel, window_size=win)
+    gold = ref.harris_ref(t, sobel_size=sobel, window_size=win)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(gold),
+                               atol=1e-6, rtol=1e-5)
+
+
+def test_harris_dtype_f32_path(rng):
+    """uint8 and pre-scaled float inputs must agree."""
+    t = make_tos(rng, 64, 64)
+    a = ops.harris_response_op(jnp.asarray(t))
+    b = ref.harris_ref(jnp.asarray(t))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_tos_kernel_empty_chunk(rng):
+    """All-invalid chunk: surface unchanged."""
+    t0 = jnp.asarray(make_tos(rng, 64, 64))
+    xy = jnp.zeros((16, 2), jnp.int32)
+    valid = jnp.zeros((16,), bool)
+    for mode in ("nmc", "batched", "nmc_binned", "batched_binned"):
+        out = ops.tos_update_op(t0, xy, valid, mode=mode)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(t0))

@@ -1,0 +1,64 @@
+"""End-to-end corner-detection pipeline (paper Fig. 2) integration tests."""
+import numpy as np
+import pytest
+
+from repro.core import pipeline, pr_eval, tos
+from repro.events import synthetic
+
+
+@pytest.fixture(scope="module")
+def stream():
+    return synthetic.shapes_stream(duration_us=60_000, seed=0)
+
+
+@pytest.fixture(scope="module")
+def result(stream):
+    cfg = pipeline.PipelineConfig(chunk=512, lut_every_chunks=2)
+    return pipeline.run_pipeline(stream.xy, stream.ts, cfg)
+
+
+def test_pipeline_runs_and_scores(stream, result):
+    assert result.scores.shape[0] == len(stream)
+    assert np.isfinite(result.scores).sum() > 100
+
+
+def test_pipeline_detects_corners(stream, result):
+    scored = np.isfinite(result.scores)
+    auc = pr_eval.pr_auc(result.scores[scored], stream.is_corner[scored])
+    base = stream.is_corner[scored].mean()
+    assert auc > base + 0.05, f"auc {auc} vs base {base}"
+
+
+def test_pipeline_invariant(result):
+    v = result.tos.astype(np.int32)
+    assert np.all((v == 0) | ((v >= 225) & (v <= 255)))
+
+
+def test_ber_small_auc_impact(stream):
+    """Paper §V-C: 2.5% BER costs only ~0.03 AUC."""
+    cfg0 = pipeline.PipelineConfig(chunk=512, lut_every_chunks=2)
+    cfg1 = pipeline.PipelineConfig(chunk=512, lut_every_chunks=2,
+                                   vdd=0.6, inject_ber=True)
+    r0 = pipeline.run_pipeline(stream.xy, stream.ts, cfg0)
+    r1 = pipeline.run_pipeline(stream.xy, stream.ts, cfg1)
+    ok = np.isfinite(r0.scores) & np.isfinite(r1.scores)
+    d = pr_eval.delta_auc(r0.scores[ok], r1.scores[ok], stream.is_corner[ok])
+    assert abs(d) < 0.10   # small impact (paper: 0.027 on shapes)
+
+
+def test_onehot_update_path_equivalent(stream):
+    cfg_a = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    cfg_b = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2,
+                                    use_onehot_update=True)
+    xy, ts = stream.xy[:2048], stream.ts[:2048]
+    ra = pipeline.run_pipeline(xy, ts, cfg_a)
+    rb = pipeline.run_pipeline(xy, ts, cfg_b)
+    np.testing.assert_array_equal(ra.tos, rb.tos)
+
+
+def test_dvfs_pipeline_reduces_energy(stream):
+    cfg_f = pipeline.PipelineConfig(chunk=512, lut_every_chunks=4, dvfs=False)
+    cfg_d = pipeline.PipelineConfig(chunk=512, lut_every_chunks=4, dvfs=True)
+    rf = pipeline.run_pipeline(stream.xy, stream.ts, cfg_f)
+    rd = pipeline.run_pipeline(stream.xy, stream.ts, cfg_d)
+    assert rd.energy_pj < rf.energy_pj   # low-rate stream -> low Vdd chosen

@@ -1,0 +1,41 @@
+"""PR-curve / AUC evaluation."""
+import numpy as np
+import pytest
+
+from repro.core import pr_eval
+
+
+def test_perfect_scores_auc_one():
+    labels = np.array([1, 1, 0, 0, 1, 0], bool)
+    scores = labels.astype(float) + np.random.default_rng(0).normal(0, 0.01, 6)
+    assert pr_eval.pr_auc(scores, labels) > 0.99
+
+
+def test_random_scores_auc_near_base_rate():
+    rng = np.random.default_rng(1)
+    labels = rng.random(5000) < 0.3
+    scores = rng.random(5000)
+    auc = pr_eval.pr_auc(scores, labels)
+    assert abs(auc - 0.3) < 0.05
+
+
+def test_infs_ignored():
+    labels = np.array([1, 0, 1, 0], bool)
+    scores = np.array([2.0, 1.0, -np.inf, -np.inf])
+    assert pr_eval.pr_auc(scores, labels) == pytest.approx(1.0)
+
+
+def test_delta_auc_sign():
+    rng = np.random.default_rng(2)
+    labels = rng.random(2000) < 0.3
+    good = labels + rng.normal(0, 0.3, 2000)
+    bad = labels + rng.normal(0, 1.5, 2000)
+    assert pr_eval.delta_auc(good, bad, labels) > 0
+
+
+def test_monotone_recall():
+    rng = np.random.default_rng(3)
+    labels = rng.random(100) < 0.4
+    scores = rng.random(100)
+    p, r, _ = pr_eval.pr_curve(scores, labels)
+    assert np.all(np.diff(r) >= -1e-12)

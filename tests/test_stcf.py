@@ -1,0 +1,63 @@
+"""STCF denoiser: chunk-exactness and filtering behaviour."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import stcf
+
+
+def _stream(rng, h, w, e, tmax=20000):
+    xy = np.stack([rng.integers(0, w, e), rng.integers(0, h, e)], 1).astype(np.int32)
+    ts = np.sort(rng.integers(0, tmax, e)).astype(np.int32)
+    valid = rng.random(e) < 0.9
+    xy[~valid] = 0
+    return xy, ts, valid
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    e=st.integers(1, 100),
+    tw=st.sampled_from([1000, 5000]),
+    support=st.sampled_from([1, 2, 3]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_chunked_equals_sequential(e, tw, support, seed):
+    rng = np.random.default_rng(seed)
+    h, w = 24, 32
+    xy, ts, valid = _stream(rng, h, w, e)
+    sae0 = stcf.fresh_sae(h, w)
+    s1, k1 = stcf.stcf_sequential(sae0, jnp.asarray(xy), jnp.asarray(ts),
+                                  jnp.asarray(valid), tw=tw, support=support)
+    s2, k2 = stcf.stcf_chunked(sae0, jnp.asarray(xy), jnp.asarray(ts),
+                               jnp.asarray(valid), tw=tw, support=support)
+    assert bool(jnp.all(k1 == k2))
+    assert bool(jnp.all(s1 == s2))
+
+
+def test_isolated_noise_removed():
+    """A lone event with no neighbours is classified as noise."""
+    sae0 = stcf.fresh_sae(32, 32)
+    xy = jnp.asarray([[16, 16]], jnp.int32)
+    ts = jnp.asarray([100], jnp.int32)
+    _, keep = stcf.stcf_chunked(sae0, xy, ts, jnp.asarray([True]))
+    assert not bool(keep[0])
+
+
+def test_correlated_burst_kept():
+    """A tight spatio-temporal burst passes the filter (support=2)."""
+    sae0 = stcf.fresh_sae(32, 32)
+    xy = jnp.asarray([[16, 16], [17, 16], [16, 17], [17, 17]], jnp.int32)
+    ts = jnp.asarray([100, 150, 200, 240], jnp.int32)
+    valid = jnp.ones(4, bool)
+    _, keep = stcf.stcf_chunked(sae0, xy, ts, valid, tw=5000, support=2)
+    assert bool(keep[2]) and bool(keep[3])
+
+
+def test_stale_neighbours_ignored():
+    """Events outside the time window do not count as support."""
+    sae0 = stcf.fresh_sae(16, 16)
+    xy = jnp.asarray([[8, 8], [9, 8], [8, 9]], jnp.int32)
+    ts = jnp.asarray([0, 10, 50_000], jnp.int32)   # third is long after
+    valid = jnp.ones(3, bool)
+    _, keep = stcf.stcf_chunked(sae0, xy, ts, valid, tw=1000, support=2)
+    assert not bool(keep[2])

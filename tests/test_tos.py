@@ -1,0 +1,83 @@
+"""TOS update: batched/onehot formulations are order-exact vs Algorithm 1."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from conftest import make_events, make_tos
+from repro.core import tos
+
+SHAPES = [(16, 16), (32, 48), (180, 240)]
+
+
+@pytest.mark.parametrize("h,w", SHAPES)
+@pytest.mark.parametrize("patch", [3, 7])
+def test_batched_equals_sequential(rng, h, w, patch):
+    xy, valid = make_events(rng, h, w, 64)
+    t0 = jnp.asarray(make_tos(rng, h, w))
+    a = tos.tos_update_sequential(t0, jnp.asarray(xy), jnp.asarray(valid), patch=patch)
+    b = tos.tos_update_batched(t0, jnp.asarray(xy), jnp.asarray(valid), patch=patch)
+    c = tos.tos_update_batched_onehot(t0, jnp.asarray(xy), jnp.asarray(valid), patch=patch)
+    assert bool(jnp.all(a == b))
+    assert bool(jnp.all(a == c))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(8, 40),
+    w=st.integers(8, 40),
+    e=st.integers(1, 80),
+    patch=st.sampled_from([3, 5, 7, 9]),
+    th=st.sampled_from([200, 225, 250]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_batched_exactness(h, w, e, patch, th, seed):
+    """The closed-form chunk update is bit-exact for arbitrary streams."""
+    r = np.random.default_rng(seed)
+    xy, valid = make_events(r, h, w, e)
+    t0 = jnp.asarray(make_tos(r, h, w, th))
+    a = tos.tos_update_sequential(t0, jnp.asarray(xy), jnp.asarray(valid),
+                                  patch=patch, th=th)
+    b = tos.tos_update_batched(t0, jnp.asarray(xy), jnp.asarray(valid),
+                               patch=patch, th=th)
+    assert bool(jnp.all(a == b))
+    assert bool(tos.tos_invariant_ok(b, th))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    e1=st.integers(1, 40), e2=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_chunk_composition(e1, e2, seed):
+    """Updating with chunk A then chunk B == one combined chunk (stream
+    folding is associative)."""
+    r = np.random.default_rng(seed)
+    h, w = 24, 24
+    xy, valid = make_events(r, h, w, e1 + e2)
+    t0 = jnp.asarray(make_tos(r, h, w))
+    xj, vj = jnp.asarray(xy), jnp.asarray(valid)
+    once = tos.tos_update_batched(t0, xj, vj)
+    two = tos.tos_update_batched(
+        tos.tos_update_batched(t0, xj[:e1], vj[:e1]), xj[e1:], vj[e1:]
+    )
+    assert bool(jnp.all(once == two))
+
+
+def test_centre_set_and_decrement(rng):
+    """A single event: centre == 255, patch decremented w/ threshold."""
+    t0 = jnp.full((11, 11), 255, jnp.uint8)
+    xy = jnp.asarray([[5, 5]], jnp.int32)
+    out = tos.tos_update_sequential(t0, xy, jnp.asarray([True]))
+    out = np.asarray(out)
+    assert out[5, 5] == 255
+    assert out[2, 2] == 254 and out[8, 8] == 254
+    assert out[1, 1] == 255  # outside 7x7 patch
+
+
+def test_threshold_zeroing():
+    t0 = jnp.full((9, 9), 225, jnp.uint8)     # exactly at TH
+    xy = jnp.asarray([[4, 4]], jnp.int32)
+    out = np.asarray(tos.tos_update_sequential(t0, xy, jnp.asarray([True])))
+    assert out[4, 4] == 255
+    assert out[3, 3] == 0                     # 224 < TH -> 0

@@ -1,0 +1,126 @@
+"""Optimizer, checkpointing, fault tolerance, compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ck
+from repro.train import compression as comp
+from repro.train.fault_tolerance import StragglerMonitor, TrainSupervisor, elastic_remesh
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update, cosine_lr
+
+
+def test_adamw_minimises_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=1, total_steps=200)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = adamw_init(params, cfg)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}
+        params, state, m = adamw_update(params, grads, state, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.5
+
+
+def test_grad_clip_bounds_update():
+    cfg = AdamWConfig(lr=1.0, clip_norm=1.0, weight_decay=0.0,
+                      warmup_steps=1, total_steps=10)
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params, cfg)
+    _, _, m = adamw_update(params, {"w": jnp.asarray([1e6, 0.0, 0.0])}, state, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(1e6)
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(cosine_lr(cfg, s)) for s in [0, 5, 10, 55, 100]]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert lrs[3] < lrs[2]
+    assert lrs[4] == pytest.approx(0.0, abs=1e-6)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 4), jnp.bfloat16)},
+            "step": jnp.int32(7)}
+    ck.save(str(tmp_path), 3, tree, extra={"data_cursor": 3})
+    restored, extra = ck.restore(str(tmp_path), tree)
+    assert extra["data_cursor"] == 3
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.arange(10))
+    assert str(restored["b"]["c"].dtype) == "bfloat16"
+
+
+def test_checkpoint_latest_pointer(tmp_path):
+    tree = {"x": jnp.zeros(2)}
+    ck.save(str(tmp_path), 1, tree)
+    ck.save(str(tmp_path), 5, tree)
+    assert ck.latest_step(str(tmp_path)) == 5
+
+
+def test_checkpoint_async(tmp_path):
+    tree = {"x": jnp.arange(5)}
+    t = ck.save_async(str(tmp_path), 2, tree)
+    t.join()
+    restored, _ = ck.restore(str(tmp_path), tree)
+    np.testing.assert_array_equal(np.asarray(restored["x"]), np.arange(5))
+
+
+def test_supervisor_resumes_from_checkpoint(tmp_path):
+    """Kill after a few steps; a fresh supervisor must resume, not restart."""
+    calls = []
+
+    def step_fn(params, opt, batch):
+        params = {"w": params["w"] + 1}
+        calls.append(int(params["w"][0]))
+        return params, opt, {"loss": jnp.float32(1.0)}
+
+    def batch_fn(step):
+        return {}
+
+    sup = TrainSupervisor(str(tmp_path), ckpt_every=2)
+    p0 = {"w": jnp.zeros(1)}
+    p1, _ = sup.run(step_fn, p0, {}, batch_fn, n_steps=5)
+    assert int(p1["w"][0]) == 5
+
+    # second run resumes from the final checkpoint (step 5): no extra steps
+    sup2 = TrainSupervisor(str(tmp_path), ckpt_every=2)
+    p2, _ = sup2.run(step_fn, p0, {}, batch_fn, n_steps=5)
+    assert int(p2["w"][0]) == 5
+
+
+def test_straggler_monitor():
+    m = StragglerMonitor(alpha=0.5, factor=2.0)
+    for s in range(5):
+        assert not m.observe(s, 1.0)
+    assert m.observe(5, 10.0)
+    assert m.flagged and m.flagged[0][0] == 5
+
+
+def test_elastic_remesh_shrinks_data_axis():
+    mesh = elastic_remesh(1, model=1)
+    assert mesh.shape["data"] == 1 and mesh.shape["model"] == 1
+
+
+def test_int8_quant_error_bound():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(0, 1, (1000,)), jnp.float32)
+    q, s, shape, pad = comp.quant_int8(g)
+    back = comp.dequant_int8(q, s, shape, pad)
+    err = np.abs(np.asarray(back) - np.asarray(g))
+    # max error <= scale/2 per block; scale ~ max|g|/127
+    assert err.max() <= float(np.abs(np.asarray(g)).max()) / 127 + 1e-6
+
+
+def test_error_feedback_reduces_bias():
+    rng = np.random.default_rng(1)
+    g = {"w": jnp.asarray(rng.normal(0, 1, (512,)), jnp.float32)}
+    ef = comp.ErrorFeedback(g)
+    total_plain = np.zeros(512)
+    total_ef = np.zeros(512)
+    for _ in range(20):
+        total_plain += np.asarray(comp.fake_quant_int8(g)["w"])
+        total_ef += np.asarray(ef.apply(g)["w"])
+    true = 20 * np.asarray(g["w"])
+    assert np.abs(total_ef - true).mean() <= np.abs(total_plain - true).mean() + 1e-4
