@@ -52,4 +52,37 @@ def rows():
     out.append(("sw_batched_us_per_kevent", t_bat * 1e6, e / t_bat / 1e6))
     out.append(("sw_onehot_us_per_kevent", t_one * 1e6, e / t_one / 1e6))
     out.append(("sw_batched_speedup_vs_seq", 0.0, t_seq / t_bat))
+    out.extend(_pipeline_rows())
     return out
+
+
+def _pipeline_rows():
+    """E2E pipeline: device-resident lax.scan vs the host-loop reference.
+
+    The scan pipeline costs exactly one blocking host transfer per stream;
+    the reference blocks O(n_chunks) times (the ``host_syncs`` rows measure
+    both).  Wall times are steady-state (both paths warmed first).
+    """
+    from repro.core import pipeline as pipe
+    from repro.events import synthetic
+
+    st = synthetic.shapes_stream(duration_us=60_000, seed=0)
+    cfg = pipe.PipelineConfig(chunk=512, lut_every_chunks=2)
+    n = len(st)
+
+    pipe.run_pipeline(st.xy, st.ts, cfg)              # warm (jit compile)
+    pipe.run_pipeline_reference(st.xy, st.ts, cfg)
+    t0 = time.perf_counter()
+    r_scan = pipe.run_pipeline(st.xy, st.ts, cfg)
+    t_scan = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    r_ref = pipe.run_pipeline_reference(st.xy, st.ts, cfg)
+    t_ref = time.perf_counter() - t0
+
+    return [
+        ("pipeline_ref_us_per_event", t_ref * 1e6, t_ref / n * 1e6),
+        ("pipeline_scan_us_per_event", t_scan * 1e6, t_scan / n * 1e6),
+        ("pipeline_scan_speedup_vs_ref", 0.0, t_ref / t_scan),
+        ("pipeline_ref_host_syncs", 0.0, float(r_ref.host_syncs)),
+        ("pipeline_scan_host_syncs", 0.0, float(r_scan.host_syncs)),
+    ]

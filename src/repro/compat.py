@@ -1,0 +1,42 @@
+"""Version-compatibility shims for moving parts of the JAX API surface.
+
+Keep every cross-version resolution here so call sites stay on one spelling.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+__all__ = ["shard_map"]
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh,
+    in_specs,
+    out_specs,
+    check_vma: bool | None = None,
+) -> Callable:
+    """Resolve ``shard_map`` across JAX versions.
+
+    Newer JAX exposes ``jax.shard_map`` with a ``check_vma`` flag; older
+    versions only have ``jax.experimental.shard_map.shard_map`` where the
+    same knob is spelled ``check_rep``.  ``check_vma=None`` means "library
+    default" on either version.
+    """
+    kwargs: dict[str, Any] = {}
+    if hasattr(jax, "shard_map"):
+        if check_vma is not None:
+            kwargs["check_vma"] = check_vma
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    if check_vma is not None:
+        kwargs["check_rep"] = check_vma
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs
+    )

@@ -18,7 +18,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
-__all__ = ["encode5", "decode5", "inject_write_errors", "corrupt_surface"]
+__all__ = [
+    "encode5",
+    "decode5",
+    "inject_write_errors",
+    "inject_write_errors_at",
+    "corrupt_surface",
+]
 
 _BASE = 224  # value encoded by code 1 is _BASE + 1 = 225 = default TH
 
@@ -44,16 +50,32 @@ def inject_write_errors(key: jax.Array, tos: jax.Array, ber: float) -> jax.Array
     Matches the macro: value-0 pixels skip write-back, hence cannot corrupt;
     flips act on the 5 physical bits, so outputs stay in {0} U [225, 255]
     modulo a corrupted code of 0 (which decodes to value 0 — also faithful:
-    an all-bits-low write is a legal cell state).
+    an all-bits-low write is a legal cell state).  Static-BER wrapper over
+    ``inject_write_errors_at`` so both spellings share one set of draws.
     """
     if ber <= 0.0:
         return tos
+    return inject_write_errors_at(key, tos, jnp.float32(ber))
+
+
+@jax.jit
+def inject_write_errors_at(
+    key: jax.Array, tos: jax.Array, ber: jax.Array
+) -> jax.Array:
+    """``inject_write_errors`` with a *traced* BER (for use inside lax.scan).
+
+    Draws are identical to the static version for the same key (bernoulli
+    samples the uniform independently of ``ber``), and ``ber == 0`` is an
+    exact identity via select rather than a Python branch, so the scan
+    pipeline matches the host-loop reference bit-for-bit at every voltage.
+    """
     code = encode5(tos).astype(jnp.int32)
     flips = jax.random.bernoulli(key, ber, shape=(*tos.shape, 5))
     bits = jnp.sum(flips.astype(jnp.int32) * (2 ** jnp.arange(5)), axis=-1)
     corrupted = jnp.bitwise_xor(code, bits)
     out = jnp.where(code > 0, corrupted, code)   # zero pixels: no write-back
-    return decode5(out.astype(jnp.uint8))
+    out = decode5(out.astype(jnp.uint8))
+    return jnp.where(ber > 0, out, tos)
 
 
 def corrupt_surface(key: jax.Array, tos: jax.Array, vdd: float) -> jax.Array:

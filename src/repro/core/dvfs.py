@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.core import hwmodel
 
-__all__ = ["DvfsConfig", "simulate_dvfs", "DvfsTrace"]
+__all__ = ["DvfsConfig", "simulate_dvfs", "DvfsTrace", "per_chunk_vdd"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -147,3 +147,34 @@ def simulate_dvfs(
         energy_pj=energy,
         dropped=dropped.astype(np.int64),
     )
+
+
+def per_chunk_vdd(
+    ts_us: np.ndarray,
+    n_chunks: int,
+    chunk: int,
+    cfg: DvfsConfig = DvfsConfig(),
+    *,
+    n_events: int | None = None,
+) -> np.ndarray:
+    """Operating voltage for each fixed-size event chunk (float64, host).
+
+    A chunk runs at the Vdd the controller chose for the half-window
+    containing its *first* event (the controller is causal: estimates close
+    before the chunk starts).  Precomputed on the host once per stream so
+    the device-resident scan consumes it as a plain per-chunk input array —
+    no host round-trip inside the fold.
+    """
+    ts = np.asarray(ts_us, dtype=np.int64)
+    if n_events is None:
+        n_events = len(ts)
+    if n_chunks == 0:
+        return np.zeros((0,), np.float64)
+    trace = simulate_dvfs(ts, cfg)
+    half = cfg.half_us
+    win_of_ts = np.minimum(ts // half, len(trace.vdd) - 1)
+    out = np.zeros((n_chunks,), np.float64)
+    for c in range(n_chunks):
+        w = int(win_of_ts[min(c * chunk, n_events - 1)]) if n_events else 0
+        out[c] = float(trace.vdd[w])
+    return out

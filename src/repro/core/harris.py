@@ -49,18 +49,29 @@ def sobel_kernels(size: int = DEFAULT_SOBEL) -> tuple[np.ndarray, np.ndarray]:
     return gx.astype(np.float32), gy.astype(np.float32)
 
 
-def _conv2_valid(img: jax.Array, ker: np.ndarray | jax.Array) -> jax.Array:
-    """2-D valid correlation, NCHW conv under the hood."""
-    lhs = img[None, None, :, :].astype(jnp.float32)
-    rhs = jnp.asarray(ker)[None, None, :, :]
-    out = jax.lax.conv_general_dilated(
-        lhs,
-        rhs,
-        window_strides=(1, 1),
-        padding="VALID",
-        dimension_numbers=("NCHW", "OIHW", "NCHW"),
-    )
-    return out[0, 0]
+def _conv2_valid(img: jax.Array, ker: np.ndarray) -> jax.Array:
+    """2-D valid correlation as an explicitly-unrolled shift-and-add.
+
+    Deliberately NOT ``lax.conv``: the XLA runtime convolution lowers
+    differently at top level vs inside a ``lax.scan`` body (different
+    accumulation order), which would break the bit-exactness contract
+    between the host-loop reference pipeline and the device-resident scan.
+    A fixed left-fold over the (static, small) kernel taps emits identical
+    HLO — hence identical floats — in both contexts.
+    """
+    ker = np.asarray(ker)
+    kh, kw = ker.shape
+    h = img.shape[0] - kh + 1
+    w = img.shape[1] - kw + 1
+    img = img.astype(jnp.float32)
+    out = jnp.zeros((h, w), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            tap = float(ker[i, j])
+            if tap == 0.0:
+                continue
+            out = out + tap * jax.lax.slice(img, (i, j), (i + h, j + w))
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("sobel_size", "window_size", "k"))

@@ -4,15 +4,37 @@
            -> [BER injection at the chosen Vdd] -> Harris LUT (FBF)
            -> per-event corner scores.
 
-The stream is folded chunk-by-chunk; the Harris LUT refreshes every
-``lut_every_chunks`` chunks (luvHarris's "as often as possible" FBF pass).
+Two executions of the same dataflow:
+
+``run_pipeline`` — the **device-resident scan**.  The stream is pre-chunked
+on the host into ``(n_chunks, chunk, ...)`` arrays and folded by one jitted
+``lax.scan`` carrying ``(surface, sae, lut, lut_ready, key)``.  The Harris
+LUT refresh (luvHarris's "as often as possible" FBF pass) is a ``lax.cond``
+on the chunk index; the DVFS voltage, the implied BER, and the hw-model
+energy/latency coefficients are precomputed per chunk on the host and ride
+along as scan inputs; per-chunk kept counts accumulate on device.  The host
+blocks exactly once — a single ``device_get`` of the final state — instead
+of the O(n_chunks) per-chunk syncs of the reference loop.
+
+``run_pipeline_reference`` — the original host Python loop, kept as the
+bit-exact oracle (property-tested: scores, kept mask, final TOS, and vdd
+trace agree exactly with the scan).
+
+The ``backend`` config axis routes the TOS update through the Pallas
+kernels (``repro.kernels.ops.tos_update_op``): ``"jnp"`` uses the closed-form
+batched update, ``"pallas_nmc"`` the paper-faithful VMEM-streaming kernel,
+``"pallas_batched"`` the fused MXU formulation.  ``run_pipeline_batched``
+vmaps the scan over B independent streams (multi-camera / multi-user
+serving).
+
 Per-event scores are read from the *latest available* LUT — exactly the
-decoupling the paper inherits from luvHarris.
+EBE/FBF decoupling the paper inherits from luvHarris.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+import functools
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -24,8 +46,18 @@ from repro.core import harris as harris_mod
 from repro.core import hwmodel
 from repro.core import stcf as stcf_mod
 from repro.core import tos as tos_mod
+from repro.events import stream as stream_mod
 
-__all__ = ["PipelineConfig", "PipelineResult", "run_pipeline"]
+__all__ = [
+    "BACKENDS",
+    "PipelineConfig",
+    "PipelineResult",
+    "run_pipeline",
+    "run_pipeline_reference",
+    "run_pipeline_batched",
+]
+
+BACKENDS = ("jnp", "pallas_nmc", "pallas_batched")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,6 +83,9 @@ class PipelineConfig:
     inject_ber: bool = False
     seed: int = 0
     use_onehot_update: bool = False  # MXU formulation of the batched update
+    # execution
+    backend: str = "jnp"             # "jnp" | "pallas_nmc" | "pallas_batched"
+    interpret: Optional[bool] = None  # Pallas interpret; None = auto (non-TPU)
 
 
 @dataclasses.dataclass
@@ -62,16 +97,181 @@ class PipelineResult:
     vdd_trace: np.ndarray       # per-chunk operating voltage
     energy_pj: float            # total dynamic energy (hw model)
     latency_ns_per_event: float # mean modelled latency
+    host_syncs: int = 1         # host<->device blocking transfers incurred
 
 
-def _pad_chunk(xy: np.ndarray, ts: np.ndarray, chunk: int):
-    e = xy.shape[0]
-    pad = (-e) % chunk
-    if pad:
-        xy = np.concatenate([xy, np.zeros((pad, 2), xy.dtype)], 0)
-        ts = np.concatenate([ts, np.full((pad,), ts[-1] if e else 0, ts.dtype)], 0)
-    valid = np.arange(e + pad) < e
-    return xy, ts, valid, e
+# ---------------------------------------------------------------------------
+# Shared host-side preparation
+# ---------------------------------------------------------------------------
+
+
+def _select_update(cfg: PipelineConfig) -> Callable:
+    """TOS chunk-update callable for the configured backend."""
+    if cfg.backend == "jnp":
+        fn = (
+            tos_mod.tos_update_batched_onehot
+            if cfg.use_onehot_update
+            else tos_mod.tos_update_batched
+        )
+        return lambda s, xy, v: fn(s, xy, v, patch=cfg.patch, th=cfg.th)
+    if cfg.backend in ("pallas_nmc", "pallas_batched"):
+        from repro.kernels import ops  # deferred: keep jnp path Pallas-free
+
+        mode = "nmc" if cfg.backend == "pallas_nmc" else "batched"
+        return lambda s, xy, v: ops.tos_update_op(
+            s, xy, v, patch=cfg.patch, th=cfg.th, mode=mode,
+            interpret=cfg.interpret,
+        )
+    raise ValueError(f"unknown backend {cfg.backend!r}; expected {BACKENDS}")
+
+
+def _chunk_vdd(ts: np.ndarray, n_chunks: int, n_events: int,
+               cfg: PipelineConfig) -> np.ndarray:
+    if cfg.dvfs:
+        return dvfs_mod.per_chunk_vdd(
+            ts, n_chunks, cfg.chunk, cfg.dvfs_cfg, n_events=n_events
+        )
+    return np.full((n_chunks,), cfg.vdd, np.float64)
+
+
+def _accounting(n_kept: Sequence[int], vdd: np.ndarray) -> tuple[float, float]:
+    """Chunk-ordered float64 energy/latency accumulation (hw model)."""
+    energy_pj = 0.0
+    latency_ns = 0.0
+    for nk, v in zip(n_kept, vdd):
+        energy_pj += int(nk) * hwmodel.patch_energy_pj(float(v))
+        latency_ns += int(nk) * hwmodel.patch_latency_ns(float(v))
+    return energy_pj, latency_ns
+
+
+def _fresh_state(cfg: PipelineConfig):
+    surface = tos_mod.tos_new(cfg.height, cfg.width)
+    sae = stcf_mod.fresh_sae(cfg.height, cfg.width)
+    lut = jnp.full((cfg.height, cfg.width), -jnp.inf, dtype=jnp.float32)
+    return surface, sae, lut
+
+
+# ---------------------------------------------------------------------------
+# Device-resident scan (the production path)
+# ---------------------------------------------------------------------------
+
+
+def _scan_impl(cfg, chunks_xy, chunks_ts, chunks_valid, ber_arr,
+               surface, sae, lut, key):
+    """One jitted fold over all chunks.  Returns final state + stacked
+    per-chunk (scores, keep, n_kept)."""
+    update = _select_update(cfg)
+    n_chunks = chunks_xy.shape[0]
+
+    def body(carry, xs):
+        surface, sae, lut, lut_ready, key = carry
+        cxy, cts, cval, ber_c, c = xs
+
+        sae, keep = stcf_mod.stcf_step(
+            sae, cxy, cts, cval,
+            enabled=cfg.stcf_enabled,
+            support=cfg.stcf_support, tw=cfg.stcf_tw_us,
+        )
+        surface = update(surface, cxy, keep)
+
+        if cfg.inject_ber:
+            key, sub = jax.random.split(key)
+            surface = ber_mod.inject_write_errors_at(sub, surface, ber_c)
+
+        n_kept = jnp.sum(keep).astype(jnp.int32)
+
+        # Tag this chunk's events against the latest available LUT.
+        scores = jnp.where(
+            lut_ready,
+            harris_mod.score_events(lut, cxy, keep),
+            -jnp.inf,
+        ).astype(jnp.float32)
+
+        do_refresh = ((c + 1) % cfg.lut_every_chunks) == 0
+        lut = jax.lax.cond(
+            do_refresh,
+            lambda s: harris_mod.harris_response(
+                s,
+                sobel_size=cfg.sobel_size,
+                window_size=cfg.window_size,
+                k=cfg.harris_k,
+            ),
+            lambda s: lut,
+            surface,
+        )
+        lut_ready = lut_ready | do_refresh
+        return (surface, sae, lut, lut_ready, key), (scores, keep, n_kept)
+
+    init = (surface, sae, lut, jnp.asarray(False), key)
+    xs = (
+        chunks_xy, chunks_ts, chunks_valid, ber_arr,
+        jnp.arange(n_chunks, dtype=jnp.int32),
+    )
+    (surface, sae, lut, _, _), (scores, keep, n_kept) = jax.lax.scan(
+        body, init, xs
+    )
+    return surface, lut, scores, keep, n_kept
+
+
+def _trace_cfg(cfg: PipelineConfig) -> PipelineConfig:
+    """Canonicalize fields the traced scan never reads (vdd/dvfs/seed ride
+    in as data arrays), so config sweeps over them share one compiled scan
+    instead of paying an XLA recompile each."""
+    return dataclasses.replace(
+        cfg, vdd=1.2, dvfs=False, dvfs_cfg=dvfs_mod.DvfsConfig(), seed=0
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _scan_fn(cfg: PipelineConfig):
+    # Donate the carried surface so XLA updates it in place on accelerator
+    # backends (the CPU runtime does not implement donation — skip the
+    # warning there).
+    donate = ("surface",) if jax.default_backend() != "cpu" else ()
+    def run(chunks_xy, chunks_ts, chunks_valid, ber_arr, surface, sae, lut,
+            key):
+        return _scan_impl(cfg, chunks_xy, chunks_ts, chunks_valid, ber_arr,
+                          surface, sae, lut, key)
+    return jax.jit(run, donate_argnames=donate)
+
+
+@functools.lru_cache(maxsize=None)
+def _scan_fn_batched(cfg: PipelineConfig):
+    def run(chunks_xy, chunks_ts, chunks_valid, ber_arr, surface, sae, lut,
+            key):
+        return _scan_impl(cfg, chunks_xy, chunks_ts, chunks_valid, ber_arr,
+                          surface, sae, lut, key)
+    return jax.jit(jax.vmap(run))
+
+
+def _prepare(xy: np.ndarray, ts_us: np.ndarray, cfg: PipelineConfig):
+    xy = np.asarray(xy, dtype=np.int32)
+    ts = np.asarray(ts_us, dtype=np.int64)
+    cxy, cts, cval, n_events = stream_mod.stack_chunks(xy, ts, cfg.chunk)
+    n_chunks = cxy.shape[0]
+    vdd_arr = _chunk_vdd(ts, n_chunks, n_events, cfg)
+    ber_arr = np.asarray(
+        [hwmodel.ber_at(float(v)) for v in vdd_arr], np.float32
+    )
+    return cxy, cts, cval, n_events, vdd_arr, ber_arr
+
+
+def _finalize(cfg, n_events, vdd_arr, surface, lut, scores, keep, n_kept,
+              *, host_syncs: int) -> PipelineResult:
+    scores = np.asarray(scores, np.float32).reshape(-1)[:n_events]
+    kept = np.asarray(keep, bool).reshape(-1)[:n_events]
+    energy_pj, latency_ns = _accounting(np.asarray(n_kept), vdd_arr)
+    n_scored = max(int(kept.sum()), 1)
+    return PipelineResult(
+        scores=scores,
+        kept=kept,
+        tos=np.asarray(surface),
+        lut=np.asarray(lut),
+        vdd_trace=vdd_arr,
+        energy_pj=energy_pj,
+        latency_ns_per_event=latency_ns / n_scored,
+        host_syncs=host_syncs,
+    )
 
 
 def run_pipeline(
@@ -79,69 +279,124 @@ def run_pipeline(
     ts_us: np.ndarray,
     cfg: PipelineConfig = PipelineConfig(),
 ) -> PipelineResult:
-    """Fold a time-sorted event stream through the full detector."""
-    xy = np.asarray(xy, dtype=np.int32)
-    ts = np.asarray(ts_us, dtype=np.int64)
-    xy_p, ts_p, valid_p, n_events = _pad_chunk(xy, ts, cfg.chunk)
-    n_chunks = xy_p.shape[0] // cfg.chunk
+    """Fold a time-sorted event stream through the full detector on device.
 
-    update = (
-        tos_mod.tos_update_batched_onehot
-        if cfg.use_onehot_update
-        else tos_mod.tos_update_batched
-    )
-
-    surface = tos_mod.tos_new(cfg.height, cfg.width)
-    sae = stcf_mod.fresh_sae(cfg.height, cfg.width)
-    lut = jnp.full((cfg.height, cfg.width), -jnp.inf, dtype=jnp.float32)
-    lut_ready = False
-
+    One jitted ``lax.scan`` over pre-chunked arrays; the host blocks once,
+    on the final ``device_get``.  Bit-exact vs ``run_pipeline_reference``.
+    """
+    cxy, cts, cval, n_events, vdd_arr, ber_arr = _prepare(xy, ts_us, cfg)
+    surface, sae, lut = _fresh_state(cfg)
     key = jax.random.PRNGKey(cfg.seed)
 
-    # DVFS: estimate rates once over the whole stream (the controller is
-    # causal — estimates only use closed counters).
-    if cfg.dvfs:
-        trace = dvfs_mod.simulate_dvfs(ts, cfg.dvfs_cfg)
-        half = cfg.dvfs_cfg.half_us
-        win_of_ts = np.minimum(ts // half, len(trace.vdd) - 1)
-    else:
-        trace = None
+    out = _scan_fn(_trace_cfg(cfg))(
+        jnp.asarray(cxy), jnp.asarray(cts), jnp.asarray(cval),
+        jnp.asarray(ber_arr), surface, sae, lut, key,
+    )
+    surface, lut_out, scores, keep, n_kept = jax.device_get(out)  # sync #1
+    return _finalize(cfg, n_events, vdd_arr, surface, lut_out, scores, keep,
+                     n_kept, host_syncs=1)
 
-    scores = np.full((xy_p.shape[0],), -np.inf, dtype=np.float32)
-    kept_all = np.zeros((xy_p.shape[0],), dtype=bool)
-    vdd_trace = np.zeros((n_chunks,), dtype=np.float64)
+
+def run_pipeline_batched(
+    xy: np.ndarray,
+    ts_us: np.ndarray,
+    cfg: PipelineConfig = PipelineConfig(),
+    *,
+    seeds: Optional[Sequence[int]] = None,
+) -> list[PipelineResult]:
+    """Run B independent equal-length streams at once (vmapped scan).
+
+    ``xy``: (B, E, 2), ``ts_us``: (B, E), each row time-sorted.  Every
+    stream gets its own TOS/SAE/LUT/key state and its own host-precomputed
+    DVFS trace; result ``i`` equals ``run_pipeline(xy[i], ts_us[i], cfg)``
+    bit-exactly (with ``seeds[i]`` as that stream's PRNG seed, default
+    ``cfg.seed``).  The whole batch costs one host sync.
+    """
+    xy = np.asarray(xy, dtype=np.int32)
+    ts = np.asarray(ts_us, dtype=np.int64)
+    b = xy.shape[0]
+    if seeds is None:
+        seeds = [cfg.seed] * b
+
+    preps = [_prepare(xy[i], ts[i], cfg) for i in range(b)]
+    cxy = jnp.asarray(np.stack([p[0] for p in preps]))
+    cts = jnp.asarray(np.stack([p[1] for p in preps]))
+    cval = jnp.asarray(np.stack([p[2] for p in preps]))
+    ber = jnp.asarray(np.stack([p[5] for p in preps]))
+
+    surface, sae, lut = _fresh_state(cfg)
+    surfaces = jnp.broadcast_to(surface, (b, *surface.shape))
+    saes = jnp.broadcast_to(sae, (b, *sae.shape))
+    luts = jnp.broadcast_to(lut, (b, *lut.shape))
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+
+    out = _scan_fn_batched(_trace_cfg(cfg))(cxy, cts, cval, ber, surfaces,
+                                            saes, luts, keys)
+    surfaces, luts, scores, keep, n_kept = jax.device_get(out)  # sync #1
+
+    results = []
+    for i in range(b):
+        n_events, vdd_arr = preps[i][3], preps[i][4]
+        results.append(
+            _finalize(cfg, n_events, vdd_arr, surfaces[i], luts[i],
+                      scores[i], keep[i], n_kept[i], host_syncs=1)
+        )
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Host-loop reference (the bit-exact oracle; O(n_chunks) host syncs)
+# ---------------------------------------------------------------------------
+
+
+def run_pipeline_reference(
+    xy: np.ndarray,
+    ts_us: np.ndarray,
+    cfg: PipelineConfig = PipelineConfig(),
+) -> PipelineResult:
+    """Chunk-by-chunk host loop — the original pipeline, kept as the oracle.
+
+    Each chunk blocks the host at least once (``int(jnp.sum(keep))``), which
+    is exactly the latency bug the scan path removes; ``host_syncs`` counts
+    the blocking transfers so benchmarks can report the difference.
+    """
+    cxy_all, cts_all, cval_all, n_events, vdd_arr, ber_arr = _prepare(
+        xy, ts_us, cfg
+    )
+    n_chunks = cxy_all.shape[0]
+    update = _select_update(cfg)
+
+    surface, sae, lut = _fresh_state(cfg)
+    lut_ready = False
+    key = jax.random.PRNGKey(cfg.seed)
+
+    scores = np.full((n_chunks * cfg.chunk,), -np.inf, dtype=np.float32)
+    kept_all = np.zeros((n_chunks * cfg.chunk,), dtype=bool)
     total_energy_pj = 0.0
     total_latency_ns = 0.0
+    host_syncs = 0
 
     for c in range(n_chunks):
         sl = slice(c * cfg.chunk, (c + 1) * cfg.chunk)
-        cxy = jnp.asarray(xy_p[sl])
-        cts = jnp.asarray(ts_p[sl].astype(np.int32))
-        cval = jnp.asarray(valid_p[sl])
+        cxy = jnp.asarray(cxy_all[c])
+        cts = jnp.asarray(cts_all[c])
+        cval = jnp.asarray(cval_all[c])
 
-        if cfg.stcf_enabled:
-            sae, keep = stcf_mod.stcf_chunked(
-                sae, cxy, cts, cval,
-                support=cfg.stcf_support, tw=cfg.stcf_tw_us,
-            )
-        else:
-            keep = cval
+        sae, keep = stcf_mod.stcf_step(
+            sae, cxy, cts, cval,
+            enabled=cfg.stcf_enabled,
+            support=cfg.stcf_support, tw=cfg.stcf_tw_us,
+        )
 
-        # Operating voltage for this chunk (from the first event's window).
-        if cfg.dvfs:
-            w = int(win_of_ts[min(c * cfg.chunk, n_events - 1)]) if n_events else 0
-            vdd = float(trace.vdd[w])
-        else:
-            vdd = cfg.vdd
-        vdd_trace[c] = vdd
-
-        surface = update(surface, cxy, keep, patch=cfg.patch, th=cfg.th)
+        vdd = float(vdd_arr[c])
+        surface = update(surface, cxy, keep)
 
         if cfg.inject_ber:
             key, sub = jax.random.split(key)
             surface = ber_mod.corrupt_surface(sub, surface, vdd)
 
-        n_kept = int(jnp.sum(keep))
+        n_kept = int(jnp.sum(keep))          # <-- per-chunk host sync
+        host_syncs += 1
         total_energy_pj += n_kept * hwmodel.patch_energy_pj(vdd)
         total_latency_ns += n_kept * hwmodel.patch_latency_ns(vdd)
 
@@ -149,7 +404,9 @@ def run_pipeline(
         if lut_ready:
             s = harris_mod.score_events(lut, cxy, keep)
             scores[sl] = np.asarray(s, dtype=np.float32)
+            host_syncs += 1
         kept_all[sl] = np.asarray(keep)
+        host_syncs += 1
 
         if (c + 1) % cfg.lut_every_chunks == 0:
             lut = harris_mod.harris_response(
@@ -166,7 +423,8 @@ def run_pipeline(
         kept=kept_all[:n_events],
         tos=np.asarray(surface),
         lut=np.asarray(lut),
-        vdd_trace=vdd_trace,
+        vdd_trace=vdd_arr,
         energy_pj=total_energy_pj,
         latency_ns_per_event=total_latency_ns / n_scored,
+        host_syncs=host_syncs,
     )

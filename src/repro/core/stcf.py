@@ -24,7 +24,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-__all__ = ["stcf_sequential", "stcf_chunked", "fresh_sae"]
+__all__ = ["stcf_sequential", "stcf_chunked", "stcf_step", "fresh_sae"]
 
 DEFAULT_RADIUS = 1          # 3x3 neighbourhood, as in Guo & Delbruck
 DEFAULT_SUPPORT = 2         # paper: "enough supporting events (e.g., 2)"
@@ -110,3 +110,26 @@ def stcf_chunked(
     upd = jnp.where(valid, t, _NEVER)
     new_sae = sae.at[y, x].max(upd)
     return new_sae, keep
+
+
+def stcf_step(
+    sae: jax.Array,
+    xy: jax.Array,
+    ts: jax.Array,
+    valid: jax.Array,
+    *,
+    enabled: bool = True,
+    radius: int = DEFAULT_RADIUS,
+    support: int = DEFAULT_SUPPORT,
+    tw: int = 5000,
+) -> tuple[jax.Array, jax.Array]:
+    """One pipeline chunk step: denoise + SAE refresh, identity when disabled.
+
+    Shared by the host-loop reference pipeline and the device-resident scan
+    body; ``enabled`` must be a Python bool (it is a trace-time branch).
+    """
+    if not enabled:
+        return sae, valid
+    return stcf_chunked(
+        sae, xy, ts, valid, radius=radius, support=support, tw=tw
+    )

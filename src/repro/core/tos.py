@@ -242,7 +242,15 @@ def tos_invariant_ok(tos: jax.Array, th: int = DEFAULT_TH) -> jax.Array:
 
 
 class TosStream(NamedTuple):
-    """Carry state when folding a long event stream chunk-by-chunk."""
+    """Carry state when folding a long event stream chunk-by-chunk.
+
+    A NamedTuple is a pytree, so a ``TosStream`` can ride directly in a
+    ``jax.lax.scan`` carry — the device-resident pipeline folds chunks this
+    way with zero host round-trips.  ``update`` accepts any order-exact
+    chunk-update callable (the jnp closed forms here, or the Pallas kernels
+    via ``repro.kernels.ops.tos_update_op``) so the same carry works across
+    backends.
+    """
 
     surface: jax.Array
 
@@ -250,5 +258,14 @@ class TosStream(NamedTuple):
     def init(height: int, width: int) -> "TosStream":
         return TosStream(tos_new(height, width))
 
-    def update(self, xy, valid, *, patch=DEFAULT_PATCH, th=DEFAULT_TH) -> "TosStream":
-        return TosStream(tos_update_batched(self.surface, xy, valid, patch=patch, th=th))
+    def update(
+        self,
+        xy,
+        valid,
+        *,
+        patch=DEFAULT_PATCH,
+        th=DEFAULT_TH,
+        update_fn=None,
+    ) -> "TosStream":
+        fn = tos_update_batched if update_fn is None else update_fn
+        return TosStream(fn(self.surface, xy, valid, patch=patch, th=th))

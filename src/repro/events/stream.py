@@ -4,6 +4,10 @@ The serving/training analogue of a data pipeline for event streams: fixed-size
 chunks (padding the tail), background prefetch of the next chunk while the
 current one is being consumed, and deterministic resume (chunk index is the
 only cursor — checkpoint-friendly).
+
+``stack_chunks`` is the batch counterpart: it pads + reshapes a whole stream
+into ``(n_chunks, chunk, ...)`` arrays so the device-resident pipeline can
+``lax.scan`` over the leading axis with a single host->device transfer.
 """
 from __future__ import annotations
 
@@ -16,7 +20,7 @@ import numpy as np
 
 from repro.events.synthetic import EventStream
 
-__all__ = ["chunk_iterator", "PrefetchingLoader"]
+__all__ = ["chunk_iterator", "stack_chunks", "PrefetchingLoader"]
 
 
 def chunk_iterator(
@@ -38,32 +42,110 @@ def chunk_iterator(
         yield xy, ts, valid
 
 
+def stack_chunks(
+    xy: np.ndarray, ts: np.ndarray, chunk: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+    """Pad a stream to a chunk multiple and stack into scan-ready arrays.
+
+    Returns ``(xy (C, chunk, 2) int32, ts (C, chunk) int32,
+    valid (C, chunk) bool, n_events)``.  Padding slots sit at the in-bounds
+    dummy pixel (0, 0) and replicate the last timestamp, exactly like
+    ``chunk_iterator`` — padded events carry ``valid=False`` and are inert.
+    """
+    xy = np.asarray(xy, np.int32)
+    ts = np.asarray(ts)
+    e = xy.shape[0]
+    pad = (-e) % chunk
+    if pad:
+        xy = np.concatenate([xy, np.zeros((pad, 2), np.int32)], 0)
+        ts = np.concatenate(
+            [ts, np.full((pad,), ts[-1] if e else 0, ts.dtype)], 0
+        )
+    c = (e + pad) // chunk
+    valid = np.arange(e + pad) < e
+    return (
+        xy.reshape(c, chunk, 2),
+        ts.astype(np.int32).reshape(c, chunk),
+        valid.reshape(c, chunk),
+        e,
+    )
+
+
 class PrefetchingLoader:
-    """Background-thread prefetch of device-put chunks (double buffering)."""
+    """Background-thread prefetch of device-put chunks (double buffering).
+
+    Worker exceptions are re-raised in the consumer thread (on the ``next``
+    that would otherwise have silently ended the iteration), and ``close()``
+    stops the worker early — use it (or the context manager) when abandoning
+    a partially-consumed stream so the thread does not linger on a full
+    queue.
+    """
 
     def __init__(self, stream: EventStream, chunk: int, *, depth: int = 2,
                  start_chunk: int = 0):
         self._it = chunk_iterator(stream, chunk, start_chunk=start_chunk)
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._done = object()
+        self._err: BaseException | None = None
+        self._stop = threading.Event()
+        self._closed = False
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
+
+    def _put(self, item) -> bool:
+        """Blocking put that aborts when close() is requested."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
 
     def _worker(self):
         try:
             for xy, ts, valid in self._it:
-                self._q.put(
-                    (jax.device_put(xy), jax.device_put(ts.astype(np.int32)),
-                     jax.device_put(valid))
+                item = (
+                    jax.device_put(xy),
+                    jax.device_put(ts.astype(np.int32)),
+                    jax.device_put(valid),
                 )
-        finally:
-            self._q.put(self._done)
+                if not self._put(item):
+                    return
+        except BaseException as e:  # propagate to the consumer, don't swallow
+            self._err = e
+        self._put(self._done)
 
     def __iter__(self):
         return self
 
     def __next__(self):
+        if self._closed:
+            raise StopIteration
         item = self._q.get()
         if item is self._done:
+            if self._err is not None:
+                err, self._err = self._err, None
+                raise err
             raise StopIteration
         return item
+
+    def close(self):
+        """Stop the worker and release the queue (idempotent)."""
+        if self._closed:
+            return
+        self._closed = True
+        self._stop.set()
+        try:  # drain so a blocked worker put() wakes up promptly
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -26,7 +26,12 @@ from repro.core.tos import (
 )
 from repro.kernels import harris_conv, tos_update
 
-__all__ = ["tos_update_op", "harris_response_op"]
+__all__ = ["tos_update_op", "harris_response_op", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode unless the process is actually on a TPU."""
+    return jax.default_backend() != "tpu"
 
 
 def _pad_to_tiles(tos: jax.Array) -> tuple[jax.Array, tuple[int, int]]:
@@ -47,9 +52,15 @@ def tos_update_op(
     patch: int = DEFAULT_PATCH,
     th: int = DEFAULT_TH,
     mode: str = "batched",
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Chunked TOS update through the Pallas kernels (order-exact)."""
+    """Chunked TOS update through the Pallas kernels (order-exact).
+
+    ``interpret=None`` resolves to ``default_interpret()`` so callers can
+    stay backend-agnostic (compiled on TPU, interpreter elsewhere).
+    """
+    if interpret is None:
+        interpret = default_interpret()
     padded, (h, w) = _pad_to_tiles(tos)
     if mode == "nmc":
         out = tos_update.nmc_stream_call(
@@ -86,8 +97,10 @@ def harris_response_op(
     sobel_size: int = 5,
     window_size: int = 5,
     k: float = 0.04,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
     h, w = tos.shape
     budget = 16 * 2**20  # one v5e core's VMEM, conservative
     if harris_conv.vmem_bytes(h, w, sobel_size, window_size) > budget:

@@ -23,6 +23,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.meshctx import shard_act
 from repro.models.common import ModelConfig, ParamSpec
 
@@ -261,7 +262,7 @@ def moe_apply_a2a(p, x, cfg: ModelConfig, *, capacity_factor: float = 1.25,
         return y2.reshape(bl, sl, d), aux
 
     wg_spec = P("model", None, None)
-    y3, aux = jax.shard_map(
+    y3, aux = shard_map(
         inner, mesh=mesh,
         in_specs=(xs_spec, P(None, None), wg_spec, wg_spec, wg_spec),
         out_specs=(xs_spec, P()),

@@ -1,0 +1,74 @@
+"""Property-testing shim: real ``hypothesis`` when installed, a seeded
+random-sampling fallback otherwise.
+
+The fallback implements just the surface these tests use (``given``,
+``settings``, ``st.integers``, ``st.sampled_from``) by drawing
+``max_examples`` pseudo-random examples from a fixed-seed generator — no
+shrinking or example database, but the properties still execute, so the
+suite collects and runs without the optional dependency (see
+requirements-dev.txt to install the real thing).
+"""
+import functools
+import inspect
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    _FALLBACK_SEED = 0xC0FFEE
+    _DEFAULT_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def draw(self, rng):
+            return self._draw_fn(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: elements[rng.integers(len(elements))])
+
+    st = _Strategies()
+
+    def settings(*, max_examples=_DEFAULT_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                n = getattr(runner, "_max_examples", _DEFAULT_EXAMPLES)
+                rng = np.random.default_rng(_FALLBACK_SEED)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # Strategy-filled params must not look like pytest fixtures:
+            # expose only the remaining (fixture) params in the signature
+            # and stop inspect from unwrapping back to the original.
+            sig = inspect.signature(fn)
+            fixture_params = [
+                p for name, p in sig.parameters.items()
+                if name not in strategies
+            ]
+            runner.__signature__ = sig.replace(parameters=fixture_params)
+            del runner.__wrapped__
+            return runner
+        return deco

@@ -58,6 +58,37 @@ def test_prefetch_loader():
     assert n == len(st)
 
 
+def test_prefetch_loader_propagates_worker_error():
+    class Exploding:
+        xy = np.zeros((10, 2), np.int32)
+        ts = np.zeros((10,), np.int64)
+
+        def __len__(self):
+            raise RuntimeError("boom in worker")
+
+    loader = stream.PrefetchingLoader(Exploding(), 4)
+    with pytest.raises(RuntimeError, match="boom in worker"):
+        list(loader)
+
+
+def test_prefetch_loader_close_stops_thread():
+    st = synthetic.shapes_stream(duration_us=20_000, seed=4)
+    loader = stream.PrefetchingLoader(st, 64, depth=1)
+    next(loader)                       # consume one chunk, abandon the rest
+    loader.close()
+    assert not loader._thread.is_alive()
+    with pytest.raises(StopIteration):
+        next(loader)
+    loader.close()                     # idempotent
+
+
+def test_prefetch_loader_context_manager():
+    st = synthetic.shapes_stream(duration_us=20_000, seed=4)
+    with stream.PrefetchingLoader(st, 128, depth=1) as loader:
+        next(loader)
+    assert not loader._thread.is_alive()
+
+
 def test_dataset_registry():
     assert set(datasets.DATASETS) == {
         "driving", "laser", "spinner", "dynamic_dof", "shapes_dof"}

@@ -1,0 +1,126 @@
+"""Device-resident scan pipeline vs the host-loop reference oracle.
+
+The contract: ``run_pipeline`` (one jitted ``lax.scan``, single host sync)
+is bit-exact against ``run_pipeline_reference`` (the original chunk loop,
+O(n_chunks) syncs) on scores, kept mask, final TOS, Harris LUT, vdd trace,
+and the float64 energy/latency accounting.
+"""
+import numpy as np
+import pytest
+
+from repro.core import pipeline
+from repro.events import synthetic
+
+
+@pytest.fixture(scope="module")
+def stream():
+    return synthetic.shapes_stream(duration_us=30_000, seed=0)
+
+
+def _assert_bitexact(a, b):
+    np.testing.assert_array_equal(a.scores, b.scores)
+    np.testing.assert_array_equal(a.kept, b.kept)
+    np.testing.assert_array_equal(a.tos, b.tos)
+    np.testing.assert_array_equal(a.lut, b.lut)
+    np.testing.assert_array_equal(a.vdd_trace, b.vdd_trace)
+    assert a.energy_pj == b.energy_pj
+    assert a.latency_ns_per_event == b.latency_ns_per_event
+
+
+@pytest.mark.parametrize("chunk", [128, 256, 384, 512])
+def test_scan_equals_reference_across_chunk_sizes(stream, chunk):
+    # 3001 events: never a multiple of any chunk size -> padded tail chunk.
+    xy, ts = stream.xy[:3001], stream.ts[:3001]
+    cfg = pipeline.PipelineConfig(chunk=chunk, lut_every_chunks=2)
+    a = pipeline.run_pipeline(xy, ts, cfg)
+    b = pipeline.run_pipeline_reference(xy, ts, cfg)
+    _assert_bitexact(a, b)
+    assert a.host_syncs == 1
+    assert b.host_syncs >= xy.shape[0] // chunk   # >= 1 sync per chunk
+
+
+def test_scan_equals_reference_dvfs_ber(stream):
+    """Traced per-chunk Vdd/BER inside the scan == host-branching reference."""
+    cfg = pipeline.PipelineConfig(
+        chunk=256, lut_every_chunks=3, dvfs=True, inject_ber=True
+    )
+    a = pipeline.run_pipeline(stream.xy, stream.ts, cfg)
+    b = pipeline.run_pipeline_reference(stream.xy, stream.ts, cfg)
+    _assert_bitexact(a, b)
+
+
+def test_scan_equals_reference_fixed_low_vdd_ber(stream):
+    cfg = pipeline.PipelineConfig(
+        chunk=256, lut_every_chunks=2, vdd=0.6, inject_ber=True
+    )
+    xy, ts = stream.xy[:2048], stream.ts[:2048]
+    _assert_bitexact(
+        pipeline.run_pipeline(xy, ts, cfg),
+        pipeline.run_pipeline_reference(xy, ts, cfg),
+    )
+
+
+def test_scan_lut_never_ready(stream):
+    """n_chunks < lut_every_chunks: every score stays -inf on both paths."""
+    xy, ts = stream.xy[:512], stream.ts[:512]
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=8)
+    a = pipeline.run_pipeline(xy, ts, cfg)
+    b = pipeline.run_pipeline_reference(xy, ts, cfg)
+    _assert_bitexact(a, b)
+    assert not np.isfinite(a.scores).any()
+
+
+def test_scan_empty_stream():
+    cfg = pipeline.PipelineConfig(chunk=256)
+    a = pipeline.run_pipeline(np.zeros((0, 2), np.int32), np.zeros((0,), np.int64), cfg)
+    assert a.scores.shape == (0,) and a.kept.shape == (0,)
+    assert a.energy_pj == 0.0
+
+
+@pytest.mark.parametrize("backend", ["pallas_nmc", "pallas_batched"])
+def test_backend_parity_interpret(backend):
+    """Pallas kernels on the e2e path == jnp closed form, bit-for-bit."""
+    rng = np.random.default_rng(0)
+    e, h, w = 512, 128, 128
+    xy = np.stack([rng.integers(0, w, e), rng.integers(0, h, e)], 1).astype(np.int32)
+    ts = np.sort(rng.integers(0, 20_000, e)).astype(np.int64)
+    mk = lambda be: pipeline.PipelineConfig(
+        height=h, width=w, chunk=128, lut_every_chunks=2, backend=be
+    )
+    base = pipeline.run_pipeline(xy, ts, mk("jnp"))
+    r = pipeline.run_pipeline(xy, ts, mk(backend))
+    np.testing.assert_array_equal(r.tos, base.tos)
+    np.testing.assert_array_equal(r.scores, base.scores)
+    np.testing.assert_array_equal(r.kept, base.kept)
+
+
+def test_unknown_backend_raises():
+    cfg = pipeline.PipelineConfig(backend="tpu_v7")
+    with pytest.raises(ValueError, match="unknown backend"):
+        pipeline.run_pipeline(
+            np.zeros((4, 2), np.int32), np.arange(4, dtype=np.int64), cfg
+        )
+
+
+def test_batched_equals_independent(stream):
+    e = 1500
+    xy = np.stack([stream.xy[:e], stream.xy[e:2 * e]])
+    ts = np.stack([stream.ts[:e], stream.ts[e:2 * e]])
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    batch = pipeline.run_pipeline_batched(xy, ts, cfg)
+    assert len(batch) == 2
+    for i in range(2):
+        ind = pipeline.run_pipeline(xy[i], ts[i], cfg)
+        _assert_bitexact(batch[i], ind)
+        assert batch[i].host_syncs == 1
+
+
+def test_batched_dvfs_per_stream(stream):
+    """Each batched stream gets its own causal DVFS trace."""
+    e = 1024
+    xy = np.stack([stream.xy[:e], stream.xy[e:2 * e]])
+    ts = np.stack([stream.ts[:e], stream.ts[e:2 * e]])
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2, dvfs=True)
+    batch = pipeline.run_pipeline_batched(xy, ts, cfg)
+    for i in range(2):
+        _assert_bitexact(batch[i], pipeline.run_pipeline(xy[i], ts[i], cfg))

@@ -1,8 +1,8 @@
 """STCF denoiser: chunk-exactness and filtering behaviour."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
 
+from _prop import given, settings, st
 from repro.core import stcf
 
 

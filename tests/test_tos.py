@@ -2,8 +2,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+from _prop import given, settings, st
 from conftest import make_events, make_tos
 from repro.core import tos
 
