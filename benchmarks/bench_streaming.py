@@ -1,0 +1,99 @@
+"""Serving-layer benchmark: slab latency + aggregate throughput of the
+streaming detector vs the offline batch path.
+
+Rows per pool size K in {1, 4, 16}:
+
+  * ``poolK_slab_p50_ms`` / ``poolK_slab_p99_ms`` — wall latency of one
+    serving round (feed a slab to every live session + pump + poll), the
+    metric a live camera actually experiences.
+  * ``poolK_events_per_s`` — aggregate kept-side throughput.
+  * ``poolK_sessions_per_s`` — full sessions retired per second.
+
+plus the batch-path reference (``batchK_events_per_s`` via the vmapped
+``run_pipeline_batched`` scan) so the cost of *online* serving (per-chunk
+dispatch + host result sync) is visible next to the single-sync fold.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import pipeline
+from repro.events import synthetic
+from repro.serve import DetectorPool
+
+POOL_SIZES = (1, 4, 16)
+DURATION_US = 25_000
+SLAB = 384
+
+
+def _mk_streams(k: int):
+    return [
+        synthetic.shapes_stream(duration_us=DURATION_US, seed=s)
+        for s in range(k)
+    ]
+
+
+def _run_pool(cfg, streams):
+    k = len(streams)
+    pool = DetectorPool(cfg, capacity=k)
+    # Warm (compile) outside the timed region.
+    lane = pool.connect()
+    pool.feed(lane, streams[0].xy[:cfg.chunk], streams[0].ts[:cfg.chunk])
+    pool.pump()
+    pool.disconnect(lane)
+
+    lanes = {i: pool.connect(seed=i) for i in range(k)}
+    cursors = {i: 0 for i in range(k)}
+    lat = []
+    t0 = time.perf_counter()
+    while lanes:
+        t1 = time.perf_counter()
+        for i, lane in list(lanes.items()):
+            st, c = streams[i], cursors[i]
+            if c >= len(st):
+                pool.flush(lane)
+                pool.disconnect(lane)
+                del lanes[i]
+                continue
+            pool.feed(lane, st.xy[c:c + SLAB], st.ts[c:c + SLAB])
+            cursors[i] = c + SLAB
+        pool.pump()
+        for lane in lanes.values():
+            pool.poll(lane)
+        lat.append(time.perf_counter() - t1)
+    dt = time.perf_counter() - t0
+    return dt, np.asarray(lat)
+
+
+def _run_batch(cfg, streams):
+    k = len(streams)
+    e = min(len(s) for s in streams)
+    xy = np.stack([s.xy[:e] for s in streams])
+    ts = np.stack([s.ts[:e] for s in streams])
+    pipeline.run_pipeline_batched(xy, ts, cfg)  # warm (jit compile)
+    t0 = time.perf_counter()
+    pipeline.run_pipeline_batched(xy, ts, cfg)
+    return time.perf_counter() - t0, k * e
+
+
+def rows():
+    out = []
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    for k in POOL_SIZES:
+        streams = _mk_streams(k)
+        n_total = sum(len(s) for s in streams)
+        dt, lat = _run_pool(cfg, streams)
+        out.append((f"pool{k}_slab_p50_ms", 0.0,
+                    float(np.percentile(lat, 50) * 1e3)))
+        out.append((f"pool{k}_slab_p99_ms", 0.0,
+                    float(np.percentile(lat, 99) * 1e3)))
+        out.append((f"pool{k}_events_per_s", dt * 1e6 / max(n_total, 1),
+                    n_total / dt))
+        out.append((f"pool{k}_sessions_per_s", 0.0, k / dt))
+
+        bdt, bn = _run_batch(cfg, streams)
+        out.append((f"batch{k}_events_per_s", bdt * 1e6 / max(bn, 1),
+                    bn / bdt))
+    return out

@@ -19,8 +19,9 @@ from repro.core import tos
 
 
 def _time(fn, *args, reps=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # Warm up with a single evaluation (block_until_ready walks pytrees, so
+    # no need to call fn twice just to type-check the result).
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))

@@ -16,6 +16,7 @@ def main() -> None:
         bench_auc,
         bench_dvfs,
         bench_hwmodel,
+        bench_streaming,
         bench_throughput,
         bench_tos_kernels,
         roofline_table,
@@ -27,6 +28,7 @@ def main() -> None:
         ("dvfs(tableI,fig8)", bench_dvfs),
         ("auc(fig11)", bench_auc),
         ("tos_kernels(perf)", bench_tos_kernels),
+        ("streaming(serving)", bench_streaming),
         ("roofline(dryrun)", roofline_table),
     ]
     print("name,us_per_call,derived")

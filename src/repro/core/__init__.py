@@ -9,7 +9,9 @@ Submodules:
   hwmodel   — calibrated latency/energy model of the 65nm macro
   baselines — eHarris / evFAST / evARC
   pr_eval   — precision-recall AUC
-  pipeline  — the full Fig.-2 system
+  state     — DetectorState pytree + pure detector_init/step/scan core
+  pipeline  — the full Fig.-2 system (batch wrappers over the state core;
+              the online serving layer lives in repro.serve)
 """
 from repro.core import (  # noqa: F401
     baselines,
@@ -19,6 +21,7 @@ from repro.core import (  # noqa: F401
     hwmodel,
     pipeline,
     pr_eval,
+    state,
     stcf,
     tos,
 )

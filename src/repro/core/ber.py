@@ -79,7 +79,15 @@ def inject_write_errors_at(
 
 
 def corrupt_surface(key: jax.Array, tos: jax.Array, vdd: float) -> jax.Array:
-    """Convenience: inject at the BER implied by the operating voltage."""
+    """Convenience: inject at the BER implied by the operating voltage.
+
+    ``inject_write_errors_at`` is the *single* injection primitive: the scan
+    step, the host-loop reference pipeline, and this voltage-spelled wrapper
+    all route through it with the same float32 BER, so the oracle and the
+    production path cannot drift (property-tested equivalent).
+    """
     from repro.core import hwmodel
 
-    return inject_write_errors(key, tos, hwmodel.ber_at(vdd))
+    return inject_write_errors_at(
+        key, tos, jnp.float32(hwmodel.ber_at(vdd))
+    )

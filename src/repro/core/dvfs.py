@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +22,17 @@ import numpy as np
 
 from repro.core import hwmodel
 
-__all__ = ["DvfsConfig", "simulate_dvfs", "DvfsTrace", "per_chunk_vdd"]
+__all__ = [
+    "DvfsConfig",
+    "simulate_dvfs",
+    "DvfsTrace",
+    "per_chunk_vdd",
+    "OpPointTable",
+    "op_point_table",
+    "RateState",
+    "rate_state_init",
+    "online_vdd_from_chunk_ts",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -119,9 +130,12 @@ def simulate_dvfs(
     es = np.asarray([p["energy_pj"] for p in lut])
 
     # Estimate for window w uses the two *closed* counters: bins w-2, w-1.
-    closed = counts.copy().astype(np.float64)
-    pair = np.concatenate([[0.0, 0.0], closed[:-2] + closed[1:-1]])
-    est_meps = pair / cfg.tw_us              # events / us == Meps
+    # The divide is done in float32 — the same arithmetic the *online*
+    # streaming estimator uses on device — so the precomputed and online
+    # paths pick identical operating points (property-tested).
+    closed = counts.astype(np.int64)
+    pair = np.concatenate([[0, 0], closed[:-2] + closed[1:-1]])
+    est_meps = pair.astype(np.float32) / np.float32(cfg.tw_us)  # ev/us == Meps
 
     if use_dvfs:
         idxs = np.asarray(
@@ -147,6 +161,126 @@ def simulate_dvfs(
         energy_pj=energy,
         dropped=dropped.astype(np.int64),
     )
+
+
+# ---------------------------------------------------------------------------
+# Online (streaming) controller — the device-resident twin of per_chunk_vdd
+# ---------------------------------------------------------------------------
+
+
+class OpPointTable(NamedTuple):
+    """DVFS operating points as arrays, floor-filtered like ``simulate_dvfs``.
+
+    ``vdd64`` keeps the exact float64 LUT voltages for host-side accounting;
+    every other column is float32 because that is what the device consumes
+    (and what ``simulate_dvfs`` already compares in).
+    """
+
+    vdd64: np.ndarray        # (P,) float64 — host accounting / vdd traces
+    caps: np.ndarray         # (P,) float32 — capacity in Meps
+    ber: np.ndarray          # (P,) float32 — bit error rate at that Vdd
+    energy_pj: np.ndarray    # (P,) float32 — energy per kept event
+    latency_ns: np.ndarray   # (P,) float32 — latency per kept event
+
+
+@functools.lru_cache(maxsize=None)
+def op_point_table(cfg: DvfsConfig = DvfsConfig()) -> OpPointTable:
+    """Host-side table of the controller's selectable operating points."""
+    lut = [p for p in hwmodel.dvfs_lut() if p["vdd"] >= cfg.vdd_floor - 1e-9]
+    return OpPointTable(
+        vdd64=np.asarray([p["vdd"] for p in lut], np.float64),
+        caps=np.asarray([p["max_meps"] for p in lut], np.float32),
+        ber=np.asarray([p["ber"] for p in lut], np.float32),
+        energy_pj=np.asarray([p["energy_pj"] for p in lut], np.float32),
+        latency_ns=np.asarray(
+            [hwmodel.patch_latency_ns(p["vdd"]) for p in lut], np.float32
+        ),
+    )
+
+
+class RateState(NamedTuple):
+    """Streaming twin of the paper's 3-counter round-robin rate estimator.
+
+    ``win`` is the half-window index of the latest event integrated so far;
+    ``cur`` counts events in that (still-open) window, ``prev1``/``prev2``
+    the two most recently *closed* half-windows — exactly the pair the
+    round-robin scheme reads.  All int32 scalars, so a ``RateState`` rides
+    in a ``lax.scan`` carry / ``vmap`` lane without host involvement.
+    """
+
+    win: jax.Array
+    cur: jax.Array
+    prev1: jax.Array
+    prev2: jax.Array
+
+
+def rate_state_init() -> RateState:
+    z = jnp.int32(0)
+    return RateState(win=z, cur=z, prev1=z, prev2=z)
+
+
+def online_vdd_from_chunk_ts(
+    rate: RateState,
+    ts: jax.Array,
+    valid: jax.Array,
+    *,
+    cfg: DvfsConfig,
+    caps: jax.Array,
+) -> tuple[RateState, jax.Array]:
+    """One streaming controller step: pick this chunk's operating point.
+
+    ``ts`` are the chunk's (chunk-relative, int32) microsecond timestamps —
+    rebased so that the stream's first event falls in half-window 0 (the
+    pipeline aligns the rebase to a half-window multiple).  Returns the
+    updated estimator carry and the chosen operating-point *index* into
+    ``caps`` / :func:`op_point_table`.
+
+    Bit-exact twin of the host path: the chunk runs at the Vdd chosen for
+    the half-window containing its first event, whose estimate reads the two
+    closed counters.  Those bins only hold events strictly earlier in the
+    (time-sorted) stream, so the carry already has their full counts when
+    the chunk arrives — streaming sees exactly what ``per_chunk_vdd`` sees.
+    Per-bin counts saturate at ``2^counter_bits - 1`` when read, and the
+    rate divide is float32 on both paths.
+    """
+    half = jnp.int32(cfg.half_us)
+    sat = jnp.int32((1 << cfg.counter_bits) - 1)
+    has = jnp.any(valid)
+
+    # --- rotate the counters up to the chunk's first-event window ----------
+    w_first = ts[0] // half
+    d = w_first - rate.win
+    cur = jnp.where(d == 0, rate.cur, 0)
+    p1 = jnp.select([d == 0, d == 1], [rate.prev1, rate.cur], 0)
+    p2 = jnp.select(
+        [d == 0, d == 1, d == 2], [rate.prev2, rate.prev1, rate.cur], 0
+    )
+
+    # --- estimate + operating point (closed pair, saturating read) ---------
+    pair = jnp.minimum(p1, sat) + jnp.minimum(p2, sat)
+    est_meps = pair.astype(jnp.float32) / jnp.float32(cfg.tw_us)
+    idx = _pick_operating_point(est_meps, caps, cfg.headroom)
+
+    # --- integrate this chunk's events into the carry -----------------------
+    # Only the last window and the two before it can ever be read again, so
+    # counting those three bins in-chunk loses nothing (time-sorted stream).
+    w_last = ts[-1] // half
+    win_of = ts // half
+    n0 = jnp.sum((valid & (win_of == w_last)).astype(jnp.int32))
+    n1 = jnp.sum((valid & (win_of == w_last - 1)).astype(jnp.int32))
+    n2 = jnp.sum((valid & (win_of == w_last - 2)).astype(jnp.int32))
+    e = w_last - w_first
+    cur2 = n0 + jnp.where(e == 0, cur, 0)
+    p1b = n1 + jnp.select([e == 0, e == 1], [p1, cur], 0)
+    p2b = n2 + jnp.select([e == 0, e == 1, e == 2], [p2, p1, cur], 0)
+
+    new = RateState(
+        win=jnp.where(has, w_last, rate.win).astype(jnp.int32),
+        cur=jnp.where(has, cur2, rate.cur).astype(jnp.int32),
+        prev1=jnp.where(has, p1b, rate.prev1).astype(jnp.int32),
+        prev2=jnp.where(has, p2b, rate.prev2).astype(jnp.int32),
+    )
+    return new, idx.astype(jnp.int32)
 
 
 def per_chunk_vdd(

@@ -4,28 +4,40 @@
            -> [BER injection at the chosen Vdd] -> Harris LUT (FBF)
            -> per-event corner scores.
 
-Two executions of the same dataflow:
+Module map — the detector is layered, and this file is only the *batch*
+entry point:
 
-``run_pipeline`` — the **device-resident scan**.  The stream is pre-chunked
-on the host into ``(n_chunks, chunk, ...)`` arrays and folded by one jitted
-``lax.scan`` carrying ``(surface, sae, lut, lut_ready, key)``.  The Harris
-LUT refresh (luvHarris's "as often as possible" FBF pass) is a ``lax.cond``
-on the chunk index; the DVFS voltage, the implied BER, and the hw-model
-energy/latency coefficients are precomputed per chunk on the host and ride
-along as scan inputs; per-chunk kept counts accumulate on device.  The host
-blocks exactly once — a single ``device_get`` of the final state — instead
-of the O(n_chunks) per-chunk syncs of the reference loop.
+  ``repro.core.state``   — the detector itself: ``DetectorState`` pytree +
+                           pure ``detector_init`` / ``detector_step`` /
+                           ``detector_scan``.  One chunk = one step; every
+                           execution mode folds the same function.
+  ``repro.core.pipeline``— this file: offline convenience wrappers.
+                           ``run_pipeline`` = init + one jitted
+                           ``detector_scan`` over a pre-chunked stream
+                           (single host sync); ``run_pipeline_batched``
+                           vmaps the scan over B equal-length streams;
+                           ``run_pipeline_reference`` is the original
+                           host-loop oracle, kept bit-exact.
+  ``repro.serve``        — the *online* layer: ``StreamingDetector`` feeds a
+                           live session in arbitrary slabs with the state
+                           held device-resident between arrivals;
+                           ``DetectorPool`` multiplexes many cameras through
+                           one compiled vmapped step.
 
-``run_pipeline_reference`` — the original host Python loop, kept as the
-bit-exact oracle (property-tested: scores, kept mask, final TOS, and vdd
-trace agree exactly with the scan).
+DVFS modes: the default host-precomputed mode derives each chunk's Vdd from
+the whole stream upfront (batch-only; rides into the scan as data); with
+``dvfs_online=True`` the operating point is chosen *inside* the step by a
+streaming rate estimator carried in the state — the mode live serving uses.
+Both modes are property-tested equal on full streams.
+
+Timestamps are int64 microseconds on the host; ``_prepare`` rebases them to
+chunk-relative int32 (base aligned to a DVFS half-window multiple) before
+they reach the device, so long recordings don't wrap int32.
 
 The ``backend`` config axis routes the TOS update through the Pallas
 kernels (``repro.kernels.ops.tos_update_op``): ``"jnp"`` uses the closed-form
 batched update, ``"pallas_nmc"`` the paper-faithful VMEM-streaming kernel,
-``"pallas_batched"`` the fused MXU formulation.  ``run_pipeline_batched``
-vmaps the scan over B independent streams (multi-camera / multi-user
-serving).
+``"pallas_batched"`` the fused MXU formulation.
 
 Per-event scores are read from the *latest available* LUT — exactly the
 EBE/FBF decoupling the paper inherits from luvHarris.
@@ -34,7 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Optional, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -44,14 +56,15 @@ from repro.core import ber as ber_mod
 from repro.core import dvfs as dvfs_mod
 from repro.core import harris as harris_mod
 from repro.core import hwmodel
+from repro.core import state as state_mod
 from repro.core import stcf as stcf_mod
-from repro.core import tos as tos_mod
 from repro.events import stream as stream_mod
 
 __all__ = [
     "BACKENDS",
     "PipelineConfig",
     "PipelineResult",
+    "chunk_ts_base",
     "run_pipeline",
     "run_pipeline_reference",
     "run_pipeline_batched",
@@ -77,6 +90,7 @@ class PipelineConfig:
     # hardware simulation
     vdd: float = 1.2                 # fixed Vdd if dvfs disabled
     dvfs: bool = False
+    dvfs_online: bool = False        # in-step streaming controller (serving)
     dvfs_cfg: dvfs_mod.DvfsConfig = dataclasses.field(
         default_factory=dvfs_mod.DvfsConfig
     )
@@ -100,29 +114,31 @@ class PipelineResult:
     host_syncs: int = 1         # host<->device blocking transfers incurred
 
 
+# Back-compat alias: the update selector moved to the state core.
+_select_update = state_mod.select_update
+
+
 # ---------------------------------------------------------------------------
 # Shared host-side preparation
 # ---------------------------------------------------------------------------
 
 
-def _select_update(cfg: PipelineConfig) -> Callable:
-    """TOS chunk-update callable for the configured backend."""
-    if cfg.backend == "jnp":
-        fn = (
-            tos_mod.tos_update_batched_onehot
-            if cfg.use_onehot_update
-            else tos_mod.tos_update_batched
-        )
-        return lambda s, xy, v: fn(s, xy, v, patch=cfg.patch, th=cfg.th)
-    if cfg.backend in ("pallas_nmc", "pallas_batched"):
-        from repro.kernels import ops  # deferred: keep jnp path Pallas-free
+def _is_online(cfg: PipelineConfig) -> bool:
+    return bool(cfg.dvfs and cfg.dvfs_online)
 
-        mode = "nmc" if cfg.backend == "pallas_nmc" else "batched"
-        return lambda s, xy, v: ops.tos_update_op(
-            s, xy, v, patch=cfg.patch, th=cfg.th, mode=mode,
-            interpret=cfg.interpret,
-        )
-    raise ValueError(f"unknown backend {cfg.backend!r}; expected {BACKENDS}")
+
+def chunk_ts_base(ts_us: np.ndarray, cfg: PipelineConfig) -> int:
+    """Per-stream rebase for device timestamps (int64 host -> int32 device).
+
+    Aligned down to a DVFS half-window multiple so chunk-relative window
+    indices are the absolute ones minus a constant — the online controller's
+    binning is invariant under the shift.  STCF only consumes timestamp
+    differences, so it is trivially shift-invariant.
+    """
+    if len(ts_us) == 0:
+        return 0
+    half = cfg.dvfs_cfg.half_us
+    return (int(ts_us[0]) // half) * half
 
 
 def _chunk_vdd(ts: np.ndarray, n_chunks: int, n_events: int,
@@ -144,116 +160,40 @@ def _accounting(n_kept: Sequence[int], vdd: np.ndarray) -> tuple[float, float]:
     return energy_pj, latency_ns
 
 
-def _fresh_state(cfg: PipelineConfig):
-    surface = tos_mod.tos_new(cfg.height, cfg.width)
-    sae = stcf_mod.fresh_sae(cfg.height, cfg.width)
-    lut = jnp.full((cfg.height, cfg.width), -jnp.inf, dtype=jnp.float32)
-    return surface, sae, lut
+class _Prepared(NamedTuple):
+    cxy: np.ndarray          # (C, chunk, 2) int32
+    cts: np.ndarray          # (C, chunk) int32, chunk-relative
+    cval: np.ndarray         # (C, chunk) bool
+    n_events: int
+    vdd_arr: Optional[np.ndarray]   # (C,) float64; None in online mode
+    ber: np.ndarray          # (C,) float32
+    e_coef: np.ndarray       # (C,) float32
+    l_coef: np.ndarray       # (C,) float32
 
 
-# ---------------------------------------------------------------------------
-# Device-resident scan (the production path)
-# ---------------------------------------------------------------------------
-
-
-def _scan_impl(cfg, chunks_xy, chunks_ts, chunks_valid, ber_arr,
-               surface, sae, lut, key):
-    """One jitted fold over all chunks.  Returns final state + stacked
-    per-chunk (scores, keep, n_kept)."""
-    update = _select_update(cfg)
-    n_chunks = chunks_xy.shape[0]
-
-    def body(carry, xs):
-        surface, sae, lut, lut_ready, key = carry
-        cxy, cts, cval, ber_c, c = xs
-
-        sae, keep = stcf_mod.stcf_step(
-            sae, cxy, cts, cval,
-            enabled=cfg.stcf_enabled,
-            support=cfg.stcf_support, tw=cfg.stcf_tw_us,
-        )
-        surface = update(surface, cxy, keep)
-
-        if cfg.inject_ber:
-            key, sub = jax.random.split(key)
-            surface = ber_mod.inject_write_errors_at(sub, surface, ber_c)
-
-        n_kept = jnp.sum(keep).astype(jnp.int32)
-
-        # Tag this chunk's events against the latest available LUT.
-        scores = jnp.where(
-            lut_ready,
-            harris_mod.score_events(lut, cxy, keep),
-            -jnp.inf,
-        ).astype(jnp.float32)
-
-        do_refresh = ((c + 1) % cfg.lut_every_chunks) == 0
-        lut = jax.lax.cond(
-            do_refresh,
-            lambda s: harris_mod.harris_response(
-                s,
-                sobel_size=cfg.sobel_size,
-                window_size=cfg.window_size,
-                k=cfg.harris_k,
-            ),
-            lambda s: lut,
-            surface,
-        )
-        lut_ready = lut_ready | do_refresh
-        return (surface, sae, lut, lut_ready, key), (scores, keep, n_kept)
-
-    init = (surface, sae, lut, jnp.asarray(False), key)
-    xs = (
-        chunks_xy, chunks_ts, chunks_valid, ber_arr,
-        jnp.arange(n_chunks, dtype=jnp.int32),
-    )
-    (surface, sae, lut, _, _), (scores, keep, n_kept) = jax.lax.scan(
-        body, init, xs
-    )
-    return surface, lut, scores, keep, n_kept
-
-
-def _trace_cfg(cfg: PipelineConfig) -> PipelineConfig:
-    """Canonicalize fields the traced scan never reads (vdd/dvfs/seed ride
-    in as data arrays), so config sweeps over them share one compiled scan
-    instead of paying an XLA recompile each."""
-    return dataclasses.replace(
-        cfg, vdd=1.2, dvfs=False, dvfs_cfg=dvfs_mod.DvfsConfig(), seed=0
-    )
-
-
-@functools.lru_cache(maxsize=None)
-def _scan_fn(cfg: PipelineConfig):
-    # Donate the carried surface so XLA updates it in place on accelerator
-    # backends (the CPU runtime does not implement donation — skip the
-    # warning there).
-    donate = ("surface",) if jax.default_backend() != "cpu" else ()
-    def run(chunks_xy, chunks_ts, chunks_valid, ber_arr, surface, sae, lut,
-            key):
-        return _scan_impl(cfg, chunks_xy, chunks_ts, chunks_valid, ber_arr,
-                          surface, sae, lut, key)
-    return jax.jit(run, donate_argnames=donate)
-
-
-@functools.lru_cache(maxsize=None)
-def _scan_fn_batched(cfg: PipelineConfig):
-    def run(chunks_xy, chunks_ts, chunks_valid, ber_arr, surface, sae, lut,
-            key):
-        return _scan_impl(cfg, chunks_xy, chunks_ts, chunks_valid, ber_arr,
-                          surface, sae, lut, key)
-    return jax.jit(jax.vmap(run))
-
-
-def _prepare(xy: np.ndarray, ts_us: np.ndarray, cfg: PipelineConfig):
+def _prepare(xy: np.ndarray, ts_us: np.ndarray,
+             cfg: PipelineConfig) -> _Prepared:
     xy = np.asarray(xy, dtype=np.int32)
     ts = np.asarray(ts_us, dtype=np.int64)
-    cxy, cts, cval, n_events = stream_mod.stack_chunks(xy, ts, cfg.chunk)
+    cxy, cts64, cval, n_events = stream_mod.stack_chunks(xy, ts, cfg.chunk)
     n_chunks = cxy.shape[0]
-    vdd_arr = _chunk_vdd(ts, n_chunks, n_events, cfg)
-    ber_arr = np.asarray(
-        [hwmodel.ber_at(float(v)) for v in vdd_arr], np.float32
+    cts = (cts64 - chunk_ts_base(ts, cfg)).astype(np.int32)
+    vdd_arr = (
+        None if _is_online(cfg) else _chunk_vdd(ts, n_chunks, n_events, cfg)
     )
-    return cxy, cts, cval, n_events, vdd_arr, ber_arr
+    ber, e_coef, l_coef = state_mod.chunk_input_riders(n_chunks, vdd_arr, cfg)
+    return _Prepared(cxy, cts, cval, n_events, vdd_arr, ber, e_coef, l_coef)
+
+
+def _chunk_inputs(prep: _Prepared) -> state_mod.ChunkInput:
+    return state_mod.ChunkInput(
+        xy=jnp.asarray(prep.cxy),
+        ts=jnp.asarray(prep.cts),
+        valid=jnp.asarray(prep.cval),
+        ber=jnp.asarray(prep.ber),
+        energy_coef=jnp.asarray(prep.e_coef),
+        latency_coef=jnp.asarray(prep.l_coef),
+    )
 
 
 def _finalize(cfg, n_events, vdd_arr, surface, lut, scores, keep, n_kept,
@@ -274,6 +214,57 @@ def _finalize(cfg, n_events, vdd_arr, surface, lut, scores, keep, n_kept,
     )
 
 
+def _vdd_trace(prep: _Prepared, vdd_idx: np.ndarray,
+               cfg: PipelineConfig) -> np.ndarray:
+    """Per-chunk float64 Vdd: precomputed array, or the online picks."""
+    if prep.vdd_arr is not None:
+        return prep.vdd_arr
+    tab = dvfs_mod.op_point_table(cfg.dvfs_cfg)
+    return tab.vdd64[np.asarray(vdd_idx, np.int64)]
+
+
+# ---------------------------------------------------------------------------
+# Device-resident scan (the production batch path)
+# ---------------------------------------------------------------------------
+
+
+def _trace_cfg(cfg: PipelineConfig) -> PipelineConfig:
+    """Canonicalize fields the traced scan never reads (vdd/dvfs/seed ride
+    in as data arrays), so config sweeps over them share one compiled scan
+    instead of paying an XLA recompile each.  Online mode *is* traced (the
+    controller runs in-step), so its dvfs_cfg is kept."""
+    online = _is_online(cfg)
+    return dataclasses.replace(
+        cfg,
+        vdd=1.2,
+        dvfs=online,
+        dvfs_online=online,
+        dvfs_cfg=cfg.dvfs_cfg if online else dvfs_mod.DvfsConfig(),
+        seed=0,
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _scan_fn(cfg: PipelineConfig):
+    # Donate the carried state so XLA updates it in place on accelerator
+    # backends (the CPU runtime does not implement donation — skip the
+    # warning there).
+    donate = ("state",) if jax.default_backend() != "cpu" else ()
+
+    def run(state, chunks):
+        return state_mod.detector_scan(cfg, state, chunks)
+
+    return jax.jit(run, donate_argnames=donate)
+
+
+@functools.lru_cache(maxsize=None)
+def _scan_fn_batched(cfg: PipelineConfig):
+    def run(state, chunks):
+        return state_mod.detector_scan(cfg, state, chunks)
+
+    return jax.jit(jax.vmap(run))
+
+
 def run_pipeline(
     xy: np.ndarray,
     ts_us: np.ndarray,
@@ -281,20 +272,17 @@ def run_pipeline(
 ) -> PipelineResult:
     """Fold a time-sorted event stream through the full detector on device.
 
-    One jitted ``lax.scan`` over pre-chunked arrays; the host blocks once,
-    on the final ``device_get``.  Bit-exact vs ``run_pipeline_reference``.
+    Thin wrapper: ``detector_init`` + one jitted ``detector_scan`` over the
+    pre-chunked arrays; the host blocks once, on the final ``device_get``.
+    Bit-exact vs ``run_pipeline_reference``.
     """
-    cxy, cts, cval, n_events, vdd_arr, ber_arr = _prepare(xy, ts_us, cfg)
-    surface, sae, lut = _fresh_state(cfg)
-    key = jax.random.PRNGKey(cfg.seed)
-
-    out = _scan_fn(_trace_cfg(cfg))(
-        jnp.asarray(cxy), jnp.asarray(cts), jnp.asarray(cval),
-        jnp.asarray(ber_arr), surface, sae, lut, key,
-    )
-    surface, lut_out, scores, keep, n_kept = jax.device_get(out)  # sync #1
-    return _finalize(cfg, n_events, vdd_arr, surface, lut_out, scores, keep,
-                     n_kept, host_syncs=1)
+    prep = _prepare(xy, ts_us, cfg)
+    state = state_mod.detector_init(cfg)
+    fin, outs = _scan_fn(_trace_cfg(cfg))(state, _chunk_inputs(prep))
+    fin, outs = jax.device_get((fin, outs))  # sync #1
+    vdd_arr = _vdd_trace(prep, outs.vdd_idx, cfg)
+    return _finalize(cfg, prep.n_events, vdd_arr, fin.surface, fin.lut,
+                     outs.scores, outs.keep, outs.n_kept, host_syncs=1)
 
 
 def run_pipeline_batched(
@@ -307,10 +295,11 @@ def run_pipeline_batched(
     """Run B independent equal-length streams at once (vmapped scan).
 
     ``xy``: (B, E, 2), ``ts_us``: (B, E), each row time-sorted.  Every
-    stream gets its own TOS/SAE/LUT/key state and its own host-precomputed
-    DVFS trace; result ``i`` equals ``run_pipeline(xy[i], ts_us[i], cfg)``
-    bit-exactly (with ``seeds[i]`` as that stream's PRNG seed, default
-    ``cfg.seed``).  The whole batch costs one host sync.
+    stream gets its own ``DetectorState`` and its own per-stream DVFS
+    (host-precomputed trace, or the in-step online controller); result ``i``
+    equals ``run_pipeline(xy[i], ts_us[i], cfg)`` bit-exactly (with
+    ``seeds[i]`` as that stream's PRNG seed, default ``cfg.seed``).  The
+    whole batch costs one host sync.
     """
     xy = np.asarray(xy, dtype=np.int32)
     ts = np.asarray(ts_us, dtype=np.int64)
@@ -319,27 +308,24 @@ def run_pipeline_batched(
         seeds = [cfg.seed] * b
 
     preps = [_prepare(xy[i], ts[i], cfg) for i in range(b)]
-    cxy = jnp.asarray(np.stack([p[0] for p in preps]))
-    cts = jnp.asarray(np.stack([p[1] for p in preps]))
-    cval = jnp.asarray(np.stack([p[2] for p in preps]))
-    ber = jnp.asarray(np.stack([p[5] for p in preps]))
+    chunks = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[_chunk_inputs(p) for p in preps]
+    )
+    states = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[state_mod.detector_init(cfg, seed=s) for s in seeds],
+    )
 
-    surface, sae, lut = _fresh_state(cfg)
-    surfaces = jnp.broadcast_to(surface, (b, *surface.shape))
-    saes = jnp.broadcast_to(sae, (b, *sae.shape))
-    luts = jnp.broadcast_to(lut, (b, *lut.shape))
-    keys = jnp.stack([jax.random.PRNGKey(s) for s in seeds])
-
-    out = _scan_fn_batched(_trace_cfg(cfg))(cxy, cts, cval, ber, surfaces,
-                                            saes, luts, keys)
-    surfaces, luts, scores, keep, n_kept = jax.device_get(out)  # sync #1
+    fins, outs = _scan_fn_batched(_trace_cfg(cfg))(states, chunks)
+    fins, outs = jax.device_get((fins, outs))  # sync #1
 
     results = []
     for i in range(b):
-        n_events, vdd_arr = preps[i][3], preps[i][4]
+        vdd_arr = _vdd_trace(preps[i], outs.vdd_idx[i], cfg)
         results.append(
-            _finalize(cfg, n_events, vdd_arr, surfaces[i], luts[i],
-                      scores[i], keep[i], n_kept[i], host_syncs=1)
+            _finalize(cfg, preps[i].n_events, vdd_arr, fins.surface[i],
+                      fins.lut[i], outs.scores[i], outs.keep[i],
+                      outs.n_kept[i], host_syncs=1)
         )
     return results
 
@@ -358,17 +344,30 @@ def run_pipeline_reference(
 
     Each chunk blocks the host at least once (``int(jnp.sum(keep))``), which
     is exactly the latency bug the scan path removes; ``host_syncs`` counts
-    the blocking transfers so benchmarks can report the difference.
+    the blocking transfers so benchmarks can report the difference.  BER
+    injection goes through the *same* ``inject_write_errors_at`` call as the
+    scan step, so the two paths cannot drift.  The online DVFS controller is
+    in-step by construction (scan/streaming only) — ask for it here and you
+    get a ``ValueError``.
     """
-    cxy_all, cts_all, cval_all, n_events, vdd_arr, ber_arr = _prepare(
-        xy, ts_us, cfg
-    )
+    if _is_online(cfg):
+        raise ValueError(
+            "online DVFS runs inside detector_step (scan/streaming paths); "
+            "the host-loop oracle only supports precomputed DVFS or fixed "
+            "vdd — it is property-tested equal to the online mode instead"
+        )
+    prep = _prepare(xy, ts_us, cfg)
+    cxy_all, cts_all, cval_all = prep.cxy, prep.cts, prep.cval
+    n_events, vdd_arr, ber_arr = prep.n_events, prep.vdd_arr, prep.ber
     n_chunks = cxy_all.shape[0]
-    update = _select_update(cfg)
+    update = state_mod.select_update(cfg)
 
-    surface, sae, lut = _fresh_state(cfg)
+    # Fresh state from the SAME constructor the scan uses — the oracle and
+    # the production path cannot drift on initial conditions.
+    init = state_mod.detector_init(cfg)
+    surface, sae, lut = init.surface, init.sae, init.lut
     lut_ready = False
-    key = jax.random.PRNGKey(cfg.seed)
+    key = init.key
 
     scores = np.full((n_chunks * cfg.chunk,), -np.inf, dtype=np.float32)
     kept_all = np.zeros((n_chunks * cfg.chunk,), dtype=bool)
@@ -393,7 +392,9 @@ def run_pipeline_reference(
 
         if cfg.inject_ber:
             key, sub = jax.random.split(key)
-            surface = ber_mod.corrupt_surface(sub, surface, vdd)
+            surface = ber_mod.inject_write_errors_at(
+                sub, surface, jnp.float32(ber_arr[c])
+            )
 
         n_kept = int(jnp.sum(keep))          # <-- per-chunk host sync
         host_syncs += 1

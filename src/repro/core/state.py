@@ -1,0 +1,274 @@
+"""Stateful streaming detector core: the explicit ``DetectorState`` pytree
+and the pure ``detector_init`` / ``detector_step`` / ``detector_scan``
+functions every execution mode shares.
+
+The paper's detector is *online* — events arrive continuously and the TOS is
+updated incrementally — so the state that persists between arrivals is made
+explicit here instead of living inside one monolithic pipeline function:
+
+  ``DetectorState``   — surface, SAE, Harris LUT, lut_ready flag, PRNG key,
+                        chunk cursor, streaming DVFS rate estimator, and
+                        on-device kept/energy/latency accumulators.
+  ``ChunkInput``      — one fixed-size chunk of events plus its per-chunk
+                        hardware riders (BER, energy/latency coefficients)
+                        for the host-precomputed DVFS modes.
+  ``ChunkOutput``     — per-event scores/keep mask plus the per-chunk kept
+                        count and (online mode) chosen operating point.
+
+``detector_step`` folds exactly one chunk:
+
+    STCF denoise -> [online DVFS picks the operating point] -> TOS update
+    -> [BER injection at the operating voltage] -> score events against the
+    latest Harris LUT -> (every Nth chunk) refresh the LUT.
+
+``detector_scan`` is ``lax.scan`` of that step over pre-stacked chunks — the
+batch path.  The serving layer (``repro.serve``) instead calls the step one
+chunk at a time (``StreamingDetector``) or vmapped over many per-camera
+states (``DetectorPool``); all three spellings run the *same* pure function,
+so equivalence is structural rather than hoped-for.
+
+DVFS has two modes:
+
+  * precomputed (``cfg.dvfs_online=False``): per-chunk Vdd/BER/energy ride
+    in as ``ChunkInput`` data, computed on the host from the whole stream
+    (requires the stream upfront — batch only).
+  * online (``cfg.dvfs_online=True``): the step carries a streaming rate
+    estimator (``dvfs.RateState``) and picks the operating point *inside*
+    the fold from chunk timestamps — no host knowledge of the future, so it
+    works for live streams.  Property-tested equal to the precomputed path
+    on full streams.
+
+All functions are pure; ``cfg`` is a ``repro.core.pipeline.PipelineConfig``
+(duck-typed here to avoid a circular import) and must be hashable/static.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ber as ber_mod
+from repro.core import dvfs as dvfs_mod
+from repro.core import harris as harris_mod
+from repro.core import stcf as stcf_mod
+from repro.core import tos as tos_mod
+
+__all__ = [
+    "DetectorState",
+    "ChunkInput",
+    "ChunkOutput",
+    "detector_init",
+    "detector_step",
+    "detector_scan",
+    "select_update",
+    "chunk_input_riders",
+]
+
+
+class DetectorState(NamedTuple):
+    """Everything the detector carries between chunks — a single pytree.
+
+    Rides in a ``lax.scan`` carry, a ``vmap`` lane (one per camera), or a
+    host-held session object; ``jax.device_get`` of it is a checkpoint.
+    """
+
+    surface: jax.Array      # uint8  (H, W)  — the TOS
+    sae: jax.Array          # int32  (H, W)  — STCF last-timestamp surface
+    lut: jax.Array          # float32 (H, W) — latest Harris response
+    lut_ready: jax.Array    # bool scalar    — has the LUT ever been built?
+    key: jax.Array          # PRNG key       — BER injection draws
+    chunk_idx: jax.Array    # int32 scalar   — chunks folded so far (cursor)
+    rate: dvfs_mod.RateState  # streaming DVFS rate estimator carry
+    kept_total: jax.Array   # int32 scalar   — events surviving STCF so far
+    energy_pj: jax.Array    # float32 scalar — on-device energy accumulator
+    latency_ns: jax.Array   # float32 scalar — on-device latency accumulator
+
+
+class ChunkInput(NamedTuple):
+    """One fixed-size event chunk plus its host-precomputed hardware riders.
+
+    ``ts`` is chunk-relative int32 microseconds: the host rebases the int64
+    stream timestamps by a per-stream base aligned to a DVFS half-window
+    multiple, so device arithmetic (STCF recency diffs, DVFS window indices)
+    never sees an int64 and never wraps for streams up to ~35 minutes past
+    the base (the serving layer re-bases long sessions explicitly).
+
+    In online-DVFS mode ``ber``/``energy_coef``/``latency_coef`` are ignored
+    (pass zeros); the step derives them from the chosen operating point.
+    """
+
+    xy: jax.Array            # (chunk, 2) int32
+    ts: jax.Array            # (chunk,)   int32, chunk-relative microseconds
+    valid: jax.Array         # (chunk,)   bool
+    ber: jax.Array           # f32 scalar — write BER for this chunk
+    energy_coef: jax.Array   # f32 scalar — pJ per kept event
+    latency_coef: jax.Array  # f32 scalar — ns per kept event
+
+
+class ChunkOutput(NamedTuple):
+    scores: jax.Array        # (chunk,) f32 — Harris LUT read per event
+    keep: jax.Array          # (chunk,) bool — survived STCF
+    n_kept: jax.Array        # i32 scalar
+    vdd_idx: jax.Array       # i32 scalar — operating point (online mode)
+
+
+def select_update(cfg) -> Callable:
+    """TOS chunk-update callable for the configured backend."""
+    if cfg.backend == "jnp":
+        fn = (
+            tos_mod.tos_update_batched_onehot
+            if cfg.use_onehot_update
+            else tos_mod.tos_update_batched
+        )
+        return lambda s, xy, v: fn(s, xy, v, patch=cfg.patch, th=cfg.th)
+    if cfg.backend in ("pallas_nmc", "pallas_batched"):
+        from repro.kernels import ops  # deferred: keep jnp path Pallas-free
+
+        mode = "nmc" if cfg.backend == "pallas_nmc" else "batched"
+        return lambda s, xy, v: ops.tos_update_op(
+            s, xy, v, patch=cfg.patch, th=cfg.th, mode=mode,
+            interpret=cfg.interpret,
+        )
+    raise ValueError(
+        f"unknown backend {cfg.backend!r}; expected ('jnp', 'pallas_nmc', "
+        f"'pallas_batched')"
+    )
+
+
+def _online(cfg) -> bool:
+    return bool(cfg.dvfs and getattr(cfg, "dvfs_online", False))
+
+
+def detector_init(cfg, *, seed: Optional[int] = None) -> DetectorState:
+    """Fresh per-stream state (host call; arrays land on the default device)."""
+    return DetectorState(
+        surface=tos_mod.tos_new(cfg.height, cfg.width),
+        sae=stcf_mod.fresh_sae(cfg.height, cfg.width),
+        lut=jnp.full((cfg.height, cfg.width), -jnp.inf, dtype=jnp.float32),
+        lut_ready=jnp.asarray(False),
+        key=jax.random.PRNGKey(cfg.seed if seed is None else seed),
+        chunk_idx=jnp.int32(0),
+        rate=dvfs_mod.rate_state_init(),
+        kept_total=jnp.int32(0),
+        energy_pj=jnp.float32(0.0),
+        latency_ns=jnp.float32(0.0),
+    )
+
+
+def detector_step(
+    cfg, state: DetectorState, chunk: ChunkInput
+) -> tuple[DetectorState, ChunkOutput]:
+    """Fold one chunk of events into the detector state (pure, jit-able).
+
+    This is THE detector: ``detector_scan`` folds it over a pre-chunked
+    stream, ``StreamingDetector`` calls it per arriving chunk, and
+    ``DetectorPool`` vmaps it over camera lanes.  Per-event scores read the
+    *latest available* LUT — the EBE/FBF decoupling of luvHarris.
+    """
+    update = select_update(cfg)
+    surface, sae, lut = state.surface, state.sae, state.lut
+    lut_ready, key = state.lut_ready, state.key
+
+    sae, keep = stcf_mod.stcf_step(
+        sae, chunk.xy, chunk.ts, chunk.valid,
+        enabled=cfg.stcf_enabled,
+        support=cfg.stcf_support, tw=cfg.stcf_tw_us,
+    )
+
+    if _online(cfg):
+        tab = dvfs_mod.op_point_table(cfg.dvfs_cfg)
+        rate, vdd_idx = dvfs_mod.online_vdd_from_chunk_ts(
+            state.rate, chunk.ts, chunk.valid,
+            cfg=cfg.dvfs_cfg, caps=jnp.asarray(tab.caps),
+        )
+        ber_c = jnp.asarray(tab.ber)[vdd_idx]
+        energy_coef = jnp.asarray(tab.energy_pj)[vdd_idx]
+        latency_coef = jnp.asarray(tab.latency_ns)[vdd_idx]
+    else:
+        rate, vdd_idx = state.rate, jnp.int32(0)
+        ber_c = chunk.ber
+        energy_coef, latency_coef = chunk.energy_coef, chunk.latency_coef
+
+    surface = update(surface, chunk.xy, keep)
+
+    if cfg.inject_ber:
+        key, sub = jax.random.split(key)
+        surface = ber_mod.inject_write_errors_at(sub, surface, ber_c)
+
+    n_kept = jnp.sum(keep).astype(jnp.int32)
+
+    # Tag this chunk's events against the latest available LUT.
+    scores = jnp.where(
+        lut_ready,
+        harris_mod.score_events(lut, chunk.xy, keep),
+        -jnp.inf,
+    ).astype(jnp.float32)
+
+    do_refresh = ((state.chunk_idx + 1) % cfg.lut_every_chunks) == 0
+    lut = jax.lax.cond(
+        do_refresh,
+        lambda s: harris_mod.harris_response(
+            s,
+            sobel_size=cfg.sobel_size,
+            window_size=cfg.window_size,
+            k=cfg.harris_k,
+        ),
+        lambda s: lut,
+        surface,
+    )
+    lut_ready = lut_ready | do_refresh
+
+    new_state = DetectorState(
+        surface=surface,
+        sae=sae,
+        lut=lut,
+        lut_ready=lut_ready,
+        key=key,
+        chunk_idx=state.chunk_idx + 1,
+        rate=rate,
+        kept_total=state.kept_total + n_kept,
+        energy_pj=state.energy_pj + n_kept.astype(jnp.float32) * energy_coef,
+        latency_ns=state.latency_ns
+        + n_kept.astype(jnp.float32) * latency_coef,
+    )
+    return new_state, ChunkOutput(
+        scores=scores, keep=keep, n_kept=n_kept, vdd_idx=vdd_idx
+    )
+
+
+def detector_scan(
+    cfg, state: DetectorState, chunks: ChunkInput
+) -> tuple[DetectorState, ChunkOutput]:
+    """Fold a whole pre-stacked stream: ``lax.scan`` of ``detector_step``.
+
+    ``chunks`` leaves carry a leading ``(n_chunks, ...)`` axis.  Returns the
+    final state and the stacked per-chunk outputs; the host blocks only when
+    it fetches them.
+    """
+    return jax.lax.scan(functools.partial(detector_step, cfg), state, chunks)
+
+
+def chunk_input_riders(
+    n_chunks: int, vdd_arr: Optional[np.ndarray], cfg
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host-side per-chunk (ber, energy_coef, latency_coef) arrays.
+
+    ``vdd_arr=None`` means online mode — the riders are ignored by the step,
+    so zeros keep the traced program identical across streams.
+    """
+    from repro.core import hwmodel
+
+    if vdd_arr is None:
+        z = np.zeros((n_chunks,), np.float32)
+        return z, z.copy(), z.copy()
+    ber = np.asarray([hwmodel.ber_at(float(v)) for v in vdd_arr], np.float32)
+    e = np.asarray(
+        [hwmodel.patch_energy_pj(float(v)) for v in vdd_arr], np.float32
+    )
+    lat = np.asarray(
+        [hwmodel.patch_latency_ns(float(v)) for v in vdd_arr], np.float32
+    )
+    return ber, e, lat

@@ -47,13 +47,19 @@ def stack_chunks(
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, int]:
     """Pad a stream to a chunk multiple and stack into scan-ready arrays.
 
-    Returns ``(xy (C, chunk, 2) int32, ts (C, chunk) int32,
+    Returns ``(xy (C, chunk, 2) int32, ts (C, chunk) int64,
     valid (C, chunk) bool, n_events)``.  Padding slots sit at the in-bounds
     dummy pixel (0, 0) and replicate the last timestamp, exactly like
     ``chunk_iterator`` — padded events carry ``valid=False`` and are inert.
+
+    Timestamps stay int64: microsecond clocks pass 2**31 after ~35 minutes,
+    and an int32 cast here used to wrap them silently, corrupting STCF
+    recency windows and DVFS rates.  Rebasing to a device-friendly int32 is
+    the *pipeline's* job (chunk-relative, with an explicit per-stream base —
+    see ``repro.core.pipeline.chunk_ts_base``).
     """
     xy = np.asarray(xy, np.int32)
-    ts = np.asarray(ts)
+    ts = np.asarray(ts, np.int64)
     e = xy.shape[0]
     pad = (-e) % chunk
     if pad:
@@ -65,7 +71,7 @@ def stack_chunks(
     valid = np.arange(e + pad) < e
     return (
         xy.reshape(c, chunk, 2),
-        ts.astype(np.int32).reshape(c, chunk),
+        ts.reshape(c, chunk),
         valid.reshape(c, chunk),
         e,
     )
@@ -79,11 +85,22 @@ class PrefetchingLoader:
     stops the worker early — use it (or the context manager) when abandoning
     a partially-consumed stream so the thread does not linger on a full
     queue.
+
+    Timestamps are rebased by ``rebase_us`` in int64 on the host, then
+    device-put as chunk-relative int32; a chunk that would still overflow
+    int32 raises instead of silently wrapping (>35-minute clocks need a
+    rebase).  ``device_slabs=True`` declares the serving contract: chunks
+    sized and rebased for ``repro.serve.StreamingDetector.feed_device_chunk``
+    (pass ``rebase_us=session_base_us(...)``), so slabs go host->device
+    once, off the consumer thread, with no re-chunking.
     """
 
     def __init__(self, stream: EventStream, chunk: int, *, depth: int = 2,
-                 start_chunk: int = 0):
+                 start_chunk: int = 0, device_slabs: bool = False,
+                 rebase_us: int = 0):
         self._it = chunk_iterator(stream, chunk, start_chunk=start_chunk)
+        self.device_slabs = device_slabs   # declared consumer contract
+        self._rebase_us = int(rebase_us)
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._done = object()
         self._err: BaseException | None = None
@@ -105,9 +122,20 @@ class PrefetchingLoader:
     def _worker(self):
         try:
             for xy, ts, valid in self._it:
+                ts64 = ts - self._rebase_us
+                if ts64.size and int(ts64.max()) > np.iinfo(np.int32).max:
+                    # Never silently wrap (the bug stack_chunks used to
+                    # have): long recordings must pass a rebase_us.
+                    raise OverflowError(
+                        "chunk timestamps exceed int32 after rebase by "
+                        f"{self._rebase_us}; pass rebase_us= (see "
+                        "StreamingDetector / session_base_us) before "
+                        "streaming further"
+                    )
+                ts32 = ts64.astype(np.int32)
                 item = (
                     jax.device_put(xy),
-                    jax.device_put(ts.astype(np.int32)),
+                    jax.device_put(ts32),
                     jax.device_put(valid),
                 )
                 if not self._put(item):

@@ -1,0 +1,18 @@
+"""Serving layer: stateful streaming sessions + multi-camera multiplexing.
+
+  streaming — ``StreamingDetector``: one live camera session; feed event
+              slabs of any length, scores come back as chunks complete;
+              flush/snapshot/restore; automatic timebase re-basing for
+              unbounded session length.
+  pool      — ``DetectorPool``: N sessions through one compiled vmapped
+              ``detector_step`` with an active-mask lane system — sessions
+              join/leave without recompilation.
+
+Both fold the same pure detector core (``repro.core.state``) the batch
+pipeline folds, so a served stream is bit-identical to ``run_pipeline`` on
+the concatenated events.
+"""
+from repro.serve.pool import DetectorPool  # noqa: F401
+from repro.serve.streaming import StreamingDetector, session_base_us  # noqa: F401
+
+__all__ = ["StreamingDetector", "DetectorPool", "session_base_us"]

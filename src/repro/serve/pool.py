@@ -1,0 +1,312 @@
+"""Multi-camera serving: N sessions through ONE compiled vmapped step.
+
+``DetectorPool`` holds ``capacity`` detector lanes as a single stacked
+``DetectorState`` pytree on device and folds all of them with one
+``jax.vmap(detector_step)`` program per pump round.  Sessions join and
+leave at any time via an *active-mask lane system*: membership is data (a
+``(capacity,)`` bool mask plus per-lane dummy chunks), never a shape — so a
+changing session population NEVER triggers a recompile (asserted by a
+compile-count check in the tests), which is what lets one compiled program
+serve ragged arrivals from a fleet of cameras.
+
+Per lane the pool keeps exactly what a ``StreamingDetector`` keeps: a host
+re-chunking buffer (int64 timestamps, per-lane timebase), float64 energy
+accounting, and a result queue.  A lane's outputs are bit-identical to a
+standalone session — and hence to ``run_pipeline`` on that lane's full
+stream — regardless of how other lanes interleave (property-tested).
+
+Inactive/starved lanes ride along as masked no-ops: their chunk is all
+``valid=False`` and the mask keeps their carried state byte-identical
+(PRNG key and chunk cursor included), so a lane pausing for a while costs
+nothing and resumes exactly where it left off.
+
+Like ``StreamingDetector``, only fixed-Vdd and online-DVFS configs are
+servable (host-precomputed DVFS needs future knowledge).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dvfs as dvfs_mod
+from repro.core import pipeline as pipeline_mod
+from repro.core import state as state_mod
+from repro.serve import streaming as streaming_mod
+
+__all__ = ["DetectorPool"]
+
+
+def _mask_tree(active, new_tree, old_tree):
+    """Per-leaf select: lane i takes ``new`` iff ``active[i]``."""
+    def sel(new, old):
+        m = active.reshape((-1,) + (1,) * (new.ndim - 1))
+        return jnp.where(m, new, old)
+
+    return jax.tree.map(sel, new_tree, old_tree)
+
+
+class _Lane:
+    """Host-side bookkeeping for one pool slot."""
+
+    __slots__ = ("buf_xy", "buf_ts", "base", "results", "n_events",
+                 "n_chunks", "kept_total", "energy_pj", "latency_ns",
+                 "vdd_trace")
+
+    def __init__(self):
+        self.buf_xy = np.zeros((0, 2), np.int32)
+        self.buf_ts = np.zeros((0,), np.int64)
+        self.base: Optional[int] = None
+        self.results: list[tuple[np.ndarray, np.ndarray]] = []
+        self.n_events = 0
+        self.n_chunks = 0
+        self.kept_total = 0
+        self.energy_pj = 0.0
+        self.latency_ns = 0.0
+        self.vdd_trace: list[float] = []
+
+
+class DetectorPool:
+    """Fixed-capacity pool of detector sessions behind one vmapped step."""
+
+    def __init__(self, cfg, capacity: int, *, seed: int = 0):
+        streaming_mod._check_streamable(cfg)
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self._cfg = cfg
+        self._tcfg = pipeline_mod._trace_cfg(cfg)
+        self._capacity = capacity
+        self._seed = seed
+        self._online = bool(cfg.dvfs and cfg.dvfs_online)
+        self._tab = dvfs_mod.op_point_table(cfg.dvfs_cfg)
+        if not self._online:
+            r = state_mod.chunk_input_riders(
+                1, np.full((1,), cfg.vdd, np.float64), cfg
+            )
+            self._riders = tuple(np.float32(x[0]) for x in r)
+        else:
+            z = np.float32(0.0)
+            self._riders = (z, z, z)
+
+        self._states = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[state_mod.detector_init(cfg, seed=seed + i)
+              for i in range(capacity)],
+        )
+        self._active = np.zeros((capacity,), bool)
+        self._lanes: list[Optional[_Lane]] = [None] * capacity
+
+        # Per-pool jit (NOT globally cached): its private executable cache is
+        # the compile-count witness — membership churn must leave it at 1.
+        tcfg = self._tcfg
+
+        def _round(states, chunks, active):
+            new_states, outs = jax.vmap(
+                lambda s, c: state_mod.detector_step(tcfg, s, c)
+            )(states, chunks)
+            return _mask_tree(active, new_states, states), outs
+
+        self._vstep = jax.jit(_round)
+
+        def _reset(states, lane, fresh):
+            return jax.tree.map(
+                lambda arr, f: arr.at[lane].set(f), states, fresh
+            )
+
+        self._vreset = jax.jit(_reset)
+
+        half = cfg.dvfs_cfg.half_us
+
+        def _rebase(states, lane, delta):
+            one = jax.tree.map(lambda a: a[lane], states)
+            one = streaming_mod.shift_state_base(one, delta, half)
+            return jax.tree.map(
+                lambda arr, f: arr.at[lane].set(f), states, one
+            )
+
+        self._vrebase = jax.jit(_rebase)
+
+    # -- membership ---------------------------------------------------------
+
+    def connect(self, *, seed: Optional[int] = None) -> int:
+        """Claim a free lane for a new camera session; returns the lane id."""
+        free = np.flatnonzero(~self._active)
+        if not free.size:
+            raise RuntimeError(f"pool full ({self._capacity} sessions)")
+        lane = int(free[0])
+        fresh = state_mod.detector_init(
+            self._cfg, seed=self._seed + lane if seed is None else seed
+        )
+        self._states = self._vreset(self._states, jnp.int32(lane), fresh)
+        self._active[lane] = True
+        self._lanes[lane] = _Lane()
+        return lane
+
+    def disconnect(self, lane: int) -> dict:
+        """Release a lane; returns its final accounting stats."""
+        self._check_lane(lane)
+        stats = self.stats(lane)
+        self._active[lane] = False
+        self._lanes[lane] = None
+        return stats
+
+    @property
+    def capacity(self) -> int:
+        return self._capacity
+
+    @property
+    def active_lanes(self) -> list[int]:
+        return [int(i) for i in np.flatnonzero(self._active)]
+
+    def compile_cache_size(self) -> int:
+        """Executable count of the vmapped step (1 == no recompiles)."""
+        return self._vstep._cache_size()
+
+    # -- feeding ------------------------------------------------------------
+
+    def feed(self, lane: int, xy: np.ndarray, ts_us: np.ndarray) -> None:
+        """Buffer a slab for one session (any length, time-sorted)."""
+        self._check_lane(lane)
+        ln = self._lanes[lane]
+        xy = np.asarray(xy, np.int32).reshape(-1, 2)
+        ts = np.asarray(ts_us, np.int64).reshape(-1)
+        if not ts.size:
+            return
+        if ln.base is None:
+            ln.base = streaming_mod.session_base_us(int(ts[0]), self._cfg)
+        ln.buf_xy = np.concatenate([ln.buf_xy, xy], 0)
+        ln.buf_ts = np.concatenate([ln.buf_ts, ts], 0)
+        ln.n_events += int(ts.size)
+
+    def pump(self) -> int:
+        """Fold buffered full chunks, one vmapped round at a time, until no
+        active lane has a full chunk left.  Returns the number of rounds."""
+        rounds = 0
+        while self._pump_round():
+            rounds += 1
+        return rounds
+
+    def flush(self, lane: int) -> tuple[np.ndarray, np.ndarray]:
+        """Drain the lane's full chunks, then its padded partial tail, and
+        return everything not yet polled."""
+        self._check_lane(lane)
+        self.pump()
+        ln = self._lanes[lane]
+        if ln.buf_ts.size:
+            self._pump_round(flush_lane=lane)
+        return self.poll(lane)
+
+    def poll(self, lane: int) -> tuple[np.ndarray, np.ndarray]:
+        """Drain the lane's accumulated (scores, kept), in stream order."""
+        self._check_lane(lane)
+        ln = self._lanes[lane]
+        if not ln.results:
+            return (np.zeros((0,), np.float32), np.zeros((0,), bool))
+        scores = np.concatenate([r[0] for r in ln.results]).astype(np.float32)
+        kept = np.concatenate([r[1] for r in ln.results]).astype(bool)
+        ln.results.clear()
+        return scores, kept
+
+    def stats(self, lane: int) -> dict:
+        """Lane accounting: host float64 books plus the lane's on-device
+        accumulators (f32/i32 — aggregatable without per-chunk host sync)."""
+        self._check_lane(lane)
+        ln = self._lanes[lane]
+        n_scored = max(ln.kept_total, 1)
+        dev_kept, dev_energy, dev_latency = jax.device_get((
+            self._states.kept_total[lane],
+            self._states.energy_pj[lane],
+            self._states.latency_ns[lane],
+        ))
+        return {
+            "lane": lane,
+            "n_events": ln.n_events,
+            "n_chunks": ln.n_chunks,
+            "kept_total": ln.kept_total,
+            "energy_pj": ln.energy_pj,
+            "latency_ns_per_event": ln.latency_ns / n_scored,
+            "buffered": int(ln.buf_ts.size),
+            "device_kept_total": int(dev_kept),
+            "device_energy_pj": float(dev_energy),
+            "device_latency_ns": float(dev_latency),
+        }
+
+    # -- internals ----------------------------------------------------------
+
+    def _check_lane(self, lane: int) -> None:
+        if not (0 <= lane < self._capacity) or not self._active[lane]:
+            raise KeyError(f"lane {lane} is not an active session")
+
+    def _maybe_rebase(self, lane: int, chunk_ts: np.ndarray) -> None:
+        """Per-chunk timebase carry — shared plan with StreamingDetector."""
+        ln = self._lanes[lane]
+        ln.base, hops = streaming_mod.plan_rebase(ln.base, chunk_ts,
+                                                  self._cfg)
+        for hop in hops:
+            self._states = self._vrebase(
+                self._states, jnp.int32(lane), np.int32(hop)
+            )
+
+    def _pump_round(self, flush_lane: Optional[int] = None) -> bool:
+        cfg = self._cfg
+        chunk = cfg.chunk
+        ready: list[int] = []
+        n_valids: dict[int, int] = {}
+        xy = np.zeros((self._capacity, chunk, 2), np.int32)
+        ts = np.zeros((self._capacity, chunk), np.int32)
+        valid = np.zeros((self._capacity, chunk), bool)
+
+        for lane in self.active_lanes:
+            ln = self._lanes[lane]
+            if ln.buf_ts.size >= chunk:
+                n = chunk
+            elif lane == flush_lane and ln.buf_ts.size:
+                n = int(ln.buf_ts.size)
+            else:
+                continue
+            self._maybe_rebase(lane, ln.buf_ts[:n])
+            ready.append(lane)
+            n_valids[lane] = n
+            xy[lane, :n] = ln.buf_xy[:n]
+            ts64 = np.full((chunk,), ln.buf_ts[min(n, ln.buf_ts.size) - 1],
+                           np.int64)
+            ts64[:n] = ln.buf_ts[:n]
+            ts[lane] = (ts64 - ln.base).astype(np.int32)
+            valid[lane, :n] = True
+            ln.buf_xy = ln.buf_xy[n:]
+            ln.buf_ts = ln.buf_ts[n:]
+        if not ready:
+            return False
+
+        mask = np.zeros((self._capacity,), bool)
+        mask[ready] = True
+        chunks = state_mod.ChunkInput(
+            xy=jnp.asarray(xy),
+            ts=jnp.asarray(ts),
+            valid=jnp.asarray(valid),
+            ber=jnp.full((self._capacity,), self._riders[0], jnp.float32),
+            energy_coef=jnp.full(
+                (self._capacity,), self._riders[1], jnp.float32
+            ),
+            latency_coef=jnp.full(
+                (self._capacity,), self._riders[2], jnp.float32
+            ),
+        )
+        self._states, outs = self._vstep(
+            self._states, chunks, jnp.asarray(mask)
+        )
+        outs = jax.device_get(outs)  # one sync per round
+
+        for lane in ready:
+            ln = self._lanes[lane]
+            n = n_valids[lane]
+            streaming_mod.account_chunk(
+                ln, outs.n_kept[lane], outs.vdd_idx[lane],
+                online=self._online, tab=self._tab, fixed_vdd=cfg.vdd,
+            )
+            ln.results.append(
+                (outs.scores[lane, :n].copy(), outs.keep[lane, :n].copy())
+            )
+        return True

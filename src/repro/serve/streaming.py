@@ -1,0 +1,374 @@
+"""Stateful streaming sessions: one live event camera, served online.
+
+``StreamingDetector`` is the serving-layer wrapper around the pure detector
+core (``repro.core.state``): it owns a device-resident ``DetectorState``
+across arrivals, accepts event slabs of *any* length (an internal host
+buffer re-chunks them to the detector's fixed chunk size), and returns
+per-event corner scores as chunks complete.  ``flush()`` drains the partial
+tail, ``snapshot()``/``restore()`` checkpoint the whole session (state +
+buffer + accounting) for migration or resume.
+
+Fed the same stream in any slab partition, a session produces bit-identical
+scores, final state, and float64 energy accounting to one ``run_pipeline``
+call on the concatenated stream (property-tested) — streaming is a
+re-scheduling of the same fold, not an approximation.
+
+Timebase: host timestamps are int64 microseconds; the device sees
+chunk-relative int32 (base aligned to a DVFS half-window).  Sessions longer
+than ~18 minutes past the base are *re-based* automatically — the SAE and
+the rate-estimator window cursor shift by an explicit carry — so live
+cameras can run indefinitely without int32 wrap (the failure mode the old
+``stack_chunks`` int32 cast hid).
+
+DVFS: live sessions cannot know the future stream, so only fixed-Vdd and
+*online* DVFS (``cfg.dvfs_online=True``, the in-step rate estimator) are
+supported; asking for host-precomputed DVFS raises.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dvfs as dvfs_mod
+from repro.core import hwmodel
+from repro.core import pipeline as pipeline_mod
+from repro.core import state as state_mod
+from repro.core import stcf as stcf_mod
+
+__all__ = ["StreamingDetector", "session_base_us"]
+
+# Re-base a session once its chunk-relative clock passes this (us).  2**30
+# leaves a full 2x headroom to int32 wrap even for pathological slabs.
+REBASE_LIMIT_US = 1 << 30
+
+
+def session_base_us(first_ts_us: int, cfg) -> int:
+    """Timestamp base for a session whose first event is at ``first_ts_us``."""
+    half = cfg.dvfs_cfg.half_us
+    return (int(first_ts_us) // half) * half
+
+
+def _check_streamable(cfg) -> None:
+    if cfg.dvfs and not cfg.dvfs_online:
+        raise ValueError(
+            "host-precomputed DVFS needs the whole stream upfront and is "
+            "incompatible with streaming; use dvfs_online=True (in-step "
+            "controller) or dvfs=False (fixed vdd)"
+        )
+
+
+@functools.lru_cache(maxsize=None)
+def _step_fn(cfg):
+    """One jitted detector_step, shared by every session with this config."""
+    donate = ("state",) if jax.default_backend() != "cpu" else ()
+
+    def run(state, chunk):
+        return state_mod.detector_step(cfg, state, chunk)
+
+    return jax.jit(run, donate_argnames=donate)
+
+
+def shift_state_base(state: state_mod.DetectorState, delta_us,
+                     half_us: int) -> state_mod.DetectorState:
+    """Move a detector state's timebase forward by ``delta_us`` (pure).
+
+    ``delta_us`` must be a non-negative multiple of the DVFS half-window.
+    The SAE's stored timestamps and the rate estimator's window cursor are
+    the only time-bearing carries; both shift by the explicit carry.  SAE
+    entries that would fall below the 'never fired' sentinel clamp onto it —
+    they are > ``delta_us`` stale, far beyond any STCF recency window, so
+    the clamp is exact w.r.t. every future keep decision.
+    """
+    delta = jnp.int32(delta_us)
+    never = stcf_mod._NEVER
+    sae = jnp.where(
+        state.sae > never // 2,
+        jnp.maximum(state.sae, delta + never) - delta,
+        never,
+    ).astype(jnp.int32)
+    rate = state.rate._replace(
+        win=(state.rate.win - delta // jnp.int32(half_us)).astype(jnp.int32)
+    )
+    return state._replace(sae=sae, rate=rate)
+
+
+@functools.lru_cache(maxsize=None)
+def _rebase_fn(cfg):
+    half = cfg.dvfs_cfg.half_us
+
+    def run(state, delta_us):
+        return shift_state_base(state, delta_us, half)
+
+    return jax.jit(run)
+
+
+def plan_rebase(base: int, chunk_ts: np.ndarray, cfg) -> tuple[int, list]:
+    """Decide the timebase carry before folding a chunk (shared by the
+    session and the pool so their rebase arithmetic cannot drift).
+
+    Returns ``(new_base, hops)`` — ``hops`` are int32-safe, half-window-
+    aligned shift amounts to apply to the device state in order.  Jumps past
+    int32 split into hops; stale SAE entries saturate onto the sentinel
+    either way, so hopping is exact.  A single chunk spanning more than
+    int32 microseconds (> ~35 minutes of silence *within* one chunk) has no
+    valid base and raises.
+    """
+    if int(chunk_ts[-1]) - base <= REBASE_LIMIT_US:
+        return base, []
+    new_base = session_base_us(int(chunk_ts[0]), cfg)
+    hops: list[int] = []
+    delta = new_base - base
+    if delta <= 0:
+        new_base = base
+    else:
+        half = cfg.dvfs_cfg.half_us
+        hop_max = ((1 << 30) // half) * half
+        while delta > 0:
+            hop = min(delta, hop_max)
+            hops.append(hop)
+            delta -= hop
+    if int(chunk_ts[-1]) - new_base > np.iinfo(np.int32).max:
+        raise OverflowError(
+            "a single chunk spans more than int32 microseconds of stream "
+            "time; no timebase fits it"
+        )
+    return new_base, hops
+
+
+def account_chunk(acc, n_kept: int, vdd_idx: int, *, online: bool,
+                  tab, fixed_vdd: float) -> None:
+    """Fold one chunk's output into host float64 books (shared by the
+    session and the pool — one formula, bit-exact vs ``run_pipeline``).
+
+    ``acc`` is duck-typed: anything with ``kept_total`` / ``energy_pj`` /
+    ``latency_ns`` / ``vdd_trace`` / ``n_chunks`` attributes.
+    """
+    vdd = float(tab.vdd64[int(vdd_idx)]) if online else float(fixed_vdd)
+    nk = int(n_kept)
+    acc.kept_total += nk
+    acc.energy_pj += nk * hwmodel.patch_energy_pj(vdd)
+    acc.latency_ns += nk * hwmodel.patch_latency_ns(vdd)
+    acc.vdd_trace.append(vdd)
+    acc.n_chunks += 1
+
+
+class StreamingDetector:
+    """One camera session: feed event slabs, get corner scores back.
+
+    Construction puts a fresh ``DetectorState`` on device.  ``feed`` buffers
+    arbitrary-length slabs, folds every completed chunk through the shared
+    jitted ``detector_step``, and returns ``(scores, kept)`` for exactly the
+    events those chunks consumed (in stream order); events still buffered
+    are returned by a later ``feed`` or by ``flush()``.
+    """
+
+    def __init__(self, cfg, *, seed: Optional[int] = None,
+                 base_ts: Optional[int] = None):
+        _check_streamable(cfg)
+        self._cfg = cfg
+        self._tcfg = pipeline_mod._trace_cfg(cfg)
+        self._step = _step_fn(self._tcfg)
+        self._state = state_mod.detector_init(cfg, seed=seed)
+        self._buf_xy = np.zeros((0, 2), np.int32)
+        self._buf_ts = np.zeros((0,), np.int64)
+        self._base: Optional[int] = None if base_ts is None else int(base_ts)
+        self._online = bool(cfg.dvfs and cfg.dvfs_online)
+        self._tab = dvfs_mod.op_point_table(cfg.dvfs_cfg)
+        if not self._online:
+            riders = state_mod.chunk_input_riders(
+                1, np.full((1,), cfg.vdd, np.float64), cfg
+            )
+            self._riders = tuple(np.float32(r[0]) for r in riders)
+        else:
+            z = np.float32(0.0)
+            self._riders = (z, z, z)
+        # Host-side float64 accounting (bit-exact vs run_pipeline's).
+        self.n_events = 0
+        self.n_chunks = 0
+        self.kept_total = 0
+        self.energy_pj = 0.0
+        self.latency_ns = 0.0
+        self.vdd_trace: list[float] = []
+
+    # -- feeding ------------------------------------------------------------
+
+    def feed(self, xy: np.ndarray, ts_us: np.ndarray
+             ) -> tuple[np.ndarray, np.ndarray]:
+        """Append a slab (any length, time-sorted) and fold complete chunks."""
+        xy = np.asarray(xy, np.int32).reshape(-1, 2)
+        ts = np.asarray(ts_us, np.int64).reshape(-1)
+        if ts.size:
+            if self._base is None:
+                self._base = session_base_us(int(ts[0]), self._cfg)
+            self._buf_xy = np.concatenate([self._buf_xy, xy], 0)
+            self._buf_ts = np.concatenate([self._buf_ts, ts], 0)
+            self.n_events += int(ts.size)
+        return self._drain(flush_tail=False)
+
+    def flush(self) -> tuple[np.ndarray, np.ndarray]:
+        """Fold the buffered partial tail (padded, masked invalid)."""
+        return self._drain(flush_tail=True)
+
+    def feed_device_chunk(self, xy, ts, valid) -> tuple[np.ndarray, np.ndarray]:
+        """Fold one pre-chunked, pre-rebased, device-resident chunk.
+
+        The fast path for ``PrefetchingLoader(device_slabs=True, rebase_us=
+        session_base_us(...))``: the loader already device-put the arrays on
+        its worker thread.  Requires an empty host buffer (don't mix with
+        partial ``feed`` slabs) and ``self._base`` set to the loader's
+        ``rebase_us``.
+        """
+        if self._buf_ts.size:
+            raise RuntimeError(
+                "feed_device_chunk cannot interleave with buffered feed() "
+                "slabs; flush() first"
+            )
+        if self._base is None:
+            raise RuntimeError(
+                "set base_ts (== the loader's rebase_us) before feeding "
+                "device chunks"
+            )
+        chunk = state_mod.ChunkInput(
+            xy=xy, ts=ts, valid=valid,
+            ber=jnp.asarray(self._riders[0]),
+            energy_coef=jnp.asarray(self._riders[1]),
+            latency_coef=jnp.asarray(self._riders[2]),
+        )
+        n_valid = int(np.asarray(valid).sum())
+        self._state, out = self._step(self._state, chunk)
+        self.n_events += n_valid
+        return self._account([out], [n_valid])
+
+    # -- internals ----------------------------------------------------------
+
+    def _maybe_rebase(self, chunk_ts: np.ndarray) -> None:
+        """Re-base before folding a chunk whose relative clock ran long
+        (explicit carry on the SAE and the rate estimator's window cursor).
+        """
+        self._base, hops = plan_rebase(self._base, chunk_ts, self._cfg)
+        for hop in hops:
+            self._state = _rebase_fn(self._tcfg)(self._state, np.int32(hop))
+
+    def _drain(self, *, flush_tail: bool) -> tuple[np.ndarray, np.ndarray]:
+        cfg = self._cfg
+        outs, n_valids = [], []
+        while self._buf_ts.size >= cfg.chunk:
+            self._maybe_rebase(self._buf_ts[:cfg.chunk])
+            outs.append(self._fold(self._buf_xy[:cfg.chunk],
+                                   self._buf_ts[:cfg.chunk], cfg.chunk))
+            n_valids.append(cfg.chunk)
+            self._buf_xy = self._buf_xy[cfg.chunk:]
+            self._buf_ts = self._buf_ts[cfg.chunk:]
+        if flush_tail and self._buf_ts.size:
+            self._maybe_rebase(self._buf_ts)
+            n = int(self._buf_ts.size)
+            xy = np.zeros((cfg.chunk, 2), np.int32)
+            ts = np.full((cfg.chunk,), self._buf_ts[-1], np.int64)
+            xy[:n] = self._buf_xy
+            ts[:n] = self._buf_ts
+            outs.append(self._fold(xy, ts, n))
+            n_valids.append(n)
+            self._buf_xy = self._buf_xy[:0]
+            self._buf_ts = self._buf_ts[:0]
+        return self._account(outs, n_valids)
+
+    def _fold(self, xy: np.ndarray, ts: np.ndarray, n_valid: int):
+        chunk = state_mod.ChunkInput(
+            xy=jnp.asarray(xy),
+            ts=jnp.asarray((ts - self._base).astype(np.int32)),
+            valid=jnp.asarray(np.arange(self._cfg.chunk) < n_valid),
+            ber=jnp.asarray(self._riders[0]),
+            energy_coef=jnp.asarray(self._riders[1]),
+            latency_coef=jnp.asarray(self._riders[2]),
+        )
+        self._state, out = self._step(self._state, chunk)
+        return out
+
+    def _account(self, outs, n_valids) -> tuple[np.ndarray, np.ndarray]:
+        if not outs:
+            return (np.zeros((0,), np.float32), np.zeros((0,), bool))
+        outs = jax.device_get(outs)  # one sync per feed/flush, not per chunk
+        scores, kept = [], []
+        for out, n_valid in zip(outs, n_valids):
+            account_chunk(self, out.n_kept, out.vdd_idx,
+                          online=self._online, tab=self._tab,
+                          fixed_vdd=self._cfg.vdd)
+            scores.append(out.scores[:n_valid])
+            kept.append(out.keep[:n_valid])
+        return (
+            np.concatenate(scores).astype(np.float32),
+            np.concatenate(kept).astype(bool),
+        )
+
+    # -- checkpointing ------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """Host checkpoint of the whole session (state+buffer+accounting)."""
+        return {
+            "cfg": self._cfg,
+            "state": jax.device_get(self._state),
+            "buf_xy": self._buf_xy.copy(),
+            "buf_ts": self._buf_ts.copy(),
+            "base": self._base,
+            "accounting": {
+                "n_events": self.n_events,
+                "n_chunks": self.n_chunks,
+                "kept_total": self.kept_total,
+                "energy_pj": self.energy_pj,
+                "latency_ns": self.latency_ns,
+                "vdd_trace": list(self.vdd_trace),
+            },
+        }
+
+    @classmethod
+    def restore(cls, snap: dict) -> "StreamingDetector":
+        det = cls(snap["cfg"], base_ts=snap["base"])
+        det._state = jax.tree.map(jnp.asarray, snap["state"])
+        det._buf_xy = np.asarray(snap["buf_xy"], np.int32).copy()
+        det._buf_ts = np.asarray(snap["buf_ts"], np.int64).copy()
+        det._base = snap["base"]
+        acc = snap["accounting"]
+        det.n_events = acc["n_events"]
+        det.n_chunks = acc["n_chunks"]
+        det.kept_total = acc["kept_total"]
+        det.energy_pj = acc["energy_pj"]
+        det.latency_ns = acc["latency_ns"]
+        det.vdd_trace = list(acc["vdd_trace"])
+        return det
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def state(self) -> state_mod.DetectorState:
+        return self._state
+
+    @property
+    def base_ts(self) -> Optional[int]:
+        return self._base
+
+    def stats(self) -> dict:
+        """Session accounting.  ``energy_pj``/``latency_ns_per_event`` are
+        the host float64 books (bit-exact vs ``run_pipeline``); the
+        ``device_*`` entries read the state's on-device float32/int32
+        accumulators — the numbers a sharded deployment can aggregate
+        without any per-chunk host traffic (they agree to f32 precision)."""
+        n_scored = max(self.kept_total, 1)
+        dev_kept, dev_energy, dev_latency = jax.device_get(
+            (self._state.kept_total, self._state.energy_pj,
+             self._state.latency_ns)
+        )
+        return {
+            "n_events": self.n_events,
+            "n_chunks": self.n_chunks,
+            "kept_total": self.kept_total,
+            "energy_pj": self.energy_pj,
+            "latency_ns_per_event": self.latency_ns / n_scored,
+            "buffered": int(self._buf_ts.size),
+            "device_kept_total": int(dev_kept),
+            "device_energy_pj": float(dev_energy),
+            "device_latency_ns": float(dev_latency),
+        }

@@ -3,8 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from _prop import given, settings, st
 from conftest import make_tos
-from repro.core import ber
+from repro.core import ber, hwmodel
 
 
 def test_encode_decode_roundtrip(rng):
@@ -28,6 +29,27 @@ def test_corrupted_values_stay_in_valid_range(rng):
     t = jnp.asarray(make_tos(rng, 128, 128))
     out = np.asarray(ber.inject_write_errors(jax.random.PRNGKey(2), t, 0.025))
     assert np.all((out == 0) | (out >= 225))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    vdd=st.sampled_from([0.58, 0.6, 0.605, 0.61, 0.615, 0.62, 0.8, 1.2]),
+    seed=st.integers(0, 2**31 - 1),
+    hw_seed=st.integers(0, 2**31 - 1),
+)
+def test_property_injection_paths_agree(vdd, seed, hw_seed):
+    """All three injection spellings are ONE function: the voltage wrapper
+    (reference-pipeline style), the traced-BER primitive (scan style), and
+    the static-BER wrapper produce identical surfaces for the same key —
+    the oracle and the production path cannot drift."""
+    t = jnp.asarray(make_tos(np.random.default_rng(hw_seed), 48, 48))
+    key = jax.random.PRNGKey(seed)
+    rate = hwmodel.ber_at(vdd)
+    a = ber.corrupt_surface(key, t, vdd)
+    b = ber.inject_write_errors_at(key, t, jnp.float32(rate))
+    c = ber.inject_write_errors(key, t, rate)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
 
 
 def test_flip_rate_matches(rng):

@@ -39,6 +39,41 @@ def test_dvfs_saves_power_vs_fixed():
     assert w.avg_power_mw() < wo.avg_power_mw()
 
 
+def test_online_estimator_matches_per_chunk_vdd():
+    """The streaming 3-counter carry sees exactly what the host precompute
+    sees: identical operating-point picks chunk for chunk, across the whole
+    LUT (the burst profile sweeps several voltage steps)."""
+    import jax.numpy as jnp
+
+    from repro.events import stream as stream_mod
+
+    prof = np.array([0.5, 10.0, 60.0, 3.0, 30.0, 80.0, 1.0, 20.0])
+    st = synthetic.rate_profile_stream(prof, window_us=150, seed=5)
+    cfg = dvfs.DvfsConfig(tw_us=150)
+    chunk = 256
+    cxy, cts, cval, n_events = stream_mod.stack_chunks(st.xy, st.ts, chunk)
+    n_chunks = cxy.shape[0]
+
+    expect = dvfs.per_chunk_vdd(st.ts, n_chunks, chunk, cfg,
+                                n_events=n_events)
+
+    tab = dvfs.op_point_table(cfg)
+    base = (int(st.ts[0]) // cfg.half_us) * cfg.half_us
+    rate = dvfs.rate_state_init()
+    got = np.zeros((n_chunks,), np.float64)
+    for c in range(n_chunks):
+        rate, idx = dvfs.online_vdd_from_chunk_ts(
+            rate,
+            jnp.asarray((cts[c] - base).astype(np.int32)),
+            jnp.asarray(cval[c]),
+            cfg=cfg, caps=jnp.asarray(tab.caps),
+        )
+        got[c] = tab.vdd64[int(idx)]
+
+    np.testing.assert_array_equal(got, expect)
+    assert len(set(expect.tolist())) >= 3    # several operating points hit
+
+
 def test_counter_saturation():
     cfg = dvfs.DvfsConfig(counter_bits=4)     # saturate at 15
     ts = np.sort(np.random.default_rng(0).integers(0, 5000, 500)).astype(np.int64)

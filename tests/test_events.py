@@ -89,6 +89,86 @@ def test_prefetch_loader_context_manager():
     assert not loader._thread.is_alive()
 
 
+def test_stack_chunks_keeps_int64_timestamps():
+    """Regression: microsecond clocks pass 2**31 after ~35 min; the old
+    int32 cast in stack_chunks wrapped them silently."""
+    ts = np.array([2**31 + 5, 2**31 + 7000, 2**33], np.int64)
+    xy = np.zeros((3, 2), np.int32)
+    cxy, cts, cval, n = stream.stack_chunks(xy, ts, 4)
+    assert cts.dtype == np.int64
+    assert n == 3
+    np.testing.assert_array_equal(
+        cts[0], [2**31 + 5, 2**31 + 7000, 2**33, 2**33]  # pad replicates
+    )
+    assert np.all(cts >= 0)                              # nothing wrapped
+
+
+def test_pipeline_timestamps_past_int32():
+    """End-to-end: a stream whose clock sits past 2**31 us detects exactly
+    like the same stream at t=0 (the device sees rebased int32)."""
+    from repro.core import pipeline
+
+    st = synthetic.shapes_stream(duration_us=20_000, seed=6)
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    shift = np.int64(2**31) + 12_345
+    a = pipeline.run_pipeline(st.xy, st.ts, cfg)
+    b = pipeline.run_pipeline(st.xy, st.ts + shift, cfg)
+    np.testing.assert_array_equal(a.scores, b.scores)
+    np.testing.assert_array_equal(a.kept, b.kept)
+    np.testing.assert_array_equal(a.tos, b.tos)
+
+    # DVFS windowing is shift-invariant for half-window-aligned shifts.
+    cfg_d = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2, dvfs=True)
+    half = cfg_d.dvfs_cfg.half_us
+    shift_aligned = (np.int64(2**31) // half + 1) * half
+    ad = pipeline.run_pipeline(st.xy, st.ts, cfg_d)
+    bd = pipeline.run_pipeline(st.xy, st.ts + shift_aligned, cfg_d)
+    np.testing.assert_array_equal(ad.vdd_trace, bd.vdd_trace)
+    np.testing.assert_array_equal(ad.scores, bd.scores)
+
+
+def test_prefetch_loader_resume_matches_slice():
+    """start_chunk > 0 yields exactly the chunks chunk_iterator would from
+    that index (deterministic checkpoint resume)."""
+    st = synthetic.shapes_stream(duration_us=20_000, seed=4)
+    ref = list(stream.chunk_iterator(st, 256))[3:]
+    with stream.PrefetchingLoader(st, 256, start_chunk=3) as loader:
+        got = [(np.asarray(x), np.asarray(t), np.asarray(v))
+               for x, t, v in loader]
+    assert len(got) == len(ref)
+    for (gx, gt, gv), (rx, rt, rv) in zip(got, ref):
+        np.testing.assert_array_equal(gx, rx)
+        np.testing.assert_array_equal(gt, rt.astype(np.int32))
+        np.testing.assert_array_equal(gv, rv)
+    # abandoning mid-stream must leave no live worker thread
+    loader2 = stream.PrefetchingLoader(st, 256, start_chunk=1, depth=1)
+    next(loader2)
+    loader2.close()
+    assert not loader2._thread.is_alive()
+
+
+def test_prefetch_loader_device_slabs_overflow_guard():
+    class FarFuture:
+        xy = np.zeros((4, 2), np.int32)
+        ts = np.full((4,), 2**32, np.int64)
+
+        def __len__(self):
+            return 4
+
+    with stream.PrefetchingLoader(
+        FarFuture(), 4, device_slabs=True, rebase_us=0
+    ) as loader:
+        with pytest.raises(OverflowError, match="int32 after rebase"):
+            list(loader)
+    # with the right rebase the same stream loads fine
+    with stream.PrefetchingLoader(
+        FarFuture(), 4, device_slabs=True, rebase_us=2**32
+    ) as loader:
+        chunks = list(loader)
+    assert len(chunks) == 1
+    assert int(np.asarray(chunks[0][1])[0]) == 0
+
+
 def test_dataset_registry():
     assert set(datasets.DATASETS) == {
         "driving", "laser", "spinner", "dynamic_dof", "shapes_dof"}

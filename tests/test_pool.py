@@ -1,0 +1,153 @@
+"""DetectorPool: many cameras through one compiled vmapped step.
+
+Contracts: (1) a lane's outputs are bit-identical to ``run_pipeline`` on
+that lane's full stream no matter how other lanes interleave; (2) sessions
+joining and leaving never recompile the step (membership is data, not
+shape) — asserted via the jit executable-cache count.
+"""
+import numpy as np
+import pytest
+
+from repro.core import pipeline
+from repro.events import synthetic
+from repro.serve import DetectorPool
+
+
+@pytest.fixture(scope="module")
+def streams():
+    a = synthetic.shapes_stream(duration_us=40_000, seed=0)
+    b = synthetic.dynamic_stream(duration_us=40_000, seed=1)
+    return [
+        (a.xy[:2000], a.ts[:2000]),
+        (b.xy[:1500], b.ts[:1500]),
+        (a.xy[2000:3700], a.ts[2000:3700]),
+        (b.xy[1500:2600], b.ts[1500:2600]),
+    ]
+
+
+def _serve_staggered(pool, streams, cfg, *, slab_rng_seed=0):
+    """Interleave the streams with staggered joins/leaves; return per-stream
+    (scores, kept) plus the pump-round count."""
+    rng = np.random.default_rng(slab_rng_seed)
+    n = len(streams)
+    lanes, cursors = {}, {i: 0 for i in range(n)}
+    results = {i: ([], []) for i in range(n)}
+    step = 0
+    lanes[0] = pool.connect(seed=cfg.seed)
+    while lanes or any(cursors[i] < len(streams[i][1]) for i in range(n)):
+        step += 1
+        # one new session every other round until all have joined
+        joined = len([i for i in range(n) if i in lanes or cursors[i] > 0])
+        if step % 2 == 1 and joined < n:
+            nxt = next(i for i in range(n)
+                       if i not in lanes and cursors[i] == 0)
+            lanes[nxt] = pool.connect(seed=cfg.seed)
+        for i, lane in list(lanes.items()):
+            xy, ts = streams[i]
+            c = cursors[i]
+            if c >= len(ts):
+                s, k = pool.flush(lane)
+                results[i][0].append(s)
+                results[i][1].append(k)
+                stats = pool.disconnect(lane)
+                assert stats["buffered"] == 0
+                del lanes[i]
+                continue
+            slab = int(rng.integers(40, 600))
+            pool.feed(lane, xy[c:c + slab], ts[c:c + slab])
+            cursors[i] = c + slab
+        pool.pump()
+        for i, lane in lanes.items():
+            s, k = pool.poll(lane)
+            results[i][0].append(s)
+            results[i][1].append(k)
+    return {
+        i: (np.concatenate(results[i][0]), np.concatenate(results[i][1]))
+        for i in range(n)
+    }
+
+
+def test_pool_staggered_join_leave_matches_run_pipeline(streams):
+    cfg = pipeline.PipelineConfig(
+        chunk=256, lut_every_chunks=2, vdd=0.6, inject_ber=True
+    )
+    pool = DetectorPool(cfg, capacity=4)
+    served = _serve_staggered(pool, streams, cfg)
+    for i, (xy, ts) in enumerate(streams):
+        ref = pipeline.run_pipeline(xy, ts, cfg)
+        np.testing.assert_array_equal(served[i][0], ref.scores,
+                                      err_msg=f"lane {i} scores")
+        np.testing.assert_array_equal(served[i][1], ref.kept,
+                                      err_msg=f"lane {i} kept")
+    # membership churn (4 joins, 4 leaves, ragged arrivals) => 1 executable
+    assert pool.compile_cache_size() == 1
+
+
+def test_pool_online_dvfs_lanes_are_independent(streams):
+    cfg = pipeline.PipelineConfig(
+        chunk=256, lut_every_chunks=3, dvfs=True, dvfs_online=True
+    )
+    pool = DetectorPool(cfg, capacity=4)
+    served = _serve_staggered(pool, streams[:2], cfg, slab_rng_seed=3)
+    for i in range(2):
+        xy, ts = streams[i]
+        ref = pipeline.run_pipeline(xy, ts, cfg)
+        np.testing.assert_array_equal(served[i][0], ref.scores)
+    assert pool.compile_cache_size() == 1
+
+
+def test_pool_lane_reuse_after_disconnect(streams):
+    """A freed lane serves a fresh session from a clean state."""
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    pool = DetectorPool(cfg, capacity=1)
+    for i in range(2):
+        xy, ts = streams[i]
+        lane = pool.connect(seed=cfg.seed)
+        pool.feed(lane, xy, ts)
+        pool.pump()
+        scores, kept = pool.flush(lane)
+        pool.disconnect(lane)
+        ref = pipeline.run_pipeline(xy, ts, cfg)
+        np.testing.assert_array_equal(scores, ref.scores)
+        np.testing.assert_array_equal(kept, ref.kept)
+    assert pool.compile_cache_size() == 1
+
+
+def test_pool_capacity_and_lane_errors():
+    cfg = pipeline.PipelineConfig(chunk=128)
+    pool = DetectorPool(cfg, capacity=2)
+    a = pool.connect()
+    b = pool.connect()
+    with pytest.raises(RuntimeError, match="pool full"):
+        pool.connect()
+    pool.disconnect(a)
+    with pytest.raises(KeyError):
+        pool.feed(a, np.zeros((1, 2), np.int32), np.zeros((1,), np.int64))
+    c = pool.connect()          # freed lane is reusable
+    assert c == a
+    assert sorted(pool.active_lanes) == sorted([b, c])
+    with pytest.raises(ValueError, match="incompatible with streaming"):
+        DetectorPool(pipeline.PipelineConfig(dvfs=True), capacity=2)
+
+
+def test_pool_idle_lane_state_is_untouched(streams):
+    """A connected lane that receives no events while others pump keeps its
+    state byte-identical (mask semantics, PRNG key included)."""
+    import jax
+
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2,
+                                  inject_ber=True, vdd=0.6)
+    pool = DetectorPool(cfg, capacity=2)
+    busy = pool.connect(seed=cfg.seed)
+    idle = pool.connect(seed=cfg.seed)
+    before = jax.device_get(
+        jax.tree.map(lambda a: a[idle], pool._states)
+    )
+    xy, ts = streams[0]
+    pool.feed(busy, xy, ts)
+    pool.pump()
+    after = jax.device_get(
+        jax.tree.map(lambda a: a[idle], pool._states)
+    )
+    for x, y in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

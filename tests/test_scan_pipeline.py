@@ -124,3 +124,76 @@ def test_batched_dvfs_per_stream(stream):
     batch = pipeline.run_pipeline_batched(xy, ts, cfg)
     for i in range(2):
         _assert_bitexact(batch[i], pipeline.run_pipeline(xy[i], ts[i], cfg))
+
+
+def test_online_dvfs_equals_precomputed_on_full_streams():
+    """The in-step streaming controller == the host precompute, bit for bit
+    (vdd trace, scores, surface, float64 energy), across several operating
+    points — the contract that lets serving swap DVFS modes freely."""
+    from repro.events import synthetic as synth
+    from repro.core import dvfs as dvfs_mod
+
+    prof = np.array([0.5, 10.0, 60.0, 3.0, 30.0, 80.0, 1.0, 20.0])
+    st = synth.rate_profile_stream(prof, window_us=150, seed=5)
+    dcfg = dvfs_mod.DvfsConfig(tw_us=150)
+    kw = dict(chunk=256, lut_every_chunks=4, dvfs=True, dvfs_cfg=dcfg,
+              inject_ber=True)
+    a = pipeline.run_pipeline(st.xy, st.ts,
+                              pipeline.PipelineConfig(dvfs_online=True, **kw))
+    b = pipeline.run_pipeline(st.xy, st.ts, pipeline.PipelineConfig(**kw))
+    _assert_bitexact(a, b)
+    assert len(set(a.vdd_trace.tolist())) >= 3
+
+
+def test_online_dvfs_low_rate_stream(stream):
+    """Low-rate stream: the controller pins the floor voltage, online and
+    precomputed alike (and BER injection keys stay in lockstep)."""
+    cfg_on = pipeline.PipelineConfig(
+        chunk=256, lut_every_chunks=3, dvfs=True, dvfs_online=True,
+        inject_ber=True,
+    )
+    cfg_pre = pipeline.PipelineConfig(
+        chunk=256, lut_every_chunks=3, dvfs=True, inject_ber=True
+    )
+    a = pipeline.run_pipeline(stream.xy, stream.ts, cfg_on)
+    b = pipeline.run_pipeline(stream.xy, stream.ts, cfg_pre)
+    _assert_bitexact(a, b)
+
+
+def test_reference_rejects_online_dvfs(stream):
+    cfg = pipeline.PipelineConfig(dvfs=True, dvfs_online=True)
+    with pytest.raises(ValueError, match="online DVFS"):
+        pipeline.run_pipeline_reference(stream.xy[:512], stream.ts[:512], cfg)
+
+
+def test_detector_state_roundtrips_through_host(stream):
+    """device_get(DetectorState) -> device_put -> continue == uninterrupted
+    (the checkpointing primitive snapshot/restore builds on)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import state as state_mod
+
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    prep = pipeline._prepare(stream.xy[:2048], stream.ts[:2048], cfg)
+    chunks = pipeline._chunk_inputs(prep)
+    tcfg = pipeline._trace_cfg(cfg)
+
+    s_all, out_all = state_mod.detector_scan(tcfg,
+                                             state_mod.detector_init(cfg),
+                                             chunks)
+
+    half = jax.tree.map(lambda a: a[:4], chunks)
+    rest = jax.tree.map(lambda a: a[4:], chunks)
+    s1, out1 = state_mod.detector_scan(tcfg, state_mod.detector_init(cfg),
+                                       half)
+    s1 = jax.tree.map(jnp.asarray, jax.device_get(s1))    # host roundtrip
+    s2, out2 = state_mod.detector_scan(tcfg, s1, rest)
+
+    for a, b in zip(jax.tree.leaves(jax.device_get(s_all)),
+                    jax.tree.leaves(jax.device_get(s2))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(out1.scores), np.asarray(out2.scores)]),
+        np.asarray(out_all.scores),
+    )
