@@ -16,13 +16,14 @@ def _run(stream, vdd, inject):
     return pipeline.run_pipeline(stream.xy, stream.ts, cfg)
 
 
-def rows():
+def rows(smoke: bool = False):
     out = []
+    duration_us = 12_000 if smoke else 80_000
     for name, gen, seed in (
         ("shapes_dof", synthetic.shapes_stream, 0),
         ("dynamic_dof", synthetic.dynamic_stream, 1),
     ):
-        stream = gen(duration_us=80_000, seed=seed)
+        stream = gen(duration_us=duration_us, seed=seed)
         base = _run(stream, 1.2, False)
         ok0 = np.isfinite(base.scores)
         auc0 = pr_eval.pr_auc(base.scores[ok0], stream.is_corner[ok0])

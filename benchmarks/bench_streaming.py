@@ -1,22 +1,35 @@
 """Serving-layer benchmark: slab latency + aggregate throughput of the
-streaming detector vs the offline batch path.
+ring-buffered pool runtime vs the per-round path vs the offline batch scan.
 
 Rows per pool size K in {1, 4, 16}:
 
   * ``poolK_slab_p50_ms`` / ``poolK_slab_p99_ms`` — wall latency of one
-    serving round (feed a slab to every live session + pump + poll), the
-    metric a live camera actually experiences.
-  * ``poolK_events_per_s`` — aggregate kept-side throughput.
-  * ``poolK_sessions_per_s`` — full sessions retired per second.
+    serving round (feed a slab to every live session + pump + poll) on the
+    *per-round* path (``ring_rounds=1``: one blocking fetch per pump round,
+    the pre-ring execution model, kept as the baseline).
+  * ``poolK_ring_slab_p50_ms`` / ``poolK_ring_slab_p99_ms`` — the same loop
+    on the ring path (``ring_rounds=8``: rounds run back-to-back on device,
+    one fetch per drain).
+  * ``poolK_events_per_s`` / ``poolK_ring_events_per_s`` — aggregate
+    throughput of each path.
+  * ``poolK_fetches_per_round`` / ``poolK_ring_fetches_per_round`` — host
+    blocking result transfers per executed round: ~1.0 for the per-round
+    path, ~1/ring_rounds for the ring path (the K -> 1 contract).
+  * ``poolK_sharded_events_per_s`` — the lane-sharded pool across local
+    devices; on a single-device host the row is reported with a
+    ``_skipped`` suffix (derived 0) instead of crashing.
 
 plus the batch-path reference (``batchK_events_per_s`` via the vmapped
-``run_pipeline_batched`` scan) so the cost of *online* serving (per-chunk
-dispatch + host result sync) is visible next to the single-sync fold.
+``run_pipeline_batched`` scan) so the cost of *online* serving is visible
+next to the single-sync fold.  All stream/slab randomness is pinned by
+``SEED`` for run-to-run comparability; ``rows(smoke=True)`` shrinks sizes
+for the CI bench-smoke step.
 """
 from __future__ import annotations
 
 import time
 
+import jax
 import numpy as np
 
 from repro.core import pipeline
@@ -26,25 +39,28 @@ from repro.serve import DetectorPool
 POOL_SIZES = (1, 4, 16)
 DURATION_US = 25_000
 SLAB = 384
+SEED = 7                      # pinned: streams and any slab jitter
+RING_ROUNDS = 8
 
 
-def _mk_streams(k: int):
+def _mk_streams(k: int, duration_us: int):
     return [
-        synthetic.shapes_stream(duration_us=DURATION_US, seed=s)
+        synthetic.shapes_stream(duration_us=duration_us, seed=SEED + s)
         for s in range(k)
     ]
 
 
-def _run_pool(cfg, streams):
+def _run_pool(cfg, streams, *, ring_rounds: int, shard="auto"):
     k = len(streams)
-    pool = DetectorPool(cfg, capacity=k)
+    pool = DetectorPool(cfg, capacity=k, ring_rounds=ring_rounds,
+                        shard=shard)
     # Warm (compile) outside the timed region.
     lane = pool.connect()
     pool.feed(lane, streams[0].xy[:cfg.chunk], streams[0].ts[:cfg.chunk])
     pool.pump()
     pool.disconnect(lane)
 
-    lanes = {i: pool.connect(seed=i) for i in range(k)}
+    lanes = {i: pool.connect(seed=SEED + i) for i in range(k)}
     cursors = {i: 0 for i in range(k)}
     lat = []
     t0 = time.perf_counter()
@@ -64,7 +80,32 @@ def _run_pool(cfg, streams):
             pool.poll(lane)
         lat.append(time.perf_counter() - t1)
     dt = time.perf_counter() - t0
-    return dt, np.asarray(lat)
+    return dt, np.asarray(lat), pool.host_fetches, pool.rounds_executed
+
+
+def _run_burst(cfg, streams, *, ring_rounds: int):
+    """Backlog burst: feed every stream fully, then pump once — the regime
+    where the ring's K-rounds-per-fetch contract is fully visible (the
+    latency loop above polls every round-trip, so its fetch ratio is bounded
+    by the arrival cadence, not the ring depth)."""
+    k = len(streams)
+    pool = DetectorPool(cfg, capacity=k, ring_rounds=ring_rounds)
+    lane = pool.connect()
+    pool.feed(lane, streams[0].xy[:cfg.chunk], streams[0].ts[:cfg.chunk])
+    pool.pump()
+    pool.disconnect(lane)       # warmed; counters below are steady-state
+    fetches0, rounds0 = pool.host_fetches, pool.rounds_executed
+    lanes = {i: pool.connect(seed=SEED + i) for i in range(k)}
+    for i, lane in lanes.items():
+        pool.feed(lane, streams[i].xy, streams[i].ts)
+    t0 = time.perf_counter()
+    pool.pump()
+    for lane in lanes.values():
+        pool.poll(lane)
+    dt = time.perf_counter() - t0
+    rounds = pool.rounds_executed - rounds0
+    fetches = pool.host_fetches - fetches0
+    return dt, rounds, fetches
 
 
 def _run_batch(cfg, streams):
@@ -78,20 +119,54 @@ def _run_batch(cfg, streams):
     return time.perf_counter() - t0, k * e
 
 
-def rows():
+def _pool_rows(tag: str, streams, dt, lat, fetches, rounds):
+    n_total = sum(len(s) for s in streams)
+    return [
+        (f"{tag}_slab_p50_ms", 0.0, float(np.percentile(lat, 50) * 1e3)),
+        (f"{tag}_slab_p99_ms", 0.0, float(np.percentile(lat, 99) * 1e3)),
+        (f"{tag}_events_per_s", dt * 1e6 / max(n_total, 1), n_total / dt),
+        (f"{tag}_fetches_per_round", 0.0, fetches / max(rounds, 1)),
+    ]
+
+
+def rows(smoke: bool = False):
     out = []
+    pool_sizes = (1, 2) if smoke else POOL_SIZES
+    duration = 6_000 if smoke else DURATION_US
     cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
-    for k in POOL_SIZES:
-        streams = _mk_streams(k)
+    single_device = len(jax.local_devices()) == 1
+    for k in pool_sizes:
+        streams = _mk_streams(k, duration)
         n_total = sum(len(s) for s in streams)
-        dt, lat = _run_pool(cfg, streams)
-        out.append((f"pool{k}_slab_p50_ms", 0.0,
-                    float(np.percentile(lat, 50) * 1e3)))
-        out.append((f"pool{k}_slab_p99_ms", 0.0,
-                    float(np.percentile(lat, 99) * 1e3)))
-        out.append((f"pool{k}_events_per_s", dt * 1e6 / max(n_total, 1),
-                    n_total / dt))
+
+        # per-round baseline: one fetch per round (the pre-ring model)
+        dt, lat, fetches, rounds = _run_pool(cfg, streams, ring_rounds=1)
+        out.extend(_pool_rows(f"pool{k}", streams, dt, lat, fetches, rounds))
+
+        # ring path: K rounds back-to-back per fetch
+        dt, lat, fetches, rounds = _run_pool(
+            cfg, streams, ring_rounds=RING_ROUNDS
+        )
+        out.extend(
+            _pool_rows(f"pool{k}_ring", streams, dt, lat, fetches, rounds)
+        )
         out.append((f"pool{k}_sessions_per_s", 0.0, k / dt))
+
+        # backlog burst: rounds-per-fetch hits the ring depth (K -> 1)
+        for tag, rr in ((f"pool{k}", 1), (f"pool{k}_ring", RING_ROUNDS)):
+            bdt_, rounds, fetches = _run_burst(cfg, streams, ring_rounds=rr)
+            out.append((f"{tag}_burst_rounds_per_fetch", 0.0,
+                        rounds / max(fetches, 1)))
+
+        # lane-sharded pool: needs >1 local device; report, don't crash
+        if single_device:
+            out.append((f"pool{k}_sharded_events_per_s_skipped", 0.0, 0.0))
+        else:
+            sdt, _, _, _ = _run_pool(
+                cfg, streams, ring_rounds=RING_ROUNDS, shard=True
+            )
+            out.append((f"pool{k}_sharded_events_per_s",
+                        sdt * 1e6 / max(n_total, 1), n_total / sdt))
 
         bdt, bn = _run_batch(cfg, streams)
         out.append((f"batch{k}_events_per_s", bdt * 1e6 / max(bn, 1),

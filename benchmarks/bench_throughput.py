@@ -28,7 +28,7 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps
 
 
-def rows():
+def rows(smoke: bool = False):
     out = []
     # Fig. 1(b): max throughput per method (hardware model)
     out.append(("fig1b_meps_eharris", 0.0, 0.15))         # [10]'s figure
@@ -53,11 +53,11 @@ def rows():
     out.append(("sw_batched_us_per_kevent", t_bat * 1e6, e / t_bat / 1e6))
     out.append(("sw_onehot_us_per_kevent", t_one * 1e6, e / t_one / 1e6))
     out.append(("sw_batched_speedup_vs_seq", 0.0, t_seq / t_bat))
-    out.extend(_pipeline_rows())
+    out.extend(_pipeline_rows(smoke=smoke))
     return out
 
 
-def _pipeline_rows():
+def _pipeline_rows(smoke: bool = False):
     """E2E pipeline: device-resident lax.scan vs the host-loop reference.
 
     The scan pipeline costs exactly one blocking host transfer per stream;
@@ -67,7 +67,8 @@ def _pipeline_rows():
     from repro.core import pipeline as pipe
     from repro.events import synthetic
 
-    st = synthetic.shapes_stream(duration_us=60_000, seed=0)
+    st = synthetic.shapes_stream(duration_us=10_000 if smoke else 60_000,
+                                 seed=0)
     cfg = pipe.PipelineConfig(chunk=512, lut_every_chunks=2)
     n = len(st)
 

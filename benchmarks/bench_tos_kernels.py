@@ -63,9 +63,11 @@ def binned_fraction(h, w, e, patch=7, seed=0):
     return float(per_tile.mean()) / e, float(per_tile.max()) / e
 
 
-def rows():
+def rows(smoke: bool = False):
     out = []
-    for (h, w, e) in [(180, 240, 256), (720, 1280, 1024)]:
+    sizes = [(180, 240, 256)] if smoke else [(180, 240, 256),
+                                             (720, 1280, 1024)]
+    for (h, w, e) in sizes:
         t = kernel_terms(h, w, e)
         for k, v in t.items():
             out.append((f"tos_kernel_{h}x{w}_E{e}_{k}", 0.0, v))

@@ -1,17 +1,35 @@
 """Benchmark driver: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV.  ``us_per_call`` is host wall time
+Prints ``name,us_per_call,derived`` CSV and writes the same rows as a
+machine-readable JSON artifact (``BENCH_serving.json`` by default) so the
+perf trajectory is tracked across PRs.  ``us_per_call`` is host wall time
 where a software path is actually timed; hardware-model rows (SPICE-
 calibrated) carry 0 there and put the paper-comparable quantity in
-``derived``.
+``derived``.  Rows whose name ends in ``_skipped`` record a measurement
+this host cannot take (e.g. sharded-pool rows on a single-device machine)
+without failing the run.
+
+``--smoke`` shrinks sizes in every module that supports it (a ``smoke``
+keyword on its ``rows()``) — the CI bench-smoke step runs this to catch
+bench bitrot: any module raising still fails the process.
 """
 from __future__ import annotations
 
+import argparse
+import inspect
+import json
 import sys
 import time
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes (CI bitrot check, not a measurement)")
+    ap.add_argument("--json-out", default="BENCH_serving.json",
+                    help="machine-readable artifact path ('' disables)")
+    args = ap.parse_args(argv)
+
     from benchmarks import (
         bench_auc,
         bench_dvfs,
@@ -32,18 +50,37 @@ def main() -> None:
         ("roofline(dryrun)", roofline_table),
     ]
     print("name,us_per_call,derived")
+    records: dict = {}
+    errors: list = []
     failures = 0
     for label, mod in modules:
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(mod.rows).parameters:
+            kwargs["smoke"] = True
         t0 = time.perf_counter()
         try:
-            for name, us, derived in mod.rows():
+            for name, us, derived in mod.rows(**kwargs):
                 print(f"{name},{us:.3f},{derived:.6g}")
+                rec = {"us_per_call": float(us), "derived": float(derived),
+                       "module": label}
+                if name.endswith("_skipped"):
+                    rec["skipped"] = True
+                records[name] = rec
         except Exception as e:  # pragma: no cover
             failures += 1
+            errors.append({"module": label, "error":
+                           f"{type(e).__name__}: {e}"})
             print(f"{label}_ERROR,0,0  # {type(e).__name__}: {e}",
                   file=sys.stderr)
         dt = time.perf_counter() - t0
         print(f"# {label} done in {dt:.1f}s", file=sys.stderr)
+
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"smoke": args.smoke, "rows": records,
+                       "errors": errors}, f, indent=2, sort_keys=True)
+        print(f"# wrote {len(records)} rows -> {args.json_out}",
+              file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

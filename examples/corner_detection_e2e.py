@@ -13,7 +13,9 @@ The demo closes with a scan-vs-host-loop comparison (same bits out, the
 reference being the property-tested oracle, with O(n_chunks) fewer blocking
 host transfers) and a tour of the *serving* layers: a ``StreamingDetector``
 session fed in uneven slabs with online DVFS, a ``PrefetchingLoader``
-device-slab feed, and a two-camera ``DetectorPool`` — each bit-exact
+device-slab feed, a two-camera ``DetectorPool`` on the ring-buffered
+K-round executor (rounds back-to-back on device, one fetch per drain), and
+a chunk-size-bucketed pool serving heterogeneous sensors — each bit-exact
 against the batch scan.  Set ``backend`` in ``PipelineConfig`` to
 ``"pallas_nmc"`` / ``"pallas_batched"`` to route the TOS update through the
 Pallas kernels instead of the jnp closed form.
@@ -96,18 +98,41 @@ def demo_streaming(stream):
     print("  device-slab prefetch feed:       bit-exact vs batch scan:",
           np.array_equal(np.concatenate(parts2), batch.scores))
 
-    # 3) Pool: this camera + a second one, multiplexed via one program.
+    # 3) Pool: this camera + a second one behind the ring-buffered K-round
+    #    executor — rounds run back-to-back on device, ONE fetch per drain
+    #    (lanes auto-shard across local devices when there are several).
     other = synthetic.dynamic_stream(duration_us=30_000, seed=9)
-    pool = DetectorPool(cfg, capacity=2)
+    pool = DetectorPool(cfg, capacity=2, ring_rounds=4)
     a, b = pool.connect(seed=cfg.seed), pool.connect(seed=cfg.seed)
     pool.feed(a, stream.xy, stream.ts)
     pool.feed(b, other.xy, other.ts)
     pool.pump()
     sa, _ = pool.flush(a)
     pool.flush(b)
-    print("  2-camera pool lane:              bit-exact vs batch scan:",
+    ps = pool.pool_stats()
+    print("  2-camera ring pool lane:         bit-exact vs batch scan:",
           np.array_equal(sa, batch.scores),
-          f" (compiled executables: {pool.compile_cache_size()})")
+          f" ({ps['rounds_executed']} rounds / {ps['host_fetches']} fetches,"
+          f" executables: {pool.compile_cache_size()})")
+
+    # 4) Chunk-size buckets: a second sensor serves at its own chunk size
+    #    (one compiled executor per bucket; both lanes still bit-exact).
+    import dataclasses
+    pool2 = DetectorPool(cfg, capacity=2, ring_rounds=4,
+                         buckets=(256, cfg.chunk))
+    big = pool2.connect(seed=cfg.seed)                 # cfg.chunk bucket
+    small = pool2.connect(seed=cfg.seed, chunk=256)    # 256 bucket
+    pool2.feed(big, stream.xy, stream.ts)
+    pool2.feed(small, other.xy, other.ts)
+    pool2.pump()
+    s_big, _ = pool2.flush(big)
+    s_small, _ = pool2.flush(small)
+    ref_small = pipeline.run_pipeline(
+        other.xy, other.ts, dataclasses.replace(cfg, chunk=256))
+    print("  bucketed pool (chunk 512+256):   bit-exact per bucket:",
+          np.array_equal(s_big, batch.scores)
+          and np.array_equal(s_small, ref_small.scores),
+          f" (executors per bucket: {pool2.compile_cache_sizes()})")
 
 
 def main():

@@ -228,14 +228,20 @@ def _vdd_trace(prep: _Prepared, vdd_idx: np.ndarray,
 # ---------------------------------------------------------------------------
 
 
-def _trace_cfg(cfg: PipelineConfig) -> PipelineConfig:
+def _trace_cfg(cfg: PipelineConfig, *,
+               chunk: Optional[int] = None) -> PipelineConfig:
     """Canonicalize fields the traced scan never reads (vdd/dvfs/seed ride
     in as data arrays), so config sweeps over them share one compiled scan
     instead of paying an XLA recompile each.  Online mode *is* traced (the
-    controller runs in-step), so its dvfs_cfg is kept."""
+    controller runs in-step), so its dvfs_cfg is kept.
+
+    ``chunk`` overrides the chunk size — the serving layer's bucket tier
+    traces one program per chunk-size bucket from a single base config.
+    """
     online = _is_online(cfg)
     return dataclasses.replace(
         cfg,
+        chunk=cfg.chunk if chunk is None else int(chunk),
         vdd=1.2,
         dvfs=online,
         dvfs_online=online,

@@ -14,6 +14,10 @@ explicit here instead of living inside one monolithic pipeline function:
                         for the host-precomputed DVFS modes.
   ``ChunkOutput``     — per-event scores/keep mask plus the per-chunk kept
                         count and (online mode) chosen operating point.
+  ``RingState``       — fixed-capacity on-device result ring the pool's
+                        K-round executor pushes per-round outputs into, so
+                        the host fetches once per drain instead of once per
+                        round (``ring_init`` / ``ring_push``).
 
 ``detector_step`` folds exactly one chunk:
 
@@ -60,9 +64,13 @@ __all__ = [
     "DetectorState",
     "ChunkInput",
     "ChunkOutput",
+    "RingState",
     "detector_init",
     "detector_step",
     "detector_scan",
+    "ring_init",
+    "ring_push",
+    "ring_slot_order",
     "select_update",
     "chunk_input_riders",
 ]
@@ -113,6 +121,100 @@ class ChunkOutput(NamedTuple):
     keep: jax.Array          # (chunk,) bool — survived STCF
     n_kept: jax.Array        # i32 scalar
     vdd_idx: jax.Array       # i32 scalar — operating point (online mode)
+
+
+class RingState(NamedTuple):
+    """Fixed-capacity on-device result ring for multi-round pool execution.
+
+    The pool's K-round executor pushes one slot per *active* round (vmapped
+    ``ChunkOutput`` over the lane axis, plus the round's lane mask and
+    per-lane valid counts) instead of syncing the host every round; the host
+    performs ONE blocking fetch per drain and walks the slots oldest-first.
+    All cursors are device scalars so the ring rides inside ``lax.scan``
+    without host round-trips.
+
+    Overflow semantics are mechanical here and policy lives in the caller:
+    pushing onto a full ring overwrites the oldest slot and increments
+    ``dropped`` (the pool's ``"drain"`` policy pre-drains so this never
+    fires; its ``"drop_oldest"`` real-time policy lets it count lost
+    rounds).  ``dropped`` is cumulative and never reset by a drain, so host
+    mirrors can be audited against it.
+    """
+
+    scores: jax.Array   # (R, lanes, chunk) f32
+    keep: jax.Array     # (R, lanes, chunk) bool
+    n_kept: jax.Array   # (R, lanes) i32
+    vdd_idx: jax.Array  # (R, lanes) i32
+    n_valid: jax.Array  # (R, lanes) i32 — valid events per lane that round
+    mask: jax.Array     # (R, lanes) bool — lanes that folded that round
+    head: jax.Array     # i32 scalar — next slot to write
+    count: jax.Array    # i32 scalar — undrained slots (saturates at R)
+    dropped: jax.Array  # i32 scalar — rounds overwritten before a drain
+
+
+def ring_init(rounds: int, lanes: int, chunk: int) -> RingState:
+    """Empty ring of ``rounds`` slots for a ``lanes``-wide, ``chunk``-sized
+    pool bucket (host call; arrays land on the default device)."""
+    if rounds < 1:
+        raise ValueError("ring needs at least one slot")
+    return RingState(
+        scores=jnp.zeros((rounds, lanes, chunk), jnp.float32),
+        keep=jnp.zeros((rounds, lanes, chunk), bool),
+        n_kept=jnp.zeros((rounds, lanes), jnp.int32),
+        vdd_idx=jnp.zeros((rounds, lanes), jnp.int32),
+        n_valid=jnp.zeros((rounds, lanes), jnp.int32),
+        mask=jnp.zeros((rounds, lanes), bool),
+        head=jnp.int32(0),
+        count=jnp.int32(0),
+        dropped=jnp.int32(0),
+    )
+
+
+def ring_push(
+    ring: RingState,
+    outs: ChunkOutput,
+    mask: jax.Array,
+    n_valid: jax.Array,
+    active: jax.Array,
+) -> RingState:
+    """Append one pool round to the ring (pure; used inside ``lax.scan``).
+
+    ``outs`` is the lane-stacked ``ChunkOutput`` of one vmapped round,
+    ``mask``/``n_valid`` are ``(lanes,)``, and ``active`` is a bool scalar —
+    padded no-op rounds (all lanes inactive) pass ``active=False`` and leave
+    the ring untouched, so a fixed-K executor block never consumes slots for
+    its padding.  A push onto a full ring overwrites the oldest slot and
+    counts it in ``dropped``.
+    """
+    rounds = ring.scores.shape[0]
+
+    def push(r: RingState) -> RingState:
+        slot = r.head
+
+        def wr(buf, val):
+            return jax.lax.dynamic_update_index_in_dim(buf, val, slot, 0)
+
+        return RingState(
+            scores=wr(r.scores, outs.scores),
+            keep=wr(r.keep, outs.keep),
+            n_kept=wr(r.n_kept, outs.n_kept),
+            vdd_idx=wr(r.vdd_idx, outs.vdd_idx),
+            n_valid=wr(r.n_valid, n_valid),
+            mask=wr(r.mask, mask),
+            head=(slot + 1) % rounds,
+            count=jnp.minimum(r.count + 1, rounds),
+            dropped=r.dropped
+            + jnp.where(r.count == rounds, jnp.int32(1), jnp.int32(0)),
+        )
+
+    return jax.lax.cond(active, push, lambda r: r, ring)
+
+
+def ring_slot_order(head: int, count: int, rounds: int) -> list[int]:
+    """Host helper: slot indices of the ``count`` undrained rounds, oldest
+    first (the order drains must distribute results in)."""
+    return [(int(head) - int(count) + i) % int(rounds)
+            for i in range(int(count))]
 
 
 def select_update(cfg) -> Callable:

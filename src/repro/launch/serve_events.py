@@ -1,12 +1,19 @@
 """Event-camera serving driver: a DetectorPool under synthetic live traffic.
 
     PYTHONPATH=src python -m repro.launch.serve_events --sessions 4 \
-        --duration-us 40000 --slab 400 --dvfs
+        --duration-us 40000 --slab 400 --dvfs --ring-rounds 8
 
-Spins up a ``DetectorPool``, connects ``--sessions`` synthetic cameras with
-staggered joins, feeds their streams in fixed-size slabs round-robin, and
-reports aggregate throughput plus per-slab latency percentiles — the
-serving-side counterpart of ``repro.launch.serve`` (LM decode driver).
+Spins up a ``DetectorPool`` (ring-buffered K-round executor; lane-sharded
+automatically when the host has >1 local device), connects ``--sessions``
+synthetic cameras with staggered joins, feeds their streams in fixed-size
+slabs round-robin, and reports aggregate throughput, per-slab latency
+percentiles, and the ring runtime counters (host fetches per round,
+buffered/dropped rounds) — the serving-side counterpart of
+``repro.launch.serve`` (LM decode driver).
+
+Backpressure is observable, not silent: every round the driver checks
+``pool.pool_stats()`` and logs when the overflow policy dropped rounds
+(``--overflow drop_oldest``) or when ring occupancy forced an early drain.
 """
 from __future__ import annotations
 
@@ -27,6 +34,11 @@ def main(argv=None):
     ap.add_argument("--chunk", type=int, default=256)
     ap.add_argument("--slab", type=int, default=400,
                     help="events per arriving slab")
+    ap.add_argument("--ring-rounds", type=int, default=8,
+                    help="K: rounds per executor block / ring capacity")
+    ap.add_argument("--overflow", default="drain",
+                    choices=("drain", "drop_oldest"),
+                    help="ring overflow policy (drain=lossless backpressure)")
     ap.add_argument("--dvfs", action="store_true",
                     help="online (in-step) DVFS instead of fixed 1.2 V")
     ap.add_argument("--backend", default="jnp",
@@ -41,9 +53,15 @@ def main(argv=None):
         synthetic.shapes_stream(duration_us=args.duration_us, seed=s)
         for s in range(args.sessions)
     ]
-    pool = DetectorPool(cfg, capacity=args.sessions)
+    pool = DetectorPool(cfg, capacity=args.sessions,
+                        ring_rounds=args.ring_rounds,
+                        on_overflow=args.overflow)
+    ps = pool.pool_stats()
+    print(f"pool: capacity {args.sessions}, ring_rounds {args.ring_rounds} "
+          f"({args.overflow}), sharded={ps['sharded']} "
+          f"over {ps['devices']} device(s)")
 
-    # Warm the compiled vmapped step (first pump compiles).
+    # Warm the compiled executor (first pump compiles).
     warm = pool.connect()
     pool.feed(warm, streams[0].xy[:cfg.chunk], streams[0].ts[:cfg.chunk])
     pool.pump()
@@ -51,6 +69,8 @@ def main(argv=None):
 
     lanes, cursors = {}, {}
     lat_ms, done = [], 0
+    dropped_seen = 0
+    forced_drains = 0
     n_total = sum(len(s) for s in streams)
     t0 = time.perf_counter()
     while done < args.sessions:
@@ -70,18 +90,39 @@ def main(argv=None):
                 continue
             pool.feed(lane, st.xy[c:c + args.slab], st.ts[c:c + args.slab])
             cursors[i] = c + args.slab
+        fetches_before = pool.host_fetches
         pool.pump()
+        # a fetch during pump == ring occupancy forced an early drain
+        if pool.host_fetches > fetches_before:
+            forced_drains += pool.host_fetches - fetches_before
+            if forced_drains == pool.host_fetches - fetches_before:
+                print("  [backpressure] ring full mid-pump: draining early "
+                      "(lossless; fetch cadence rises under this load)")
         for lane in lanes.values():
             pool.poll(lane)
         lat_ms.append((time.perf_counter() - t1) * 1e3)
+        # backpressure: log drops instead of silently losing rounds
+        ps = pool.pool_stats()
+        if ps["dropped_rounds_total"] > dropped_seen:
+            print(f"  [backpressure] ring dropped "
+                  f"{ps['dropped_rounds_total'] - dropped_seen} round(s) "
+                  f"(total {ps['dropped_rounds_total']}) — pollers lagging")
+            dropped_seen = ps["dropped_rounds_total"]
     dt = time.perf_counter() - t0
 
     lat = np.asarray(lat_ms)
+    ps = pool.pool_stats()
     print(f"served {args.sessions} sessions / {n_total} events in {dt:.2f}s "
           f"({n_total / dt / 1e3:.1f} kev/s aggregate)")
     print(f"round latency ms: p50 {np.percentile(lat, 50):.2f}  "
           f"p99 {np.percentile(lat, 99):.2f}  max {lat.max():.2f}")
-    print(f"compiled step executables: {pool.compile_cache_size()} "
+    print(f"ring: {ps['rounds_executed']} rounds / {ps['host_fetches']} "
+          f"host fetches "
+          f"({ps['rounds_executed'] / max(ps['host_fetches'], 1):.1f} "
+          f"rounds per blocking transfer), "
+          f"{forced_drains} forced mid-pump drains, "
+          f"{ps['dropped_rounds_total']} dropped")
+    print(f"compiled executors: {pool.compile_cache_sizes()} "
           f"(membership churn must not recompile)")
     return dt, lat
 

@@ -24,12 +24,60 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.meshctx import logical_to_spec
 from repro.models.common import ModelConfig
 
-__all__ = ["make_rules", "param_shardings", "batch_shardings", "data_axes"]
+__all__ = [
+    "make_rules", "param_shardings", "batch_shardings", "data_axes",
+    "local_lane_mesh", "lane_padded_capacity", "lane_spec", "lane_put",
+]
 
 
 def data_axes(mesh: Mesh) -> tuple:
     """The mesh axes carrying the batch: ('pod','data') or ('data',)."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# Event-serving lane sharding (DetectorPool): a 1-D 'lanes' mesh over the
+# local devices.  Lane->device placement is pure data — lane i lives at a
+# fixed offset of the stacked state pytree, so membership churn (join/leave)
+# moves no arrays and triggers no recompiles; the detector step has no
+# cross-lane term, so the sharded pool needs no collectives at all.
+# ---------------------------------------------------------------------------
+
+
+def local_lane_mesh(n_devices: Optional[int] = None) -> Mesh:
+    """1-D ``('lanes',)`` mesh over the local devices (or the first
+    ``n_devices`` of them).  A single-device host yields a 1-wide mesh, so
+    sharded and unsharded pools share every code path."""
+    import numpy as np
+
+    devs = jax.local_devices()
+    if n_devices is not None:
+        devs = devs[: int(n_devices)]
+    return Mesh(np.asarray(devs), ("lanes",))
+
+
+def lane_padded_capacity(capacity: int, mesh: Mesh) -> int:
+    """Physical lane count: ``capacity`` rounded up so the lane axis splits
+    evenly across the mesh (the padding lanes just ride along masked)."""
+    n = mesh.shape["lanes"]
+    return ((int(capacity) + n - 1) // n) * n
+
+
+def lane_spec(lane_axis: int = 0) -> P:
+    """PartitionSpec placing ``lane_axis`` on the 'lanes' mesh axis (all
+    other dims replicated; rank-deficient leaves — scalars next to a
+    lane-stacked tree — should use ``P()`` instead)."""
+    return P(*([None] * lane_axis), "lanes")
+
+
+def lane_put(mesh: Mesh, tree, lane_axis: int = 0):
+    """device_put a lane-stacked pytree with the lane axis sharded across
+    the mesh; leaves with too few dims (shared scalars) stay replicated."""
+    def one(leaf):
+        spec = lane_spec(lane_axis) if leaf.ndim > lane_axis else P()
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    return jax.tree.map(one, tree)
 
 
 def make_rules(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = True,

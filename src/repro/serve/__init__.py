@@ -3,14 +3,22 @@
   streaming — ``StreamingDetector``: one live camera session; feed event
               slabs of any length, scores come back as chunks complete;
               flush/snapshot/restore; automatic timebase re-basing for
-              unbounded session length.
-  pool      — ``DetectorPool``: N sessions through one compiled vmapped
-              ``detector_step`` with an active-mask lane system — sessions
-              join/leave without recompilation.
+              unbounded session length; per-session ``chunk=`` override
+              (bucket tier) for heterogeneous sensors.
+  pool      — ``DetectorPool``: N sessions through per-bucket compiled
+              K-round executors.  Rounds run back-to-back in a jitted
+              ``lax.scan`` whose outputs land in an on-device result ring
+              (one blocking fetch per drain, not per round); lanes shard
+              across local devices through ``repro.compat.shard_map`` when
+              more than one is present; membership is an active-mask lane
+              system — sessions join/leave without recompilation.
+              ``poll()`` is the readout/backpressure point; overflow is
+              either lossless (``"drain"``) or counted (``"drop_oldest"``).
 
 Both fold the same pure detector core (``repro.core.state``) the batch
 pipeline folds, so a served stream is bit-identical to ``run_pipeline`` on
-the concatenated events.
+the concatenated events — per lane, per bucket, per shard, and per K-round
+block (property-tested).
 """
 from repro.serve.pool import DetectorPool  # noqa: F401
 from repro.serve.streaming import StreamingDetector, session_base_us  # noqa: F401

@@ -1,24 +1,61 @@
-"""Multi-camera serving: N sessions through ONE compiled vmapped step.
+"""Multi-camera serving: a device-resident pool runtime.
 
 ``DetectorPool`` holds ``capacity`` detector lanes as a single stacked
-``DetectorState`` pytree on device and folds all of them with one
-``jax.vmap(detector_step)`` program per pump round.  Sessions join and
-leave at any time via an *active-mask lane system*: membership is data (a
-``(capacity,)`` bool mask plus per-lane dummy chunks), never a shape — so a
-changing session population NEVER triggers a recompile (asserted by a
-compile-count check in the tests), which is what lets one compiled program
-serve ragged arrivals from a fleet of cameras.
+``DetectorState`` pytree on device.  Three mechanisms make its execution
+model fully device-resident (PR 3 — the serving-layer analogue of the
+O(n_chunks) host-transfer elimination PR 1 applied to the batch path):
+
+**Ring-buffered multi-round pump.**  Instead of one vmapped round per jit
+call followed by a blocking fetch, rounds execute in jitted K-round
+``lax.scan`` blocks whose per-round outputs (scores, keep masks, kept
+counts, chunk metadata) land in a fixed-capacity on-device result ring
+(``repro.core.state.RingState``).  The host performs ONE blocking fetch per
+drain — so K back-to-back rounds cost one sync, not K.  Padded no-op rounds
+inside a block are skipped by a round-level ``lax.cond`` (data, not shape:
+the block executor compiles exactly once per bucket).  Overflow policy:
+
+  * ``on_overflow="drain"`` (default): the host drains the ring before a
+    block that would not fit — lossless backpressure, the fetch cadence
+    simply rises toward once per round under sustained overload.
+  * ``on_overflow="drop_oldest"``: a full ring overwrites its oldest slot
+    and counts the loss (``stats()['ring_dropped_rounds']``) — the
+    real-time mode where stale results are worth less than fresh latency.
+    Host accounting skips dropped rounds; the in-state device accumulators
+    (kept/energy/latency) remain complete either way.
+
+``poll()`` is the readout point: it drains the lane's bucket ring (one
+fetch) and returns everything accumulated — update cadence (``pump``) and
+readout cadence (``poll``) are fully decoupled, luvHarris-style.
+
+**Sharded lanes.**  With more than one local device (or ``shard=True``),
+the lane axis of the stacked state, the chunk inputs, and the ring is split
+across a 1-D ``('lanes',)`` mesh via ``repro.compat.shard_map`` +
+``repro.launch.sharding`` helpers.  The detector step has no cross-lane
+term, so the sharded executor needs zero collectives; lane->device
+placement is pure data (lane i is a fixed offset of the stacked pytree), so
+join/leave still never recompiles.  Single-device hosts fall back
+transparently (``shard="auto"``).
+
+**Chunk-size buckets.**  Heterogeneous sensors don't share one global chunk
+size: the pool compiles one executor per chunk-size *bucket* (e.g.
+256/512/1024) and ``connect(chunk=...)`` places the session in the smallest
+bucket that fits.  A lane in bucket ``c`` behaves bit-identically to a
+standalone session (and to ``run_pipeline``) at ``chunk=c``.
+
+Membership remains an *active-mask lane system*: a ``(capacity,)`` bool
+mask plus per-lane dummy chunks — data, never a shape — so a changing
+session population NEVER triggers a recompile (compile-count asserted per
+bucket in the tests).  Inactive/starved lanes ride along as masked no-ops:
+their carried state stays byte-identical (PRNG key and chunk cursor
+included), so a lane pausing costs nothing and resumes exactly where it
+left off.
 
 Per lane the pool keeps exactly what a ``StreamingDetector`` keeps: a host
 re-chunking buffer (int64 timestamps, per-lane timebase), float64 energy
 accounting, and a result queue.  A lane's outputs are bit-identical to a
 standalone session — and hence to ``run_pipeline`` on that lane's full
-stream — regardless of how other lanes interleave (property-tested).
-
-Inactive/starved lanes ride along as masked no-ops: their chunk is all
-``valid=False`` and the mask keeps their carried state byte-identical
-(PRNG key and chunk cursor included), so a lane pausing for a while costs
-nothing and resumes exactly where it left off.
+stream — regardless of how other lanes interleave, how many rounds share a
+block, or how lanes are sharded (property-tested, K-round vs sequential).
 
 Like ``StreamingDetector``, only fixed-Vdd and online-DVFS configs are
 servable (host-precomputed DVFS needs future knowledge).
@@ -30,13 +67,18 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import dvfs as dvfs_mod
 from repro.core import pipeline as pipeline_mod
 from repro.core import state as state_mod
+from repro.launch import sharding as sharding_mod
 from repro.serve import streaming as streaming_mod
 
 __all__ = ["DetectorPool"]
+
+_OVERFLOW_POLICIES = ("drain", "drop_oldest")
 
 
 def _mask_tree(active, new_tree, old_tree):
@@ -51,11 +93,12 @@ def _mask_tree(active, new_tree, old_tree):
 class _Lane:
     """Host-side bookkeeping for one pool slot."""
 
-    __slots__ = ("buf_xy", "buf_ts", "base", "results", "n_events",
+    __slots__ = ("bucket", "buf_xy", "buf_ts", "base", "results", "n_events",
                  "n_chunks", "kept_total", "energy_pj", "latency_ns",
                  "vdd_trace")
 
-    def __init__(self):
+    def __init__(self, bucket: int):
+        self.bucket = bucket
         self.buf_xy = np.zeros((0, 2), np.int32)
         self.buf_ts = np.zeros((0,), np.int64)
         self.base: Optional[int] = None
@@ -68,17 +111,46 @@ class _Lane:
         self.vdd_trace: list[float] = []
 
 
-class DetectorPool:
-    """Fixed-capacity pool of detector sessions behind one vmapped step."""
+class _Round:
+    """One collected pump round (host arrays, lane-stacked) for a bucket."""
 
-    def __init__(self, cfg, capacity: int, *, seed: int = 0):
+    __slots__ = ("xy", "ts", "valid", "mask", "n_valid")
+
+    def __init__(self, xy, ts, valid, mask, n_valid):
+        self.xy, self.ts, self.valid = xy, ts, valid
+        self.mask, self.n_valid = mask, n_valid
+
+
+class DetectorPool:
+    """Fixed-capacity pool of detector sessions behind per-bucket K-round
+    ring-buffered executors (one compiled program per chunk-size bucket)."""
+
+    def __init__(self, cfg, capacity: int, *, seed: int = 0,
+                 ring_rounds: int = 8,
+                 buckets: Optional[tuple] = None,
+                 on_overflow: str = "drain",
+                 shard: object = "auto"):
         streaming_mod._check_streamable(cfg)
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
+        if ring_rounds < 1:
+            raise ValueError("ring_rounds must be >= 1")
+        if on_overflow not in _OVERFLOW_POLICIES:
+            raise ValueError(
+                f"on_overflow must be one of {_OVERFLOW_POLICIES}, "
+                f"got {on_overflow!r}"
+            )
+        if buckets is None:
+            buckets = (cfg.chunk,)
+        buckets = tuple(sorted({int(b) for b in buckets}))
+        if any(b < 1 for b in buckets):
+            raise ValueError("chunk buckets must be positive")
         self._cfg = cfg
-        self._tcfg = pipeline_mod._trace_cfg(cfg)
         self._capacity = capacity
         self._seed = seed
+        self._ring_rounds = ring_rounds
+        self._buckets = buckets
+        self._overflow = on_overflow
         self._online = bool(cfg.dvfs and cfg.dvfs_online)
         self._tab = dvfs_mod.op_point_table(cfg.dvfs_cfg)
         if not self._online:
@@ -90,25 +162,44 @@ class DetectorPool:
             z = np.float32(0.0)
             self._riders = (z, z, z)
 
+        # -- lane sharding: a 1-D 'lanes' mesh over the local devices -------
+        n_dev = len(jax.local_devices())
+        self._mesh = None
+        if shard is True or (shard == "auto" and n_dev > 1):
+            self._mesh = sharding_mod.local_lane_mesh()
+        # Physical lane count: padded so the lane axis splits evenly; the
+        # padding lanes are permanently inactive (masked, never connectable).
+        self._phys = (
+            sharding_mod.lane_padded_capacity(capacity, self._mesh)
+            if self._mesh is not None else capacity
+        )
+
         self._states = jax.tree.map(
             lambda *xs: jnp.stack(xs),
             *[state_mod.detector_init(cfg, seed=seed + i)
-              for i in range(capacity)],
+              for i in range(self._phys)],
         )
-        self._active = np.zeros((capacity,), bool)
-        self._lanes: list[Optional[_Lane]] = [None] * capacity
+        if self._mesh is not None:
+            self._states = sharding_mod.lane_put(self._mesh, self._states, 0)
+        self._active = np.zeros((self._phys,), bool)
+        self._lanes: list[Optional[_Lane]] = [None] * self._phys
 
-        # Per-pool jit (NOT globally cached): its private executable cache is
-        # the compile-count witness — membership churn must leave it at 1.
-        tcfg = self._tcfg
+        # -- per-bucket runtime: result ring + K-round executor -------------
+        self._rings: dict[int, state_mod.RingState] = {}
+        self._exec: dict[int, object] = {}
+        self._ring_count: dict[int, int] = {}     # host mirror of ring.count
+        self._ring_dropped: dict[int, int] = {}   # host mirror of ring.dropped
+        for b in buckets:
+            ring = state_mod.ring_init(ring_rounds, self._phys, b)
+            if self._mesh is not None:
+                ring = sharding_mod.lane_put(self._mesh, ring, 1)
+            self._rings[b] = ring
+            self._exec[b] = self._build_executor(b)
+            self._ring_count[b] = 0
+            self._ring_dropped[b] = 0
 
-        def _round(states, chunks, active):
-            new_states, outs = jax.vmap(
-                lambda s, c: state_mod.detector_step(tcfg, s, c)
-            )(states, chunks)
-            return _mask_tree(active, new_states, states), outs
-
-        self._vstep = jax.jit(_round)
+        self._host_fetches = 0     # blocking result transfers (ring drains)
+        self._rounds_executed = 0
 
         def _reset(states, lane, fresh):
             return jax.tree.map(
@@ -128,25 +219,118 @@ class DetectorPool:
 
         self._vrebase = jax.jit(_rebase)
 
+    # -- executor -----------------------------------------------------------
+
+    def _build_executor(self, bucket: int):
+        """Jitted K-round block: ``lax.scan`` of (vmapped step + mask select
+        + ring push) over ``ring_rounds`` rounds.  Padded rounds are skipped
+        by a round-level ``lax.cond`` — block occupancy is data, so this
+        compiles exactly once per bucket (the compile-count witness).  When
+        a mesh is configured, the whole block runs under ``shard_map`` with
+        the lane axis split across devices (no collectives: the step has no
+        cross-lane term)."""
+        tcfg = pipeline_mod._trace_cfg(self._cfg, chunk=bucket)
+
+        def block(states, ring, chunks, mask, n_valid, round_active):
+            def body(carry, xs):
+                states, ring = carry
+                chunk, m, nv, act = xs
+
+                def real(states, ring):
+                    new_states, outs = jax.vmap(
+                        lambda s, c: state_mod.detector_step(tcfg, s, c)
+                    )(states, chunk)
+                    states = _mask_tree(m, new_states, states)
+                    ring = state_mod.ring_push(ring, outs, m, nv, act)
+                    return states, ring
+
+                states, ring = jax.lax.cond(
+                    act, real, lambda s, r: (s, r), states, ring
+                )
+                return (states, ring), None
+
+            (states, ring), _ = jax.lax.scan(
+                body, (states, ring), (chunks, mask, n_valid, round_active)
+            )
+            return states, ring
+
+        if self._mesh is not None:
+            lane0 = sharding_mod.lane_spec(0)
+            lane1 = sharding_mod.lane_spec(1)
+            states_spec = jax.tree.map(lambda _: lane0, self._states)
+            ring_spec = state_mod.RingState(
+                scores=lane1, keep=lane1, n_kept=lane1, vdd_idx=lane1,
+                n_valid=lane1, mask=lane1, head=P(), count=P(), dropped=P(),
+            )
+            chunks_spec = state_mod.ChunkInput(
+                xy=lane1, ts=lane1, valid=lane1,
+                ber=lane1, energy_coef=lane1, latency_coef=lane1,
+            )
+            block = compat.shard_map(
+                block,
+                mesh=self._mesh,
+                in_specs=(states_spec, ring_spec, chunks_spec,
+                          lane1, lane1, P()),
+                out_specs=(states_spec, ring_spec),
+                check_vma=False,
+            )
+            # Pin output shardings to the same spelling lane_put uses for
+            # the inputs: jit would otherwise canonicalize equivalent specs
+            # (e.g. P(None,'lanes') -> P('lanes') on a 1-wide mesh) and the
+            # changed cache key would recompile the second block.
+            from jax.sharding import NamedSharding
+
+            out_shardings = (
+                jax.tree.map(
+                    lambda a: NamedSharding(self._mesh, lane0), self._states
+                ),
+                jax.tree.map(
+                    lambda a: NamedSharding(
+                        self._mesh, lane1 if a.ndim >= 2 else P()
+                    ),
+                    self._rings[bucket],
+                ),
+            )
+            return jax.jit(block, out_shardings=out_shardings)
+        return jax.jit(block)
+
     # -- membership ---------------------------------------------------------
 
-    def connect(self, *, seed: Optional[int] = None) -> int:
-        """Claim a free lane for a new camera session; returns the lane id."""
-        free = np.flatnonzero(~self._active)
+    def connect(self, *, seed: Optional[int] = None,
+                chunk: Optional[int] = None) -> int:
+        """Claim a free lane for a new camera session; returns the lane id.
+
+        ``chunk`` requests a per-session chunk size: the lane lands in the
+        smallest configured bucket that fits (>= the request) and behaves
+        bit-identically to ``run_pipeline`` at that bucket's chunk size.
+        Default: the pool config's ``cfg.chunk``.
+        """
+        want = self._cfg.chunk if chunk is None else int(chunk)
+        bucket = next((b for b in self._buckets if b >= want), None)
+        if bucket is None:
+            raise ValueError(
+                f"no chunk bucket fits {want} (buckets: {self._buckets})"
+            )
+        free = np.flatnonzero(~self._active[:self._capacity])
         if not free.size:
             raise RuntimeError(f"pool full ({self._capacity} sessions)")
         lane = int(free[0])
         fresh = state_mod.detector_init(
             self._cfg, seed=self._seed + lane if seed is None else seed
         )
-        self._states = self._vreset(self._states, jnp.int32(lane), fresh)
+        self._states = self._place(
+            self._vreset(self._states, jnp.int32(lane), fresh)
+        )
         self._active[lane] = True
-        self._lanes[lane] = _Lane()
+        self._lanes[lane] = _Lane(bucket)
         return lane
 
     def disconnect(self, lane: int) -> dict:
-        """Release a lane; returns its final accounting stats."""
+        """Release a lane; returns its final accounting stats.  Undrained
+        ring slots referencing the lane are drained first, so the stats are
+        complete and a later session reusing the slot inherits nothing."""
         self._check_lane(lane)
+        self._drain_ring(self._lanes[lane].bucket)
         stats = self.stats(lane)
         self._active[lane] = False
         self._lanes[lane] = None
@@ -160,9 +344,27 @@ class DetectorPool:
     def active_lanes(self) -> list[int]:
         return [int(i) for i in np.flatnonzero(self._active)]
 
+    @property
+    def buckets(self) -> tuple:
+        return self._buckets
+
+    @property
+    def host_fetches(self) -> int:
+        """Blocking result transfers so far (one per ring drain)."""
+        return self._host_fetches
+
+    @property
+    def rounds_executed(self) -> int:
+        return self._rounds_executed
+
     def compile_cache_size(self) -> int:
-        """Executable count of the vmapped step (1 == no recompiles)."""
-        return self._vstep._cache_size()
+        """Total executor executables across buckets (== buckets exercised
+        when nothing recompiled; membership churn must not grow it)."""
+        return sum(self.compile_cache_sizes().values())
+
+    def compile_cache_sizes(self) -> dict:
+        """Per-bucket executor executable counts (each must stay <= 1)."""
+        return {b: fn._cache_size() for b, fn in self._exec.items()}
 
     # -- feeding ------------------------------------------------------------
 
@@ -181,26 +383,46 @@ class DetectorPool:
         ln.n_events += int(ts.size)
 
     def pump(self) -> int:
-        """Fold buffered full chunks, one vmapped round at a time, until no
-        active lane has a full chunk left.  Returns the number of rounds."""
-        rounds = 0
-        while self._pump_round():
-            rounds += 1
-        return rounds
+        """Fold every buffered full chunk through the ring executors, K
+        rounds per device dispatch, until no active lane has a full chunk
+        left.  Returns the number of rounds executed.  Results stay in the
+        on-device rings until ``poll``/``flush`` (or a backpressure drain
+        under the ``"drain"`` policy) fetches them."""
+        return self.pump_rounds(None)
+
+    def pump_rounds(self, max_rounds: Optional[int] = None) -> int:
+        """Like ``pump`` but stops after at most ``max_rounds`` rounds
+        (``None`` = run until dry).  K-round blocks with one fetch per drain
+        are bit-exact vs the same rounds pumped one at a time."""
+        total = 0
+        for bucket in self._buckets:
+            left = None if max_rounds is None else max_rounds - total
+            if left is not None and left <= 0:
+                break
+            total += self._pump_bucket(bucket, max_rounds=left)
+        return total
 
     def flush(self, lane: int) -> tuple[np.ndarray, np.ndarray]:
         """Drain the lane's full chunks, then its padded partial tail, and
-        return everything not yet polled."""
+        return everything not yet polled.  A lane with an empty re-chunk
+        buffer just drains its ring (no extra round is scheduled)."""
         self._check_lane(lane)
         self.pump()
         ln = self._lanes[lane]
         if ln.buf_ts.size:
-            self._pump_round(flush_lane=lane)
+            self._pump_bucket(ln.bucket, max_rounds=1, flush_lane=lane)
         return self.poll(lane)
 
     def poll(self, lane: int) -> tuple[np.ndarray, np.ndarray]:
-        """Drain the lane's accumulated (scores, kept), in stream order."""
+        """Drain the lane's accumulated (scores, kept), in stream order.
+
+        This is the readout (and backpressure) point: it drains the lane's
+        bucket ring — ONE blocking fetch for everything buffered since the
+        last drain, however many pump rounds that spans.  Under
+        ``on_overflow="drop_oldest"``, rounds lost to overflow are simply
+        absent here and counted in ``stats()['ring_dropped_rounds']``."""
         self._check_lane(lane)
+        self._drain_ring(self._lanes[lane].bucket)
         ln = self._lanes[lane]
         if not ln.results:
             return (np.zeros((0,), np.float32), np.zeros((0,), bool))
@@ -211,7 +433,13 @@ class DetectorPool:
 
     def stats(self, lane: int) -> dict:
         """Lane accounting: host float64 books plus the lane's on-device
-        accumulators (f32/i32 — aggregatable without per-chunk host sync)."""
+        accumulators (f32/i32 — aggregatable without per-chunk host sync),
+        plus ring/bucket occupancy so callers can observe backpressure.
+
+        Host books (``kept_total``/``energy_pj``/...) cover *drained*
+        rounds only; ``ring_rounds_buffered`` says how many rounds still sit
+        on device.  The ``device_*`` accumulators are always complete —
+        including rounds dropped under ``drop_oldest``."""
         self._check_lane(lane)
         ln = self._lanes[lane]
         n_scored = max(ln.kept_total, 1)
@@ -222,15 +450,43 @@ class DetectorPool:
         ))
         return {
             "lane": lane,
+            "bucket": ln.bucket,
             "n_events": ln.n_events,
             "n_chunks": ln.n_chunks,
             "kept_total": ln.kept_total,
             "energy_pj": ln.energy_pj,
             "latency_ns_per_event": ln.latency_ns / n_scored,
             "buffered": int(ln.buf_ts.size),
+            "ring_capacity": self._ring_rounds,
+            "ring_rounds_buffered": self._ring_count[ln.bucket],
+            "ring_dropped_rounds": self._ring_dropped[ln.bucket],
             "device_kept_total": int(dev_kept),
             "device_energy_pj": float(dev_energy),
             "device_latency_ns": float(dev_latency),
+        }
+
+    def pool_stats(self) -> dict:
+        """Pool-level runtime counters (no device sync): fetch/round ratio,
+        per-bucket ring occupancy and drop counts, sharding layout."""
+        return {
+            "capacity": self._capacity,
+            "active": len(self.active_lanes),
+            "sharded": self._mesh is not None,
+            "devices": (int(self._mesh.devices.size)
+                        if self._mesh is not None else 1),
+            "ring_rounds": self._ring_rounds,
+            "on_overflow": self._overflow,
+            "host_fetches": self._host_fetches,
+            "rounds_executed": self._rounds_executed,
+            "dropped_rounds_total": sum(self._ring_dropped.values()),
+            "buckets": {
+                b: {
+                    "ring_rounds_buffered": self._ring_count[b],
+                    "ring_dropped_rounds": self._ring_dropped[b],
+                    "executables": self._exec[b]._cache_size(),
+                }
+                for b in self._buckets
+            },
         }
 
     # -- internals ----------------------------------------------------------
@@ -239,74 +495,184 @@ class DetectorPool:
         if not (0 <= lane < self._capacity) or not self._active[lane]:
             raise KeyError(f"lane {lane} is not an active session")
 
-    def _maybe_rebase(self, lane: int, chunk_ts: np.ndarray) -> None:
-        """Per-chunk timebase carry — shared plan with StreamingDetector."""
-        ln = self._lanes[lane]
-        ln.base, hops = streaming_mod.plan_rebase(ln.base, chunk_ts,
-                                                  self._cfg)
-        for hop in hops:
-            self._states = self._vrebase(
-                self._states, jnp.int32(lane), np.int32(hop)
-            )
+    def _place(self, states):
+        """Pin the lane sharding after a per-lane host update (`_vreset` /
+        `_vrebase` infer their own output sharding, which on a 1-wide mesh
+        can canonicalize away the NamedSharding and flip the executor's
+        cache key).  No-op (no copy) when already placed, or unsharded."""
+        if self._mesh is None:
+            return states
+        return sharding_mod.lane_put(self._mesh, states, 0)
 
-    def _pump_round(self, flush_lane: Optional[int] = None) -> bool:
-        cfg = self._cfg
-        chunk = cfg.chunk
-        ready: list[int] = []
-        n_valids: dict[int, int] = {}
-        xy = np.zeros((self._capacity, chunk, 2), np.int32)
-        ts = np.zeros((self._capacity, chunk), np.int32)
-        valid = np.zeros((self._capacity, chunk), bool)
+    def _pump_bucket(self, bucket: int, max_rounds: Optional[int] = None,
+                     flush_lane: Optional[int] = None) -> int:
+        """Run this bucket's ready rounds through its K-round executor,
+        cutting a block early when a lane needs a timebase rebase (the hop
+        applies between blocks; rebases are ~hourly per session)."""
+        executed = 0
+        while True:
+            pending: list[_Round] = []
+            stop = False
+            while len(pending) < self._ring_rounds:
+                if max_rounds is not None and \
+                        executed + len(pending) >= max_rounds:
+                    stop = True
+                    break
+                rnd = self._collect_round(
+                    bucket, flush_lane, allow_rebase=not pending
+                )
+                if rnd == "rebase":
+                    break          # cut the block; rebase opens the next one
+                if rnd is None:
+                    stop = True
+                    break
+                pending.append(rnd)
+            if pending:
+                self._execute_block(bucket, pending)
+                executed += len(pending)
+            if stop or not pending:
+                break
+        return executed
 
+    def _collect_round(self, bucket: int, flush_lane: Optional[int],
+                       allow_rebase: bool):
+        """Pop one round's worth of chunks from this bucket's lane buffers.
+
+        Returns a ``_Round``, ``None`` (nothing ready), or ``"rebase"``
+        (a lane needs a timebase hop first but the current block already
+        holds rounds — the caller must execute them before the hop so the
+        round order matches the sequential path bit-for-bit)."""
+        ready: list[tuple[int, int]] = []
         for lane in self.active_lanes:
             ln = self._lanes[lane]
-            if ln.buf_ts.size >= chunk:
-                n = chunk
-            elif lane == flush_lane and ln.buf_ts.size:
-                n = int(ln.buf_ts.size)
-            else:
+            if ln.bucket != bucket:
                 continue
-            self._maybe_rebase(lane, ln.buf_ts[:n])
-            ready.append(lane)
-            n_valids[lane] = n
+            if ln.buf_ts.size >= bucket:
+                ready.append((lane, bucket))
+            elif lane == flush_lane and ln.buf_ts.size:
+                ready.append((lane, int(ln.buf_ts.size)))
+        if not ready:
+            return None
+
+        hops_needed = []
+        for lane, n in ready:
+            ln = self._lanes[lane]
+            new_base, hops = streaming_mod.plan_rebase(
+                ln.base, ln.buf_ts[:n], self._cfg
+            )
+            if hops:
+                hops_needed.append((lane, new_base, hops))
+        if hops_needed and not allow_rebase:
+            return "rebase"
+        for lane, new_base, hops in hops_needed:
+            self._lanes[lane].base = new_base
+            for hop in hops:
+                self._states = self._place(self._vrebase(
+                    self._states, jnp.int32(lane), np.int32(hop)
+                ))
+
+        xy = np.zeros((self._phys, bucket, 2), np.int32)
+        ts = np.zeros((self._phys, bucket), np.int32)
+        valid = np.zeros((self._phys, bucket), bool)
+        mask = np.zeros((self._phys,), bool)
+        n_valid = np.zeros((self._phys,), np.int32)
+        for lane, n in ready:
+            ln = self._lanes[lane]
             xy[lane, :n] = ln.buf_xy[:n]
-            ts64 = np.full((chunk,), ln.buf_ts[min(n, ln.buf_ts.size) - 1],
+            ts64 = np.full((bucket,), ln.buf_ts[min(n, ln.buf_ts.size) - 1],
                            np.int64)
             ts64[:n] = ln.buf_ts[:n]
             ts[lane] = (ts64 - ln.base).astype(np.int32)
             valid[lane, :n] = True
+            mask[lane] = True
+            n_valid[lane] = n
             ln.buf_xy = ln.buf_xy[n:]
             ln.buf_ts = ln.buf_ts[n:]
-        if not ready:
-            return False
+        return _Round(xy, ts, valid, mask, n_valid)
 
-        mask = np.zeros((self._capacity,), bool)
-        mask[ready] = True
+    def _execute_block(self, bucket: int, rounds: list) -> None:
+        """Launch one K-round executor block (shapes are always (K, ...):
+        occupancy is data, so this never recompiles).
+
+        The fixed shape means a block with 1 ready round still uploads
+        (K, phys, chunk) inputs — the padding's compute is skipped by the
+        round-level cond, but its H2D bytes are not.  That is the price of
+        the one-executable-per-bucket witness; latency-sensitive sparse
+        arrivals should size ``ring_rounds`` to their typical burst (see
+        ROADMAP: preallocated pinned input buffers would remove the cost).
+        """
+        k = self._ring_rounds
+        n = len(rounds)
+        if self._overflow == "drain" and self._ring_count[bucket] + n > k:
+            self._drain_ring(bucket)
+
+        xy = np.zeros((k, self._phys, bucket, 2), np.int32)
+        ts = np.zeros((k, self._phys, bucket), np.int32)
+        valid = np.zeros((k, self._phys, bucket), bool)
+        mask = np.zeros((k, self._phys), bool)
+        n_valid = np.zeros((k, self._phys), np.int32)
+        for i, rnd in enumerate(rounds):
+            xy[i], ts[i], valid[i] = rnd.xy, rnd.ts, rnd.valid
+            mask[i], n_valid[i] = rnd.mask, rnd.n_valid
+        round_active = np.arange(k) < n
+
         chunks = state_mod.ChunkInput(
             xy=jnp.asarray(xy),
             ts=jnp.asarray(ts),
             valid=jnp.asarray(valid),
-            ber=jnp.full((self._capacity,), self._riders[0], jnp.float32),
+            ber=jnp.full((k, self._phys), self._riders[0], jnp.float32),
             energy_coef=jnp.full(
-                (self._capacity,), self._riders[1], jnp.float32
+                (k, self._phys), self._riders[1], jnp.float32
             ),
             latency_coef=jnp.full(
-                (self._capacity,), self._riders[2], jnp.float32
+                (k, self._phys), self._riders[2], jnp.float32
             ),
         )
-        self._states, outs = self._vstep(
-            self._states, chunks, jnp.asarray(mask)
+        self._states, self._rings[bucket] = self._exec[bucket](
+            self._states, self._rings[bucket], chunks,
+            jnp.asarray(mask), jnp.asarray(n_valid),
+            jnp.asarray(round_active),
         )
-        outs = jax.device_get(outs)  # one sync per round
+        c = self._ring_count[bucket]
+        self._ring_count[bucket] = min(c + n, self._ring_rounds)
+        self._ring_dropped[bucket] += max(0, c + n - self._ring_rounds)
+        self._rounds_executed += n
 
-        for lane in ready:
-            ln = self._lanes[lane]
-            n = n_valids[lane]
-            streaming_mod.account_chunk(
-                ln, outs.n_kept[lane], outs.vdd_idx[lane],
-                online=self._online, tab=self._tab, fixed_vdd=cfg.vdd,
-            )
-            ln.results.append(
-                (outs.scores[lane, :n].copy(), outs.keep[lane, :n].copy())
-            )
-        return True
+    def _drain_ring(self, bucket: int) -> None:
+        """ONE blocking fetch: pull every undrained ring slot to the host,
+        distribute per-lane results (oldest round first) and fold the
+        float64 accounting — then mark the device ring empty."""
+        if self._ring_count[bucket] == 0:
+            return
+        ring = jax.device_get(self._rings[bucket])
+        self._host_fetches += 1
+        n_slots = ring.scores.shape[0]
+        for slot in state_mod.ring_slot_order(ring.head, ring.count, n_slots):
+            for lane in np.flatnonzero(ring.mask[slot]):
+                ln = self._lanes[int(lane)]
+                if ln is None:
+                    continue
+                n = int(ring.n_valid[slot, lane])
+                streaming_mod.account_chunk(
+                    ln, ring.n_kept[slot, lane], ring.vdd_idx[slot, lane],
+                    online=self._online, tab=self._tab,
+                    fixed_vdd=self._cfg.vdd,
+                )
+                # copy: a view would pin the whole fetched (R, lanes,
+                # chunk) buffer in the lane queue until the lane polls
+                ln.results.append((
+                    ring.scores[slot, lane, :n].astype(np.float32,
+                                                       copy=True),
+                    ring.keep[slot, lane, :n].astype(bool, copy=True),
+                ))
+        # Device counters are ground truth; resync the host mirrors.  The
+        # zeroed count must match the old scalar's commitment: sharded rings
+        # are committed NamedSharding arrays (a bare jnp scalar would flip
+        # the executor's cache key and recompile), unsharded rings are
+        # uncommitted (a device_put scalar would do the same flip).
+        self._ring_dropped[bucket] = int(ring.dropped)
+        self._ring_count[bucket] = 0
+        zero = jnp.int32(0)
+        if self._mesh is not None:
+            zero = jax.device_put(zero, self._rings[bucket].count.sharding)
+        self._rings[bucket] = self._rings[bucket]._replace(count=zero)

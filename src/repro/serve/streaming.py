@@ -26,6 +26,7 @@ supported; asking for host-precomputed DVFS raises.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Optional
 
@@ -164,11 +165,24 @@ class StreamingDetector:
     jitted ``detector_step``, and returns ``(scores, kept)`` for exactly the
     events those chunks consumed (in stream order); events still buffered
     are returned by a later ``feed`` or by ``flush()``.
+
+    ``chunk=`` overrides the config's chunk size per session (the bucket
+    tier: heterogeneous sensors re-chunk at their own size while sessions
+    in the same bucket share one compiled step).
     """
 
     def __init__(self, cfg, *, seed: Optional[int] = None,
-                 base_ts: Optional[int] = None):
+                 base_ts: Optional[int] = None,
+                 chunk: Optional[int] = None):
         _check_streamable(cfg)
+        if chunk is not None:
+            # Bucket-aware re-chunking: a session may run at its sensor's
+            # chunk size without a bespoke config — sessions sharing a
+            # (cfg, chunk) bucket share one compiled step (lru-cached), and
+            # the session is bit-exact vs run_pipeline at that chunk size.
+            if chunk < 1:
+                raise ValueError("chunk must be >= 1")
+            cfg = dataclasses.replace(cfg, chunk=int(chunk))
         self._cfg = cfg
         self._tcfg = pipeline_mod._trace_cfg(cfg)
         self._step = _step_fn(self._tcfg)

@@ -1,0 +1,443 @@
+"""Device-resident pool runtime: ring-buffered K-round execution, chunk-size
+buckets, and sharded lanes.
+
+Acceptance contracts (ISSUE 3):
+
+  * K-round ring-buffered ``pump_rounds(K)`` is bit-exact (scores, kept,
+    final TOS, float64 energy books) vs K sequential single-round pumps,
+    for K in {1, 3, 8}, on the jnp and Pallas backends, with lanes joining
+    and leaving mid-run.
+  * Compile-count assertions hold per bucket: <= 1 compiled executor per
+    chunk-size bucket tier, through membership churn, flushes, drains, and
+    lane migration across buckets.
+  * The ring cuts host fetches: K back-to-back rounds cost one blocking
+    fetch, not K (``host_fetches`` is the witness).
+  * Edge cases: ``flush()`` with an empty re-chunk buffer, ``disconnect()``
+    with undrained ring slots, ragged slabs crossing bucket boundaries,
+    ``poll()`` under ring overflow (both policies).
+"""
+import dataclasses
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import pipeline
+from repro.events import synthetic
+from repro.serve import DetectorPool
+
+
+@pytest.fixture(scope="module")
+def streams():
+    a = synthetic.shapes_stream(duration_us=40_000, seed=0)
+    b = synthetic.dynamic_stream(duration_us=40_000, seed=1)
+    return [
+        (a.xy[:2000], a.ts[:2000]),
+        (b.xy[:1500], b.ts[:1500]),
+        (a.xy[2000:3700], a.ts[2000:3700]),
+    ]
+
+
+def _lane_state(pool, lane):
+    return jax.device_get(jax.tree.map(lambda x: x[lane], pool._states))
+
+
+def _assert_states_equal(sa, sb):
+    for x, y in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _serve_staggered_k(pool, streams, cfg, k, *, slab_rng_seed=0):
+    """Staggered joins/leaves; pumps via ``pump_rounds(k)`` until dry each
+    step.  Returns per-stream (scores, kept, final_stats)."""
+    rng = np.random.default_rng(slab_rng_seed)
+    n = len(streams)
+    lanes, cursors = {}, {i: 0 for i in range(n)}
+    out = {i: ([], [], None) for i in range(n)}
+    step = 0
+    lanes[0] = pool.connect(seed=cfg.seed)
+    while lanes or any(cursors[i] < len(streams[i][1]) for i in range(n)):
+        step += 1
+        joined = len([i for i in range(n) if i in lanes or cursors[i] > 0])
+        if step % 2 == 1 and joined < n:
+            nxt = next(i for i in range(n)
+                       if i not in lanes and cursors[i] == 0)
+            lanes[nxt] = pool.connect(seed=cfg.seed)
+        for i, lane in list(lanes.items()):
+            xy, ts = streams[i]
+            c = cursors[i]
+            if c >= len(ts):
+                s, kk = pool.flush(lane)
+                out[i][0].append(s)
+                out[i][1].append(kk)
+                stats = pool.disconnect(lane)
+                out[i] = (out[i][0], out[i][1], stats)
+                del lanes[i]
+                continue
+            slab = int(rng.integers(40, 600))
+            pool.feed(lane, xy[c:c + slab], ts[c:c + slab])
+            cursors[i] = c + slab
+        while pool.pump_rounds(k):
+            pass
+        for i, lane in lanes.items():
+            s, kk = pool.poll(lane)
+            out[i][0].append(s)
+            out[i][1].append(kk)
+    return {
+        i: (np.concatenate(out[i][0]), np.concatenate(out[i][1]), out[i][2])
+        for i in range(n)
+    }
+
+
+@pytest.mark.parametrize("k", [1, 3, 8])
+def test_ring_k_rounds_bitexact_vs_sequential(streams, k):
+    """pump_rounds(K) through a ring_rounds=K executor == K single-round
+    pumps, bit for bit, under membership churn (and both == run_pipeline)."""
+    cfg = pipeline.PipelineConfig(
+        chunk=256, lut_every_chunks=2, vdd=0.6, inject_ber=True
+    )
+    ring = DetectorPool(cfg, capacity=3, ring_rounds=k)
+    seq = DetectorPool(cfg, capacity=3, ring_rounds=1)
+    a = _serve_staggered_k(ring, streams, cfg, k)
+    b = _serve_staggered_k(seq, streams, cfg, 1)
+    for i, (xy, ts) in enumerate(streams):
+        ref = pipeline.run_pipeline(xy, ts, cfg)
+        np.testing.assert_array_equal(a[i][0], ref.scores,
+                                      err_msg=f"lane {i} scores (ring)")
+        np.testing.assert_array_equal(a[i][0], b[i][0])
+        np.testing.assert_array_equal(a[i][1], b[i][1])
+        np.testing.assert_array_equal(a[i][1], ref.kept)
+        # float64 energy books identical between the two execution plans
+        assert a[i][2]["energy_pj"] == b[i][2]["energy_pj"] == ref.energy_pj
+        assert a[i][2]["kept_total"] == int(ref.kept.sum())
+    # churn (3 joins, 3 leaves, ragged arrivals) => 1 executable each
+    assert ring.compile_cache_size() == 1
+    assert seq.compile_cache_size() == 1
+
+
+@pytest.mark.parametrize("backend", ["pallas_nmc", "pallas_batched"])
+@pytest.mark.parametrize("k", [1, 3, 8])
+def test_ring_k_rounds_pallas_backends(backend, k):
+    """The K-round executor is backend-agnostic: Pallas kernels inside the
+    vmapped scan match the scan pipeline bit-for-bit, with a mid-run join."""
+    rng = np.random.default_rng(0)
+    e, h, w = 768, 64, 64
+    mk = lambda s: (
+        np.stack([rng.integers(0, w, e), rng.integers(0, h, e)], 1)
+        .astype(np.int32),
+        np.sort(rng.integers(0, 20_000, e)).astype(np.int64),
+    )
+    s0, s1 = mk(0), mk(1)
+    cfg = pipeline.PipelineConfig(
+        height=h, width=w, chunk=128, lut_every_chunks=2, backend=backend
+    )
+    pool = DetectorPool(cfg, capacity=2, ring_rounds=k)
+    a = pool.connect(seed=cfg.seed)
+    pool.feed(a, s0[0][:400], s0[1][:400])
+    pool.pump()
+    b = pool.connect(seed=cfg.seed)          # joins mid-run
+    pool.feed(a, s0[0][400:], s0[1][400:])
+    pool.feed(b, *s1)
+    pool.pump()
+    res_a = pool.flush(a)
+    pool.disconnect(a)                       # leaves while b still live
+    res_b = pool.flush(b)
+    for res, st in ((res_a, s0), (res_b, s1)):
+        ref = pipeline.run_pipeline(st[0], st[1], cfg)
+        np.testing.assert_array_equal(res[0], ref.scores)
+        np.testing.assert_array_equal(res[1], ref.kept)
+    assert pool.compile_cache_size() == 1
+
+
+def test_ring_residency_final_state_matches(streams):
+    """Ring vs sequential execution also agree on the carried device state
+    (TOS/SAE/LUT/key/accumulators), not just the fetched outputs."""
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2,
+                                  vdd=0.6, inject_ber=True)
+    ring = DetectorPool(cfg, capacity=1, ring_rounds=4)
+    seq = DetectorPool(cfg, capacity=1, ring_rounds=1)
+    xy, ts = streams[0]
+    for pool in (ring, seq):
+        lane = pool.connect(seed=cfg.seed)
+        pool.feed(lane, xy, ts)
+        pool.pump()
+        pool.flush(lane)
+    _assert_states_equal(_lane_state(ring, 0), _lane_state(seq, 0))
+    ref = pipeline.run_pipeline(xy, ts, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(_lane_state(ring, 0).surface), ref.tos
+    )
+    np.testing.assert_array_equal(
+        np.asarray(_lane_state(ring, 0).lut), ref.lut
+    )
+
+
+def test_ring_fewer_host_fetches(streams):
+    """K rounds back-to-back cost ~K/ring_rounds fetches, not K (the
+    serving-layer analogue of PR 1's O(n_chunks) -> 1 transfer cut)."""
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    xy, ts = streams[0]                       # 2000 events -> 7 full rounds
+    ring = DetectorPool(cfg, capacity=1, ring_rounds=8)
+    seq = DetectorPool(cfg, capacity=1, ring_rounds=1)
+    for pool in (ring, seq):
+        lane = pool.connect(seed=cfg.seed)
+        pool.feed(lane, xy, ts)
+        rounds = pool.pump()
+        pool.poll(lane)
+        assert rounds == 7
+    assert ring.host_fetches == 1             # 7 rounds, one drain
+    assert seq.host_fetches == 7              # the per-round world
+    assert ring.rounds_executed == seq.rounds_executed == 7
+
+
+def test_pump_rounds_budget(streams):
+    """pump_rounds(k) executes at most k rounds and reports what it did."""
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    pool = DetectorPool(cfg, capacity=1, ring_rounds=4)
+    lane = pool.connect(seed=cfg.seed)
+    xy, ts = streams[0]
+    pool.feed(lane, xy, ts)                   # 7 full rounds buffered
+    assert pool.pump_rounds(3) == 3
+    assert pool.pump_rounds(2) == 2
+    assert pool.pump() == 2                   # the rest
+    assert pool.pump_rounds(5) == 0           # dry
+    s, _ = pool.flush(lane)
+    ref = pipeline.run_pipeline(xy, ts, cfg)
+    np.testing.assert_array_equal(s, ref.scores)
+
+
+# ---------------------------------------------------------------------------
+# Chunk-size buckets
+# ---------------------------------------------------------------------------
+
+
+def test_bucketed_lanes_ragged_slabs_cross_bucket_boundaries(streams):
+    """Lanes in different chunk-size buckets, fed ragged slabs that straddle
+    every bucket size, each match run_pipeline at their own bucket's chunk;
+    one compiled executor per exercised bucket."""
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    pool = DetectorPool(cfg, capacity=3, ring_rounds=3,
+                        buckets=(128, 256, 512))
+    a = pool.connect(seed=cfg.seed, chunk=128)
+    b = pool.connect(seed=cfg.seed)               # default -> 256
+    c = pool.connect(seed=cfg.seed, chunk=300)    # rounds up -> 512
+    assert pool.stats(a)["bucket"] == 128
+    assert pool.stats(b)["bucket"] == 256
+    assert pool.stats(c)["bucket"] == 512
+    rng = np.random.default_rng(7)
+    cur = {a: 0, b: 0, c: 0}
+    src = {a: streams[0], b: streams[1], c: streams[2]}
+    while any(cur[ln] < len(src[ln][1]) for ln in cur):
+        for ln in (a, b, c):
+            xy, ts = src[ln]
+            n = int(rng.integers(100, 600))       # crosses 128/256/512
+            pool.feed(ln, xy[cur[ln]:cur[ln] + n], ts[cur[ln]:cur[ln] + n])
+            cur[ln] += n
+        pool.pump()
+    for ln, bucket in ((a, 128), (b, 256), (c, 512)):
+        s, kk = pool.flush(ln)
+        ref = pipeline.run_pipeline(
+            *src[ln], dataclasses.replace(cfg, chunk=bucket)
+        )
+        np.testing.assert_array_equal(s, ref.scores, err_msg=f"bucket {bucket}")
+        np.testing.assert_array_equal(kk, ref.kept)
+        assert pool.disconnect(ln)["energy_pj"] == ref.energy_pj
+    assert pool.compile_cache_sizes() == {128: 1, 256: 1, 512: 1}
+
+
+def test_bucket_selection_and_errors(streams):
+    cfg = pipeline.PipelineConfig(chunk=256)
+    pool = DetectorPool(cfg, capacity=2, buckets=(128, 256))
+    with pytest.raises(ValueError, match="no chunk bucket fits"):
+        pool.connect(chunk=512)
+    lane = pool.connect(chunk=64)                 # rounds up to 128
+    assert pool.stats(lane)["bucket"] == 128
+    # a freed lane can land in a different bucket (lane migration)
+    pool.disconnect(lane)
+    lane2 = pool.connect(chunk=256)
+    assert lane2 == lane
+    assert pool.stats(lane2)["bucket"] == 256
+    with pytest.raises(ValueError, match="buckets must be positive"):
+        DetectorPool(cfg, capacity=1, buckets=(0, 128))
+
+
+# ---------------------------------------------------------------------------
+# Serving edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_flush_with_empty_rechunk_buffer(streams):
+    """flush() on a lane whose re-chunk buffer is empty schedules no extra
+    round: it just drains the ring and returns what's pending (possibly
+    nothing)."""
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    pool = DetectorPool(cfg, capacity=1, ring_rounds=4)
+    lane = pool.connect(seed=cfg.seed)
+    s, k = pool.flush(lane)                       # never fed
+    assert s.size == 0 and k.size == 0
+    assert pool.rounds_executed == 0
+    xy, ts = streams[0]
+    pool.feed(lane, xy[:512], ts[:512])           # exact multiple of chunk
+    pool.pump()
+    pool.poll(lane)
+    before = pool.rounds_executed
+    s, k = pool.flush(lane)                       # buffer empty again
+    assert s.size == 0 and k.size == 0
+    assert pool.rounds_executed == before
+    assert pool.stats(lane)["buffered"] == 0
+
+
+def test_disconnect_with_undrained_ring_slots(streams):
+    """disconnect() drains the lane's ring first: its final stats cover all
+    pumped rounds, and a session reusing the slot inherits nothing."""
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    xy, ts = streams[0]
+    ref = pipeline.run_pipeline(xy[:1792], ts[:1792], cfg)   # 7 full chunks
+    pool = DetectorPool(cfg, capacity=1, ring_rounds=8)
+    lane = pool.connect(seed=cfg.seed)
+    pool.feed(lane, xy[:1792], ts[:1792])
+    pool.pump()
+    assert pool.stats(lane)["ring_rounds_buffered"] == 7     # undrained
+    stats = pool.disconnect(lane)                            # no poll first
+    assert stats["kept_total"] == int(ref.kept.sum())
+    assert stats["energy_pj"] == ref.energy_pj
+    assert stats["ring_rounds_buffered"] == 0
+    # slot reuse starts clean
+    lane2 = pool.connect(seed=cfg.seed)
+    s, k = pool.flush(lane2)
+    assert s.size == 0
+    assert pool.stats(lane2)["kept_total"] == 0
+
+
+def test_poll_under_ring_overflow_drop_oldest(streams):
+    """drop_oldest: a full ring overwrites its oldest rounds; poll() returns
+    only the survivors, the drop counters (host mirror and device ground
+    truth) agree, and the in-state device accumulators stay complete."""
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    xy, ts = streams[0]
+    pool = DetectorPool(cfg, capacity=1, ring_rounds=2,
+                        on_overflow="drop_oldest")
+    lane = pool.connect(seed=cfg.seed)
+    pool.feed(lane, xy[:1792], ts[:1792])         # 7 rounds into 2 slots
+    assert pool.pump() == 7
+    s, k = pool.poll(lane)
+    assert s.size == 2 * 256                      # rounds 5 and 6 survive
+    ref = pipeline.run_pipeline(xy[:1792], ts[:1792], cfg)
+    np.testing.assert_array_equal(s, ref.scores[5 * 256:])
+    st = pool.stats(lane)
+    assert st["ring_dropped_rounds"] == 5
+    # host books only cover what was polled; the device accumulators in the
+    # carried state never lost a round
+    assert st["kept_total"] == int(ref.kept[5 * 256:].sum())
+    assert st["device_kept_total"] == int(ref.kept.sum())
+    assert pool.pool_stats()["dropped_rounds_total"] == 5
+
+
+def test_ring_overflow_drain_policy_is_lossless(streams):
+    """drain: the host pre-drains a full ring instead of dropping — more
+    fetches under overload, never data loss."""
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    xy, ts = streams[0]
+    pool = DetectorPool(cfg, capacity=1, ring_rounds=2)
+    lane = pool.connect(seed=cfg.seed)
+    pool.feed(lane, xy, ts)
+    pool.pump()                                   # 7 rounds, R=2 -> drains
+    assert pool.host_fetches >= 3
+    s, k = pool.flush(lane)
+    ref = pipeline.run_pipeline(xy, ts, cfg)
+    np.testing.assert_array_equal(s, ref.scores)
+    assert pool.stats(lane)["ring_dropped_rounds"] == 0
+
+
+def test_pool_rejects_bad_config():
+    cfg = pipeline.PipelineConfig(chunk=128)
+    with pytest.raises(ValueError, match="ring_rounds"):
+        DetectorPool(cfg, capacity=1, ring_rounds=0)
+    with pytest.raises(ValueError, match="on_overflow"):
+        DetectorPool(cfg, capacity=1, on_overflow="block")
+
+
+# ---------------------------------------------------------------------------
+# Sharded lanes
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_executor_single_device_fallback(streams):
+    """shard=True on a 1-device host runs the shard_map path on a 1-wide
+    lane mesh — same bits, same single executable (the transparency
+    contract that lets one code path serve laptops and pods)."""
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2,
+                                  dvfs=True, dvfs_online=True)
+    pool = DetectorPool(cfg, capacity=2, ring_rounds=3, shard=True)
+    assert pool.pool_stats()["sharded"]
+    xy, ts = streams[0]
+    lane = pool.connect(seed=cfg.seed)
+    pool.feed(lane, xy, ts)
+    pool.pump()
+    s, k = pool.flush(lane)
+    ref = pipeline.run_pipeline(xy, ts, cfg)
+    np.testing.assert_array_equal(s, ref.scores)
+    np.testing.assert_array_equal(k, ref.kept)
+    assert pool.compile_cache_size() == 1
+
+
+_SHARDED_SUBPROCESS = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np, jax
+    from repro.core import pipeline
+    from repro.events import synthetic
+    from repro.serve import DetectorPool
+
+    assert len(jax.local_devices()) == 4
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2,
+                                  dvfs=True, dvfs_online=True)
+    streams = [synthetic.shapes_stream(duration_us=25_000, seed=s)
+               for s in range(3)]
+    pool = DetectorPool(cfg, capacity=3, ring_rounds=4)   # auto-shards
+    ps = pool.pool_stats()
+    assert ps["sharded"] and ps["devices"] == 4, ps
+    assert pool._phys == 4                                # padded to mesh
+    lanes = [pool.connect(seed=cfg.seed) for _ in range(3)]
+    for i, ln in enumerate(lanes):
+        pool.feed(ln, streams[i].xy[:1500], streams[i].ts[:1500])
+    pool.pump()
+    # churn mid-run: retire lane 2, reuse its slot for a fresh session
+    s2, _ = pool.flush(lanes[2])
+    ref2 = pipeline.run_pipeline(streams[2].xy[:1500], streams[2].ts[:1500],
+                                 cfg)
+    assert np.array_equal(s2, ref2.scores)
+    pool.disconnect(lanes[2])
+    lanes[2] = pool.connect(seed=cfg.seed)
+    pool.feed(lanes[2], streams[2].xy[:1500], streams[2].ts[:1500])
+    for i in (0, 1):
+        pool.feed(lanes[i], streams[i].xy[1500:2500],
+                  streams[i].ts[1500:2500])
+    pool.pump()
+    for i, e in ((0, 2500), (1, 2500), (2, 1500)):
+        s, k = pool.flush(lanes[i])
+        ref = pipeline.run_pipeline(streams[i].xy[:e], streams[i].ts[:e],
+                                    cfg)
+        assert np.array_equal(s, ref.scores), i
+        assert np.array_equal(k, ref.kept), i
+    assert pool.compile_cache_size() == 1, pool.compile_cache_sizes()
+    print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_pool_4_devices_subprocess():
+    """Lane-sharded pool on 4 forced host devices: bit-exact vs
+    run_pipeline per lane, one executable through churn (out-of-process so
+    the main pytest run stays on 1 device)."""
+    r = subprocess.run(
+        [sys.executable, "-c", _SHARDED_SUBPROCESS],
+        capture_output=True, text=True, timeout=600,
+        env={**__import__("os").environ, "PYTHONPATH": "src"},
+        cwd="/root/repo",
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout

@@ -98,6 +98,29 @@ def test_streaming_online_dvfs(stream):
     _assert_session_matches(det, scores, kept, ref)
 
 
+def test_streaming_chunk_override_buckets(stream):
+    """Per-session chunk override (the bucket tier): a session re-chunking
+    at its own size is bit-exact vs run_pipeline at that chunk size, and
+    sessions in the same (cfg, chunk) bucket share one compiled step."""
+    import dataclasses
+
+    xy, ts = stream.xy[:3001], stream.ts[:3001]
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    for chunk in (128, 512):
+        ref = pipeline.run_pipeline(
+            xy, ts, dataclasses.replace(cfg, chunk=chunk)
+        )
+        det = StreamingDetector(cfg, chunk=chunk)
+        scores, kept = _feed_in_slabs(det, xy, ts, [333] * 10)
+        _assert_session_matches(det, scores, kept, ref)
+    # same bucket -> same lru-cached jitted step
+    a = StreamingDetector(cfg, chunk=128)
+    b = StreamingDetector(cfg, chunk=128)
+    assert a._step is b._step
+    with pytest.raises(ValueError, match="chunk"):
+        StreamingDetector(cfg, chunk=0)
+
+
 def test_streaming_rejects_precomputed_dvfs():
     cfg = pipeline.PipelineConfig(dvfs=True)  # dvfs_online=False
     with pytest.raises(ValueError, match="incompatible with streaming"):
