@@ -1,5 +1,6 @@
 """Serving-layer benchmark: slab latency + aggregate throughput of the
-ring-buffered pool runtime vs the per-round path vs the offline batch scan.
+ring-buffered pool runtime vs the per-round path vs the offline batch scan,
+and of the async double-buffered drain vs the synchronous single-ring one.
 
 Rows per pool size K in {1, 4, 16}:
 
@@ -9,12 +10,29 @@ Rows per pool size K in {1, 4, 16}:
     the pre-ring execution model, kept as the baseline).
   * ``poolK_ring_slab_p50_ms`` / ``poolK_ring_slab_p99_ms`` — the same loop
     on the ring path (``ring_rounds=8``: rounds run back-to-back on device,
-    one fetch per drain).
-  * ``poolK_events_per_s`` / ``poolK_ring_events_per_s`` — aggregate
-    throughput of each path.
+    one fetch per drain), synchronous drain.
+  * ``poolK_ring_async_slab_p50_ms`` / ``..._p99_ms`` — the ring path with
+    ``drain_mode="async"``: the fetch runs on the reader thread while the
+    pump keeps executing.
+  * ``poolK_events_per_s`` / ``poolK_ring_events_per_s`` /
+    ``poolK_ring_async_events_per_s`` — aggregate throughput of each path.
   * ``poolK_fetches_per_round`` / ``poolK_ring_fetches_per_round`` — host
     blocking result transfers per executed round: ~1.0 for the per-round
     path, ~1/ring_rounds for the ring path (the K -> 1 contract).
+  * ``poolK_burst_rounds_per_fetch`` / ``poolK_ring_burst_rounds_per_fetch``
+    — backlog burst (feed everything, pump once): rounds per blocking
+    transfer at the ring depth.
+  * ``poolK_burst_drain_wait_sync_ms`` / ``poolK_burst_drain_wait_async_ms``
+    — the tentpole witness: wall time the PUMP thread spent making ring
+    room during a backlog burst pumped through a deliberately small ring
+    (``ring_rounds=2``, so every other block must drain first).  Sync pays
+    the full fetch+distribute inline; async pays an atomic buffer swap (and
+    only waits if the reader still holds the spare) — the pump's
+    time-to-next-round no longer includes the fetch.  On CPU backends the
+    win appears from multi-camera pools up (pool4/pool16); a 1-lane CPU
+    pool can cross over, since its "fetch" is a memcpy while the thread
+    handoff is real — on accelerators the fetch is PCIe-bound and async
+    wins outright.
   * ``poolK_sharded_events_per_s`` — the lane-sharded pool across local
     devices; on a single-device host the row is reported with a
     ``_skipped`` suffix (derived 0) instead of crashing.
@@ -23,7 +41,9 @@ plus the batch-path reference (``batchK_events_per_s`` via the vmapped
 ``run_pipeline_batched`` scan) so the cost of *online* serving is visible
 next to the single-sync fold.  All stream/slab randomness is pinned by
 ``SEED`` for run-to-run comparability; ``rows(smoke=True)`` shrinks sizes
-for the CI bench-smoke step.
+for the CI bench-smoke step.  ``benchmarks/run.py --check-regression``
+gates the structural rows (burst rounds/fetch) and the ring p99 against a
+committed baseline.
 """
 from __future__ import annotations
 
@@ -41,6 +61,7 @@ DURATION_US = 25_000
 SLAB = 384
 SEED = 7                      # pinned: streams and any slab jitter
 RING_ROUNDS = 8
+DRAIN_WAIT_RING = 2           # small ring -> bursts must drain mid-pump
 
 
 def _mk_streams(k: int, duration_us: int):
@@ -50,15 +71,13 @@ def _mk_streams(k: int, duration_us: int):
     ]
 
 
-def _run_pool(cfg, streams, *, ring_rounds: int, shard="auto"):
+def _run_pool(cfg, streams, *, ring_rounds: int, shard="auto",
+              drain_mode: str = "sync"):
     k = len(streams)
     pool = DetectorPool(cfg, capacity=k, ring_rounds=ring_rounds,
-                        shard=shard)
-    # Warm (compile) outside the timed region.
-    lane = pool.connect()
-    pool.feed(lane, streams[0].xy[:cfg.chunk], streams[0].ts[:cfg.chunk])
-    pool.pump()
-    pool.disconnect(lane)
+                        shard=shard, drain_mode=drain_mode)
+    # compile both executor shapes outside the timed region
+    pool.warmup(streams[0].xy, streams[0].ts)
 
     lanes = {i: pool.connect(seed=SEED + i) for i in range(k)}
     cursors = {i: 0 for i in range(k)}
@@ -80,21 +99,24 @@ def _run_pool(cfg, streams, *, ring_rounds: int, shard="auto"):
             pool.poll(lane)
         lat.append(time.perf_counter() - t1)
     dt = time.perf_counter() - t0
-    return dt, np.asarray(lat), pool.host_fetches, pool.rounds_executed
+    fetches, rounds = pool.host_fetches, pool.rounds_executed
+    pool.close()
+    return dt, np.asarray(lat), fetches, rounds
 
 
-def _run_burst(cfg, streams, *, ring_rounds: int):
+def _run_burst(cfg, streams, *, ring_rounds: int, drain_mode: str = "sync"):
     """Backlog burst: feed every stream fully, then pump once — the regime
     where the ring's K-rounds-per-fetch contract is fully visible (the
     latency loop above polls every round-trip, so its fetch ratio is bounded
-    by the arrival cadence, not the ring depth)."""
+    by the arrival cadence, not the ring depth).  Also returns the pump
+    thread's drain wait — the time-to-next-round cost the async reader
+    removes."""
     k = len(streams)
-    pool = DetectorPool(cfg, capacity=k, ring_rounds=ring_rounds)
-    lane = pool.connect()
-    pool.feed(lane, streams[0].xy[:cfg.chunk], streams[0].ts[:cfg.chunk])
-    pool.pump()
-    pool.disconnect(lane)       # warmed; counters below are steady-state
+    pool = DetectorPool(cfg, capacity=k, ring_rounds=ring_rounds,
+                        drain_mode=drain_mode)
+    pool.warmup(streams[0].xy, streams[0].ts)  # counters are steady-state
     fetches0, rounds0 = pool.host_fetches, pool.rounds_executed
+    dw0 = pool.pool_stats()["pump_drain_wait_s"]  # exclude warm drains
     lanes = {i: pool.connect(seed=SEED + i) for i in range(k)}
     for i, lane in lanes.items():
         pool.feed(lane, streams[i].xy, streams[i].ts)
@@ -105,7 +127,9 @@ def _run_burst(cfg, streams, *, ring_rounds: int):
     dt = time.perf_counter() - t0
     rounds = pool.rounds_executed - rounds0
     fetches = pool.host_fetches - fetches0
-    return dt, rounds, fetches
+    drain_wait = pool.pool_stats()["pump_drain_wait_s"] - dw0
+    pool.close()
+    return dt, rounds, fetches, drain_wait
 
 
 def _run_batch(cfg, streams):
@@ -143,7 +167,7 @@ def rows(smoke: bool = False):
         dt, lat, fetches, rounds = _run_pool(cfg, streams, ring_rounds=1)
         out.extend(_pool_rows(f"pool{k}", streams, dt, lat, fetches, rounds))
 
-        # ring path: K rounds back-to-back per fetch
+        # ring path, synchronous drain: K rounds back-to-back per fetch
         dt, lat, fetches, rounds = _run_pool(
             cfg, streams, ring_rounds=RING_ROUNDS
         )
@@ -152,11 +176,29 @@ def rows(smoke: bool = False):
         )
         out.append((f"pool{k}_sessions_per_s", 0.0, k / dt))
 
+        # ring path, async drain: reader thread fetches sealed rings
+        dt, lat, fetches, rounds = _run_pool(
+            cfg, streams, ring_rounds=RING_ROUNDS, drain_mode="async"
+        )
+        out.extend(
+            _pool_rows(f"pool{k}_ring_async", streams, dt, lat, fetches,
+                       rounds)
+        )
+
         # backlog burst: rounds-per-fetch hits the ring depth (K -> 1)
         for tag, rr in ((f"pool{k}", 1), (f"pool{k}_ring", RING_ROUNDS)):
-            bdt_, rounds, fetches = _run_burst(cfg, streams, ring_rounds=rr)
+            _, rounds, fetches, _ = _run_burst(cfg, streams, ring_rounds=rr)
             out.append((f"{tag}_burst_rounds_per_fetch", 0.0,
                         rounds / max(fetches, 1)))
+
+        # drain-wait contrast: burst through a 2-slot ring so every other
+        # block must make room first; sync fetches inline, async swaps
+        for mode in ("sync", "async"):
+            _, _, _, dw = _run_burst(
+                cfg, streams, ring_rounds=DRAIN_WAIT_RING, drain_mode=mode
+            )
+            out.append((f"pool{k}_burst_drain_wait_{mode}_ms", 0.0,
+                        dw * 1e3))
 
         # lane-sharded pool: needs >1 local device; report, don't crash
         if single_device:

@@ -12,6 +12,24 @@ without failing the run.
 ``--smoke`` shrinks sizes in every module that supports it (a ``smoke``
 keyword on its ``rows()``) — the CI bench-smoke step runs this to catch
 bench bitrot: any module raising still fails the process.
+
+``--check-regression BASELINE`` turns the run into a perf gate: after the
+modules finish, key serving rows are compared against the committed
+baseline JSON and the process exits non-zero on a regression.
+
+  * structural rows (``*_burst_rounds_per_fetch`` higher-is-better,
+    ``*_fetches_per_round`` lower-is-better) count blocking transfers per
+    executed round — machine-independent and deterministic at fixed sizes,
+    so they get the tight ``--tol`` (default 0.35 = 35%).  These catch
+    "the ring quietly started fetching every round" class bugs.
+  * wall-time rows (``*_slab_p99_ms`` lower-is-better) get the loose
+    ``--tol-time`` (default 3.0 = 4x baseline) so the gate survives CI
+    machine variance, and are skipped entirely when the run's ``--smoke``
+    flag differs from the baseline's (different sizes, incomparable).
+
+CI runs ``--smoke --check-regression benchmarks/BENCH_smoke_baseline.json``
+(a committed smoke-sized baseline, regenerated whenever serving perf
+characteristics intentionally move).
 """
 from __future__ import annotations
 
@@ -21,6 +39,77 @@ import json
 import sys
 import time
 
+# (suffix, direction): how a key row may move before the gate fails.
+# "higher" = regression when current drops below baseline*(1-tol);
+# "lower"  = regression when current rises above baseline*(1+tol).
+_GATE_STRUCTURAL = (
+    ("_burst_rounds_per_fetch", "higher"),
+    ("_fetches_per_round", "lower"),
+)
+_GATE_TIME = (
+    ("_slab_p99_ms", "lower"),
+)
+
+
+def check_regression(records: dict, baseline_path: str, *, smoke: bool,
+                     tol: float, tol_time: float) -> int:
+    """Compare this run's rows against a committed baseline; returns the
+    number of regressions (also printed to stderr).
+
+    The gate fails closed: a baseline row with a gated suffix that is
+    missing from (or skipped in) the current run counts as a regression —
+    a rename or a crashed bench module must not silently shrink the gate
+    to zero rows — and checking zero rows overall is itself a failure.
+    """
+    with open(baseline_path) as f:
+        base = json.load(f)
+    base_rows = base.get("rows", {})
+    time_comparable = bool(base.get("smoke")) == bool(smoke)
+    if not time_comparable:
+        print("# gate: smoke flag differs from baseline — wall-time rows "
+              "skipped, structural rows still checked", file=sys.stderr)
+    gates = list(_GATE_STRUCTURAL)
+    if time_comparable:
+        gates += list(_GATE_TIME)
+
+    failures = 0
+    checked = 0
+    for name, brec in sorted(base_rows.items()):
+        if brec.get("skipped"):
+            continue
+        for suffix, direction in gates:
+            if not name.endswith(suffix):
+                continue
+            ref = float(brec["derived"])
+            if ref <= 0:
+                continue
+            rec = records.get(name)
+            if rec is None or rec.get("skipped"):
+                failures += 1
+                print(f"# REGRESSION {name}: gated baseline row missing "
+                      f"from this run (renamed row, or its bench module "
+                      f"failed) — regenerate the baseline if intentional",
+                      file=sys.stderr)
+                continue
+            t = tol if (suffix, direction) in _GATE_STRUCTURAL else tol_time
+            cur = float(rec["derived"])
+            checked += 1
+            bad = (cur < ref * (1 - t)) if direction == "higher" \
+                else (cur > ref * (1 + t))
+            if bad:
+                failures += 1
+                print(f"# REGRESSION {name}: {cur:.6g} vs baseline "
+                      f"{ref:.6g} (allowed {direction}-is-better drift "
+                      f"{t:.0%})", file=sys.stderr)
+    if checked == 0 and failures == 0:
+        failures += 1
+        print(f"# REGRESSION: no gated rows found in {baseline_path} — "
+              f"the gate checked nothing (stale or empty baseline)",
+              file=sys.stderr)
+    print(f"# gate: {checked} row(s) checked against {baseline_path}, "
+          f"{failures} regression(s)", file=sys.stderr)
+    return failures
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
@@ -28,6 +117,15 @@ def main(argv=None) -> None:
                     help="tiny sizes (CI bitrot check, not a measurement)")
     ap.add_argument("--json-out", default="BENCH_serving.json",
                     help="machine-readable artifact path ('' disables)")
+    ap.add_argument("--check-regression", metavar="BASELINE", default=None,
+                    help="compare key serving rows against this committed "
+                         "baseline JSON; exit non-zero on regression")
+    ap.add_argument("--tol", type=float, default=0.35,
+                    help="allowed drift for structural ratio rows "
+                         "(fraction of baseline; default 0.35)")
+    ap.add_argument("--tol-time", type=float, default=3.0,
+                    help="allowed drift for wall-time rows (fraction of "
+                         "baseline; default 3.0 = 4x, machine variance)")
     args = ap.parse_args(argv)
 
     from benchmarks import (
@@ -81,6 +179,11 @@ def main(argv=None) -> None:
                        "errors": errors}, f, indent=2, sort_keys=True)
         print(f"# wrote {len(records)} rows -> {args.json_out}",
               file=sys.stderr)
+    if args.check_regression:
+        failures += check_regression(
+            records, args.check_regression, smoke=args.smoke,
+            tol=args.tol, tol_time=args.tol_time,
+        )
     if failures:
         raise SystemExit(1)
 

@@ -99,8 +99,11 @@ def demo_streaming(stream):
           np.array_equal(np.concatenate(parts2), batch.scores))
 
     # 3) Pool: this camera + a second one behind the ring-buffered K-round
-    #    executor — rounds run back-to-back on device, ONE fetch per drain
-    #    (lanes auto-shard across local devices when there are several).
+    #    executor — rounds run back-to-back on device, ONE fetch per drain,
+    #    and with drain_mode="async" (the default) that fetch runs on a
+    #    dedicated reader thread against a sealed double-buffered ring, so
+    #    the pump never waits on the transfer (lanes auto-shard across
+    #    local devices when there are several).
     other = synthetic.dynamic_stream(duration_us=30_000, seed=9)
     pool = DetectorPool(cfg, capacity=2, ring_rounds=4)
     a, b = pool.connect(seed=cfg.seed), pool.connect(seed=cfg.seed)
@@ -112,8 +115,10 @@ def demo_streaming(stream):
     ps = pool.pool_stats()
     print("  2-camera ring pool lane:         bit-exact vs batch scan:",
           np.array_equal(sa, batch.scores),
-          f" ({ps['rounds_executed']} rounds / {ps['host_fetches']} fetches,"
+          f" ({ps['rounds_executed']} rounds / {ps['host_fetches']} fetches"
+          f" on the {ps['drain_mode']} reader,"
           f" executables: {pool.compile_cache_size()})")
+    pool.close()
 
     # 4) Chunk-size buckets: a second sensor serves at its own chunk size
     #    (one compiled executor per bucket; both lanes still bit-exact).
@@ -133,6 +138,7 @@ def demo_streaming(stream):
           np.array_equal(s_big, batch.scores)
           and np.array_equal(s_small, ref_small.scores),
           f" (executors per bucket: {pool2.compile_cache_sizes()})")
+    pool2.close()
 
 
 def main():

@@ -251,16 +251,19 @@ def _trace_cfg(cfg: PipelineConfig, *,
 
 
 @functools.lru_cache(maxsize=None)
-def _scan_fn(cfg: PipelineConfig):
+def _scan_fn(cfg: PipelineConfig, donate: bool = False):
     # Donate the carried state so XLA updates it in place on accelerator
-    # backends (the CPU runtime does not implement donation — skip the
-    # warning there).
-    donate = ("state",) if jax.default_backend() != "cpu" else ()
+    # backends.  ``donate`` is keyed off the *placement of the state that
+    # will be passed in* (``state_mod.donation_ok``), not
+    # ``jax.default_backend()``: a state pinned to CPU under a GPU default
+    # backend must not donate host buffers, and one pinned to an
+    # accelerator under a CPU default still should.
+    donate_args = ("state",) if donate else ()
 
     def run(state, chunks):
         return state_mod.detector_scan(cfg, state, chunks)
 
-    return jax.jit(run, donate_argnames=donate)
+    return jax.jit(run, donate_argnames=donate_args)
 
 
 @functools.lru_cache(maxsize=None)
@@ -284,7 +287,8 @@ def run_pipeline(
     """
     prep = _prepare(xy, ts_us, cfg)
     state = state_mod.detector_init(cfg)
-    fin, outs = _scan_fn(_trace_cfg(cfg))(state, _chunk_inputs(prep))
+    scan = _scan_fn(_trace_cfg(cfg), state_mod.donation_ok(state))
+    fin, outs = scan(state, _chunk_inputs(prep))
     fin, outs = jax.device_get((fin, outs))  # sync #1
     vdd_arr = _vdd_trace(prep, outs.vdd_idx, cfg)
     return _finalize(cfg, prep.n_events, vdd_arr, fin.surface, fin.lut,

@@ -68,12 +68,35 @@ __all__ = [
     "detector_init",
     "detector_step",
     "detector_scan",
+    "donation_ok",
     "ring_init",
     "ring_push",
     "ring_slot_order",
     "select_update",
     "chunk_input_riders",
 ]
+
+
+def donation_ok(tree) -> bool:
+    """True iff every leaf of ``tree`` lives exclusively on non-CPU devices,
+    i.e. buffer donation would actually buy an in-place accelerator update.
+
+    Donation decisions must key off the *actual placement* of the state that
+    will be donated — NOT ``jax.default_backend()``: a session explicitly
+    placed on CPU under a GPU default backend must not donate host buffers
+    (the CPU runtime ignores donation, so a stale-keyed cache entry silently
+    loses the optimization), and a state placed on an accelerator under a
+    CPU default backend should still donate.  Leaves without a ``devices()``
+    method (e.g. host numpy arrays about to be uploaded) disqualify the tree
+    — donating what is not yet device-resident is meaningless.
+    """
+    devs: set = set()
+    for leaf in jax.tree.leaves(tree):
+        get = getattr(leaf, "devices", None)
+        if not callable(get):
+            return False
+        devs |= set(get())
+    return bool(devs) and all(d.platform != "cpu" for d in devs)
 
 
 class DetectorState(NamedTuple):
@@ -137,8 +160,12 @@ class RingState(NamedTuple):
     pushing onto a full ring overwrites the oldest slot and increments
     ``dropped`` (the pool's ``"drain"`` policy pre-drains so this never
     fires; its ``"drop_oldest"`` real-time policy lets it count lost
-    rounds).  ``dropped`` is cumulative and never reset by a drain, so host
-    mirrors can be audited against it.
+    rounds).  ``dropped`` counts drops since the owner last reset it: the
+    pool zeroes it (with ``count``) every drain/recycle so each fetch
+    reports a disjoint delta, and accumulates the ground truth on the host
+    (``dropped_rounds_confirmed``) — the per-fetch audit point for host
+    mirrors.  Don't treat a single ring's ``dropped`` as a monotonic
+    lifetime total.
     """
 
     scores: jax.Array   # (R, lanes, chunk) f32

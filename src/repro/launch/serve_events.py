@@ -1,19 +1,32 @@
 """Event-camera serving driver: a DetectorPool under synthetic live traffic.
 
     PYTHONPATH=src python -m repro.launch.serve_events --sessions 4 \
-        --duration-us 40000 --slab 400 --dvfs --ring-rounds 8
+        --duration-us 40000 --slab 400 --dvfs --ring-rounds 8 \
+        --drain-mode async
 
 Spins up a ``DetectorPool`` (ring-buffered K-round executor; lane-sharded
 automatically when the host has >1 local device), connects ``--sessions``
 synthetic cameras with staggered joins, feeds their streams in fixed-size
 slabs round-robin, and reports aggregate throughput, per-slab latency
 percentiles, and the ring runtime counters (host fetches per round,
-buffered/dropped rounds) — the serving-side counterpart of
+buffered/dropped rounds, pump drain wait) — the serving-side counterpart of
 ``repro.launch.serve`` (LM decode driver).
+
+``--drain-mode`` picks the readout runtime:
+
+  * ``async`` (default): double-buffered device rings per bucket; a
+    dedicated reader thread performs the blocking ``device_get`` while the
+    pump keeps scanning rounds into the live ring.  The pump's only drain
+    cost is the atomic ring swap (``pump_drain_wait_s`` stays near zero
+    unless the reader falls behind the spare ring).
+  * ``sync``: the PR 3 single-ring runtime — every drain blocks the pump
+    thread on the fetch.  Kept for comparison and debugging; both modes are
+    bit-exact (property-tested).
 
 Backpressure is observable, not silent: every round the driver checks
 ``pool.pool_stats()`` and logs when the overflow policy dropped rounds
-(``--overflow drop_oldest``) or when ring occupancy forced an early drain.
+(``--overflow drop_oldest``) or when ring occupancy forced an early
+drain/seal.
 """
 from __future__ import annotations
 
@@ -39,6 +52,10 @@ def main(argv=None):
     ap.add_argument("--overflow", default="drain",
                     choices=("drain", "drop_oldest"),
                     help="ring overflow policy (drain=lossless backpressure)")
+    ap.add_argument("--drain-mode", default="async",
+                    choices=("async", "sync"),
+                    help="async: reader thread fetches sealed rings off the "
+                         "pump thread; sync: drains block the caller")
     ap.add_argument("--dvfs", action="store_true",
                     help="online (in-step) DVFS instead of fixed 1.2 V")
     ap.add_argument("--backend", default="jnp",
@@ -55,17 +72,18 @@ def main(argv=None):
     ]
     pool = DetectorPool(cfg, capacity=args.sessions,
                         ring_rounds=args.ring_rounds,
-                        on_overflow=args.overflow)
+                        on_overflow=args.overflow,
+                        drain_mode=args.drain_mode)
     ps = pool.pool_stats()
     print(f"pool: capacity {args.sessions}, ring_rounds {args.ring_rounds} "
-          f"({args.overflow}), sharded={ps['sharded']} "
-          f"over {ps['devices']} device(s)")
+          f"({args.overflow}, drain_mode={args.drain_mode}), "
+          f"sharded={ps['sharded']} over {ps['devices']} device(s)")
 
-    # Warm the compiled executor (first pump compiles).
-    warm = pool.connect()
-    pool.feed(warm, streams[0].xy[:cfg.chunk], streams[0].ts[:cfg.chunk])
-    pool.pump()
-    pool.disconnect(warm)
+    # Warm both executor shapes (K-block + 1-round) outside the timed loop.
+    pool.warmup(streams[0].xy, streams[0].ts)
+    ps0 = pool.pool_stats()              # baselines: exclude warmup work
+    drains0 = ps0["pump_forced_drains"]
+    drain_wait0 = ps0["pump_drain_wait_s"]
 
     lanes, cursors = {}, {}
     lat_ms, done = [], 0
@@ -90,14 +108,17 @@ def main(argv=None):
                 continue
             pool.feed(lane, st.xy[c:c + args.slab], st.ts[c:c + args.slab])
             cursors[i] = c + args.slab
-        fetches_before = pool.host_fetches
+        # mid-pump makes-room events are counted by the pool itself
+        # (host_fetches deltas are racy in async mode: the reader counts a
+        # fetch when the transfer completes, not when the pump seals)
+        drains_before = pool.pool_stats()["pump_forced_drains"]
         pool.pump()
-        # a fetch during pump == ring occupancy forced an early drain
-        if pool.host_fetches > fetches_before:
-            forced_drains += pool.host_fetches - fetches_before
-            if forced_drains == pool.host_fetches - fetches_before:
+        now = pool.pool_stats()["pump_forced_drains"]
+        if now > drains_before:
+            if forced_drains == 0:
                 print("  [backpressure] ring full mid-pump: draining early "
                       "(lossless; fetch cadence rises under this load)")
+            forced_drains = now - drains0
         for lane in lanes.values():
             pool.poll(lane)
         lat_ms.append((time.perf_counter() - t1) * 1e3)
@@ -122,8 +143,13 @@ def main(argv=None):
           f"rounds per blocking transfer), "
           f"{forced_drains} forced mid-pump drains, "
           f"{ps['dropped_rounds_total']} dropped")
+    print(f"pump drain wait: "
+          f"{(ps['pump_drain_wait_s'] - drain_wait0) * 1e3:.2f} ms total "
+          f"({args.drain_mode}; async seals swap buffers instead of "
+          f"fetching), reader lag {ps['reader_lag_rounds']} round(s)")
     print(f"compiled executors: {pool.compile_cache_sizes()} "
           f"(membership churn must not recompile)")
+    pool.close()
     return dt, lat
 
 

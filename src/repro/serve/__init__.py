@@ -8,12 +8,19 @@
   pool      — ``DetectorPool``: N sessions through per-bucket compiled
               K-round executors.  Rounds run back-to-back in a jitted
               ``lax.scan`` whose outputs land in an on-device result ring
-              (one blocking fetch per drain, not per round); lanes shard
+              (one blocking fetch per drain, not per round); with
+              ``drain_mode="async"`` (default) each bucket double-buffers
+              that ring and a dedicated reader thread performs the fetch,
+              so the pump thread never waits on the transfer; lanes shard
               across local devices through ``repro.compat.shard_map`` when
               more than one is present; membership is an active-mask lane
-              system — sessions join/leave without recompilation.
+              system — sessions join/leave without recompilation; on
+              accelerator-resident pools the executors donate states+ring
+              (keyed off actual placement, never the default backend).
               ``poll()`` is the readout/backpressure point; overflow is
               either lossless (``"drain"``) or counted (``"drop_oldest"``).
+              Public API is thread-safe (one lock; reader exceptions
+              propagate to the next caller).
 
 Both fold the same pure detector core (``repro.core.state``) the batch
 pipeline folds, so a served stream is bit-identical to ``run_pipeline`` on

@@ -1,9 +1,10 @@
 """Multi-camera serving: a device-resident pool runtime.
 
 ``DetectorPool`` holds ``capacity`` detector lanes as a single stacked
-``DetectorState`` pytree on device.  Three mechanisms make its execution
-model fully device-resident (PR 3 — the serving-layer analogue of the
-O(n_chunks) host-transfer elimination PR 1 applied to the batch path):
+``DetectorState`` pytree on device.  Four mechanisms make its execution
+model fully device-resident and keep the pump thread off the PCIe bus
+(PR 3 + PR 4 — the serving-layer analogue of the read/write decoupling the
+paper's 8T TOS cell performs in silicon):
 
 **Ring-buffered multi-round pump.**  Instead of one vmapped round per jit
 call followed by a blocking fetch, rounds execute in jitted K-round
@@ -11,8 +12,12 @@ call followed by a blocking fetch, rounds execute in jitted K-round
 counts, chunk metadata) land in a fixed-capacity on-device result ring
 (``repro.core.state.RingState``).  The host performs ONE blocking fetch per
 drain — so K back-to-back rounds cost one sync, not K.  Padded no-op rounds
-inside a block are skipped by a round-level ``lax.cond`` (data, not shape:
-the block executor compiles exactly once per bucket).  Overflow policy:
+inside a block are skipped by a round-level ``lax.cond`` (data, not shape);
+a block with exactly ONE ready round takes a second, 1-round executor whose
+input shapes drop the K axis entirely, so sparse arrivals stop uploading
+K rounds of padding over H2D.  Each bucket therefore compiles at most two
+executables (K-block + 1-round), each exactly once — membership churn must
+not grow either (asserted in CI).  Overflow policy:
 
   * ``on_overflow="drain"`` (default): the host drains the ring before a
     block that would not fit — lossless backpressure, the fetch cadence
@@ -23,13 +28,40 @@ the block executor compiles exactly once per bucket).  Overflow policy:
     Host accounting skips dropped rounds; the in-state device accumulators
     (kept/energy/latency) remain complete either way.
 
-``poll()`` is the readout point: it drains the lane's bucket ring (one
-fetch) and returns everything accumulated — update cadence (``pump``) and
-readout cadence (``poll``) are fully decoupled, luvHarris-style.
+**Async double-buffered drain** (``drain_mode="async"``, the default).
+Each bucket owns a *pair* of device rings: the pump pushes rounds into the
+live ring, and draining *seals* it — an atomic swap that installs the empty
+spare ring as the new live one and hands the sealed ring to a dedicated
+reader thread, which performs the blocking ``device_get`` off the pump
+thread.  ``_execute_block`` keeps scanning rounds into the live ring while
+the reader drains the sealed one, luvHarris-style (fast event-rate thread
+decoupled from the slower readout thread).  ``drain_mode="sync"`` keeps the
+single-ring PR 3 behavior (the fetch blocks the calling thread) — both
+modes are bit-exact against each other and against ``run_pipeline``
+(property-tested).  Reader-thread exceptions propagate to the next public
+API caller (the same contract ``PrefetchingLoader`` carries); the pool then
+stays failed, since its device rings may hold unfetchable rounds.
+
+``poll()`` is the readout point: it seals the lane's bucket ring and (by
+default) waits for the reader to finish draining it, so its results match
+the synchronous mode exactly; ``poll(lane, wait=False)`` returns only what
+the reader has already drained — the fully non-blocking readout.  Update
+cadence (``pump``) and readout cadence (``poll``) are decoupled either way.
+
+**Thread safety.**  One re-entrant lock guards ALL pool mutable state
+(host mirrors, lane buffers, result queues, ring bindings); every public
+method acquires it, and the reader thread acquires it only to distribute
+fetched results and recycle the sealed ring — the blocking ``device_get``
+itself runs unlocked, so it overlaps with the pump.  ``connect`` /
+``disconnect`` / ``feed`` / ``pump`` / ``poll`` / ``flush`` / ``stats`` may
+therefore be called from any mix of threads; calls serialize on the lock
+(coarse-grained by design — correctness first, the fetch is the only part
+worth overlapping).  Waits use a condition variable on the same lock, so a
+pump blocked on the spare ring releases it for the reader.
 
 **Sharded lanes.**  With more than one local device (or ``shard=True``),
-the lane axis of the stacked state, the chunk inputs, and the ring is split
-across a 1-D ``('lanes',)`` mesh via ``repro.compat.shard_map`` +
+the lane axis of the stacked state, the chunk inputs, and the rings is
+split across a 1-D ``('lanes',)`` mesh via ``repro.compat.shard_map`` +
 ``repro.launch.sharding`` helpers.  The detector step has no cross-lane
 term, so the sharded executor needs zero collectives; lane->device
 placement is pure data (lane i is a fixed offset of the stacked pytree), so
@@ -37,31 +69,42 @@ join/leave still never recompiles.  Single-device hosts fall back
 transparently (``shard="auto"``).
 
 **Chunk-size buckets.**  Heterogeneous sensors don't share one global chunk
-size: the pool compiles one executor per chunk-size *bucket* (e.g.
+size: the pool compiles one executor pair per chunk-size *bucket* (e.g.
 256/512/1024) and ``connect(chunk=...)`` places the session in the smallest
 bucket that fits.  A lane in bucket ``c`` behaves bit-identically to a
 standalone session (and to ``run_pipeline``) at ``chunk=c``.
 
+**Donation.**  On accelerator backends the per-bucket executors donate the
+stacked lane states and the live ring (``donate_argnames``), so XLA updates
+both in place instead of holding two copies of the pool's HBM working set.
+The decision is keyed off the *actual placement* of the stacked state
+(``repro.core.state.donation_ok``), never ``jax.default_backend()`` — a
+CPU-resident pool under a GPU default backend must not donate host buffers.
+Double buffering is what makes donation and async drain compose: the sealed
+ring the reader is fetching is never the buffer the executor donates.
+
 Membership remains an *active-mask lane system*: a ``(capacity,)`` bool
 mask plus per-lane dummy chunks — data, never a shape — so a changing
-session population NEVER triggers a recompile (compile-count asserted per
-bucket in the tests).  Inactive/starved lanes ride along as masked no-ops:
-their carried state stays byte-identical (PRNG key and chunk cursor
-included), so a lane pausing costs nothing and resumes exactly where it
-left off.
+session population NEVER triggers a recompile.  Inactive/starved lanes ride
+along as masked no-ops: their carried state stays byte-identical (PRNG key
+and chunk cursor included), so a lane pausing costs nothing and resumes
+exactly where it left off.
 
 Per lane the pool keeps exactly what a ``StreamingDetector`` keeps: a host
 re-chunking buffer (int64 timestamps, per-lane timebase), float64 energy
 accounting, and a result queue.  A lane's outputs are bit-identical to a
 standalone session — and hence to ``run_pipeline`` on that lane's full
 stream — regardless of how other lanes interleave, how many rounds share a
-block, or how lanes are sharded (property-tested, K-round vs sequential).
+block, how lanes are sharded, or which drain mode runs (property-tested).
 
 Like ``StreamingDetector``, only fixed-Vdd and online-DVFS configs are
 servable (host-precomputed DVFS needs future knowledge).
 """
 from __future__ import annotations
 
+import queue
+import threading
+import time
 from typing import Optional
 
 import jax
@@ -79,6 +122,8 @@ from repro.serve import streaming as streaming_mod
 __all__ = ["DetectorPool"]
 
 _OVERFLOW_POLICIES = ("drain", "drop_oldest")
+_DRAIN_MODES = ("sync", "async")
+_STOP = object()          # reader-thread shutdown sentinel
 
 
 def _mask_tree(active, new_tree, old_tree):
@@ -123,13 +168,15 @@ class _Round:
 
 class DetectorPool:
     """Fixed-capacity pool of detector sessions behind per-bucket K-round
-    ring-buffered executors (one compiled program per chunk-size bucket)."""
+    ring-buffered executors (at most one K-block and one 1-round executable
+    per chunk-size bucket), with an async double-buffered drain runtime."""
 
     def __init__(self, cfg, capacity: int, *, seed: int = 0,
                  ring_rounds: int = 8,
                  buckets: Optional[tuple] = None,
                  on_overflow: str = "drain",
-                 shard: object = "auto"):
+                 shard: object = "auto",
+                 drain_mode: str = "async"):
         streaming_mod._check_streamable(cfg)
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
@@ -139,6 +186,11 @@ class DetectorPool:
             raise ValueError(
                 f"on_overflow must be one of {_OVERFLOW_POLICIES}, "
                 f"got {on_overflow!r}"
+            )
+        if drain_mode not in _DRAIN_MODES:
+            raise ValueError(
+                f"drain_mode must be one of {_DRAIN_MODES}, "
+                f"got {drain_mode!r}"
             )
         if buckets is None:
             buckets = (cfg.chunk,)
@@ -151,6 +203,7 @@ class DetectorPool:
         self._ring_rounds = ring_rounds
         self._buckets = buckets
         self._overflow = on_overflow
+        self._drain_mode = drain_mode
         self._online = bool(cfg.dvfs and cfg.dvfs_online)
         self._tab = dvfs_mod.op_point_table(cfg.dvfs_cfg)
         if not self._online:
@@ -161,6 +214,14 @@ class DetectorPool:
         else:
             z = np.float32(0.0)
             self._riders = (z, z, z)
+
+        # -- one lock for ALL pool mutable state; the condition variable
+        # shares it so waiters (spare ring, drain barrier) release it for
+        # the reader thread.  Public methods acquire it; the reader takes
+        # it only to distribute/recycle — never across a device fetch.
+        self._lock = threading.RLock()
+        self._cv = threading.Condition(self._lock)
+        self._closed = False
 
         # -- lane sharding: a 1-D 'lanes' mesh over the local devices -------
         n_dev = len(jax.local_devices())
@@ -184,22 +245,56 @@ class DetectorPool:
         self._active = np.zeros((self._phys,), bool)
         self._lanes: list[Optional[_Lane]] = [None] * self._phys
 
-        # -- per-bucket runtime: result ring + K-round executor -------------
-        self._rings: dict[int, state_mod.RingState] = {}
-        self._exec: dict[int, object] = {}
-        self._ring_count: dict[int, int] = {}     # host mirror of ring.count
-        self._ring_dropped: dict[int, int] = {}   # host mirror of ring.dropped
+        # Donation keyed off the stacked state's actual placement (never
+        # jax.default_backend()); a no-op on CPU-resident pools.
+        self._donate = state_mod.donation_ok(self._states)
+
+        # -- per-bucket runtime: ring pair + K-round / 1-round executors ----
+        self._rings: dict[int, state_mod.RingState] = {}    # live ring
+        self._spare: dict[int, Optional[state_mod.RingState]] = {}
+        self._exec: dict[int, object] = {}      # K-block executor
+        self._exec1: dict[int, object] = {}     # 1-round fast path (K > 1)
+        self._ring_count: dict[int, int] = {}   # live-ring occupancy mirror
+        self._dropped_dev: dict[int, int] = {}  # drops confirmed by fetches
+        self._dropped_pred: dict[int, int] = {} # predicted, not yet fetched
+        self._sealed_rounds: dict[int, int] = {}  # handed to reader, undrained
+        self._inflight: dict[int, int] = {}       # sealed rings being fetched
         for b in buckets:
-            ring = state_mod.ring_init(ring_rounds, self._phys, b)
-            if self._mesh is not None:
-                ring = sharding_mod.lane_put(self._mesh, ring, 1)
-            self._rings[b] = ring
+            self._rings[b] = self._make_ring(b)
+            self._spare[b] = (
+                self._make_ring(b) if drain_mode == "async" else None
+            )
             self._exec[b] = self._build_executor(b)
+            if ring_rounds > 1:
+                self._exec1[b] = self._build_single_executor(b)
             self._ring_count[b] = 0
-            self._ring_dropped[b] = 0
+            self._dropped_dev[b] = 0
+            self._dropped_pred[b] = 0
+            self._sealed_rounds[b] = 0
+            self._inflight[b] = 0
 
         self._host_fetches = 0     # blocking result transfers (ring drains)
         self._rounds_executed = 0
+        self._pump_drain_wait = 0.0  # s the pump spent on drains/seals
+        self._pump_forced_drains = 0  # mid-pump makes-room events
+        # One pump at a time: _seal_ring can wait on the cv (releasing the
+        # lock) AFTER chunks were popped into a pending block, so a second
+        # concurrent pump could otherwise collect and execute LATER chunks
+        # first — folding a lane's stream out of order.  The token
+        # serializes whole pump passes; poll/feed/stats still interleave.
+        self._pump_busy = False
+
+        # -- async drain: dedicated reader thread + sealed-ring queue -------
+        self._reader_exc: Optional[BaseException] = None
+        self._sealed_q: Optional[queue.Queue] = None
+        self._reader: Optional[threading.Thread] = None
+        if drain_mode == "async":
+            self._sealed_q = queue.Queue()
+            self._reader = threading.Thread(
+                target=self._reader_loop, daemon=True,
+                name="DetectorPool-reader",
+            )
+            self._reader.start()
 
         def _reset(states, lane, fresh):
             return jax.tree.map(
@@ -219,7 +314,70 @@ class DetectorPool:
 
         self._vrebase = jax.jit(_rebase)
 
-    # -- executor -----------------------------------------------------------
+    # -- lifecycle ----------------------------------------------------------
+
+    def close(self) -> None:
+        """Stop the reader thread (async mode).  Rounds still sealed or
+        buffered on device are abandoned — ``flush`` the lanes first if
+        their results matter.  Idempotent; the pool rejects further use."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        if self._reader is not None:
+            self._sealed_q.put(_STOP)
+            self._reader.join(timeout=30)
+
+    def __enter__(self) -> "DetectorPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def __del__(self):  # best-effort: don't leak the reader thread
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("DetectorPool is closed")
+        if self._reader_exc is not None:
+            raise RuntimeError(
+                "DetectorPool reader thread failed; results since the last "
+                "successful drain are lost and the pool cannot continue"
+            ) from self._reader_exc
+
+    # -- executors ----------------------------------------------------------
+
+    def _ring_specs(self, bucket: int):
+        """(states_spec, ring_spec, out_shardings) for the sharded paths."""
+        from jax.sharding import NamedSharding
+
+        lane0 = sharding_mod.lane_spec(0)
+        lane1 = sharding_mod.lane_spec(1)
+        states_spec = jax.tree.map(lambda _: lane0, self._states)
+        ring_spec = state_mod.RingState(
+            scores=lane1, keep=lane1, n_kept=lane1, vdd_idx=lane1,
+            n_valid=lane1, mask=lane1, head=P(), count=P(), dropped=P(),
+        )
+        # Pin output shardings to the same spelling lane_put uses for the
+        # inputs: jit would otherwise canonicalize equivalent specs (e.g.
+        # P(None,'lanes') -> P('lanes') on a 1-wide mesh) and the changed
+        # cache key would recompile the second block.
+        out_shardings = (
+            jax.tree.map(
+                lambda a: NamedSharding(self._mesh, lane0), self._states
+            ),
+            jax.tree.map(
+                lambda a: NamedSharding(
+                    self._mesh, lane1 if a.ndim >= 2 else P()
+                ),
+                self._rings[bucket],
+            ),
+        )
+        return states_spec, ring_spec, out_shardings
 
     def _build_executor(self, bucket: int):
         """Jitted K-round block: ``lax.scan`` of (vmapped step + mask select
@@ -228,8 +386,11 @@ class DetectorPool:
         compiles exactly once per bucket (the compile-count witness).  When
         a mesh is configured, the whole block runs under ``shard_map`` with
         the lane axis split across devices (no collectives: the step has no
-        cross-lane term)."""
+        cross-lane term).  On accelerator-resident pools the stacked states
+        and the live ring are donated (in-place update; the sealed ring the
+        reader holds is a different buffer, so async drain stays safe)."""
         tcfg = pipeline_mod._trace_cfg(self._cfg, chunk=bucket)
+        donate = ("states", "ring") if self._donate else ()
 
         def block(states, ring, chunks, mask, n_valid, round_active):
             def body(carry, xs):
@@ -255,44 +416,88 @@ class DetectorPool:
             return states, ring
 
         if self._mesh is not None:
-            lane0 = sharding_mod.lane_spec(0)
+            states_spec, ring_spec, out_shardings = self._ring_specs(bucket)
             lane1 = sharding_mod.lane_spec(1)
-            states_spec = jax.tree.map(lambda _: lane0, self._states)
-            ring_spec = state_mod.RingState(
-                scores=lane1, keep=lane1, n_kept=lane1, vdd_idx=lane1,
-                n_valid=lane1, mask=lane1, head=P(), count=P(), dropped=P(),
-            )
-            chunks_spec = state_mod.ChunkInput(
-                xy=lane1, ts=lane1, valid=lane1,
-                ber=lane1, energy_coef=lane1, latency_coef=lane1,
-            )
             block = compat.shard_map(
                 block,
                 mesh=self._mesh,
-                in_specs=(states_spec, ring_spec, chunks_spec,
+                in_specs=(states_spec, ring_spec,
+                          jax.tree.map(lambda _: lane1,
+                                       self._chunk_spec_template()),
                           lane1, lane1, P()),
                 out_specs=(states_spec, ring_spec),
                 check_vma=False,
             )
-            # Pin output shardings to the same spelling lane_put uses for
-            # the inputs: jit would otherwise canonicalize equivalent specs
-            # (e.g. P(None,'lanes') -> P('lanes') on a 1-wide mesh) and the
-            # changed cache key would recompile the second block.
-            from jax.sharding import NamedSharding
+            return jax.jit(block, out_shardings=out_shardings,
+                           donate_argnames=donate)
+        return jax.jit(block, donate_argnames=donate)
 
-            out_shardings = (
-                jax.tree.map(
-                    lambda a: NamedSharding(self._mesh, lane0), self._states
-                ),
-                jax.tree.map(
-                    lambda a: NamedSharding(
-                        self._mesh, lane1 if a.ndim >= 2 else P()
-                    ),
-                    self._rings[bucket],
-                ),
+    def _build_single_executor(self, bucket: int):
+        """Jitted 1-round block: the H2D fast path for sparse arrivals.
+
+        Same math as one active row of the K-block (vmapped step + mask
+        select + ring push), but the input shapes drop the leading K axis —
+        a block with exactly one ready round uploads ``(phys, chunk)``
+        bytes instead of ``(K, phys, chunk)``, so a trickle of events no
+        longer pays K rounds of padding per dispatch.  The price is a
+        second executable per bucket (also compiled exactly once; see
+        ``compile_cache_sizes``)."""
+        tcfg = pipeline_mod._trace_cfg(self._cfg, chunk=bucket)
+        donate = ("states", "ring") if self._donate else ()
+
+        def single(states, ring, chunk, mask, n_valid):
+            new_states, outs = jax.vmap(
+                lambda s, c: state_mod.detector_step(tcfg, s, c)
+            )(states, chunk)
+            states = _mask_tree(mask, new_states, states)
+            ring = state_mod.ring_push(
+                ring, outs, mask, n_valid, jnp.bool_(True)
             )
-            return jax.jit(block, out_shardings=out_shardings)
-        return jax.jit(block)
+            return states, ring
+
+        if self._mesh is not None:
+            states_spec, ring_spec, out_shardings = self._ring_specs(bucket)
+            lane0 = sharding_mod.lane_spec(0)
+            single = compat.shard_map(
+                single,
+                mesh=self._mesh,
+                in_specs=(states_spec, ring_spec,
+                          jax.tree.map(lambda _: lane0,
+                                       self._chunk_spec_template()),
+                          lane0, lane0),
+                out_specs=(states_spec, ring_spec),
+                check_vma=False,
+            )
+            return jax.jit(single, out_shardings=out_shardings,
+                           donate_argnames=donate)
+        return jax.jit(single, donate_argnames=donate)
+
+    @staticmethod
+    def _chunk_spec_template():
+        """A ChunkInput-shaped tree to map PartitionSpecs over."""
+        return state_mod.ChunkInput(
+            xy=0, ts=0, valid=0, ber=0, energy_coef=0, latency_coef=0
+        )
+
+    def _make_ring(self, bucket: int) -> state_mod.RingState:
+        ring = state_mod.ring_init(self._ring_rounds, self._phys, bucket)
+        if self._mesh is not None:
+            ring = sharding_mod.lane_put(self._mesh, ring, 1)
+        return ring
+
+    def _reset_ring(self, ring: state_mod.RingState) -> state_mod.RingState:
+        """Mark a drained ring empty (count/dropped -> 0) without touching
+        its data buffers.  The zeroed scalars must match the old scalars'
+        commitment: sharded rings are committed NamedSharding arrays (a bare
+        jnp scalar would flip the executor's cache key and recompile),
+        unsharded rings are uncommitted (a device_put scalar would do the
+        same flip)."""
+        zero_c = jnp.int32(0)
+        zero_d = jnp.int32(0)
+        if self._mesh is not None:
+            zero_c = jax.device_put(zero_c, ring.count.sharding)
+            zero_d = jax.device_put(zero_d, ring.dropped.sharding)
+        return ring._replace(count=zero_c, dropped=zero_d)
 
     # -- membership ---------------------------------------------------------
 
@@ -305,40 +510,77 @@ class DetectorPool:
         bit-identically to ``run_pipeline`` at that bucket's chunk size.
         Default: the pool config's ``cfg.chunk``.
         """
-        want = self._cfg.chunk if chunk is None else int(chunk)
-        bucket = next((b for b in self._buckets if b >= want), None)
-        if bucket is None:
-            raise ValueError(
-                f"no chunk bucket fits {want} (buckets: {self._buckets})"
+        with self._lock:
+            self._check_open()
+            want = self._cfg.chunk if chunk is None else int(chunk)
+            bucket = next((b for b in self._buckets if b >= want), None)
+            if bucket is None:
+                raise ValueError(
+                    f"no chunk bucket fits {want} (buckets: {self._buckets})"
+                )
+            free = np.flatnonzero(~self._active[:self._capacity])
+            if not free.size:
+                raise RuntimeError(f"pool full ({self._capacity} sessions)")
+            lane = int(free[0])
+            fresh = state_mod.detector_init(
+                self._cfg, seed=self._seed + lane if seed is None else seed
             )
-        free = np.flatnonzero(~self._active[:self._capacity])
-        if not free.size:
-            raise RuntimeError(f"pool full ({self._capacity} sessions)")
-        lane = int(free[0])
-        fresh = state_mod.detector_init(
-            self._cfg, seed=self._seed + lane if seed is None else seed
-        )
-        self._states = self._place(
-            self._vreset(self._states, jnp.int32(lane), fresh)
-        )
-        self._active[lane] = True
-        self._lanes[lane] = _Lane(bucket)
-        return lane
+            self._states = self._place(
+                self._vreset(self._states, jnp.int32(lane), fresh)
+            )
+            self._active[lane] = True
+            self._lanes[lane] = _Lane(bucket)
+            return lane
 
     def disconnect(self, lane: int) -> dict:
         """Release a lane; returns its final accounting stats.  Undrained
-        ring slots referencing the lane are drained first, so the stats are
-        complete and a later session reusing the slot inherits nothing."""
-        self._check_lane(lane)
-        self._drain_ring(self._lanes[lane].bucket)
-        stats = self.stats(lane)
-        self._active[lane] = False
-        self._lanes[lane] = None
-        return stats
+        ring slots referencing the lane are drained first (waiting for the
+        reader in async mode), so the stats are complete and a later
+        session reusing the slot inherits nothing."""
+        with self._lock:
+            self._check_open()
+            self._check_lane(lane)
+            # take the pump token: a pump parked on the spare-ring wait
+            # still holds collected-but-unexecuted rounds for this lane —
+            # retiring it now would silently drop them
+            self._acquire_pump()
+            try:
+                self._drain_bucket(self._lanes[lane].bucket)
+                out, dev = self._lane_stats_locked(lane)
+                self._active[lane] = False
+                self._lanes[lane] = None
+            finally:
+                self._release_pump()
+        # device fetch after release (same discipline as stats())
+        return self._finish_stats(out, dev)
+
+    def warmup(self, xy: np.ndarray, ts_us: np.ndarray) -> None:
+        """Compile every executor shape for the default bucket outside any
+        timed region: a scratch lane pumps a multi-round block (the K-block
+        executor) and then a lone round (the 1-round fast path), then
+        disconnects.  Drivers and benches share this recipe so 'warm every
+        shape before timing' has one owner; with ``ring_rounds=1`` both
+        pumps take the one block executor.  Membership churn never
+        recompiles, so one warmup covers the pool's lifetime (per bucket:
+        re-call with ``connect(chunk=...)``-sized data if you time other
+        buckets)."""
+        lane = self.connect()
+        b = self._lanes[lane].bucket
+        xy = np.asarray(xy)
+        ts = np.asarray(ts_us)
+        self.feed(lane, xy[:3 * b], ts[:3 * b])
+        self.pump()
+        self.feed(lane, xy[:b], ts[:b])
+        self.pump()
+        self.disconnect(lane)
 
     @property
     def capacity(self) -> int:
         return self._capacity
+
+    @property
+    def drain_mode(self) -> str:
+        return self._drain_mode
 
     @property
     def active_lanes(self) -> list[int]:
@@ -350,7 +592,8 @@ class DetectorPool:
 
     @property
     def host_fetches(self) -> int:
-        """Blocking result transfers so far (one per ring drain)."""
+        """Blocking result transfers so far (one per ring drain; counted on
+        the reader thread in async mode)."""
         return self._host_fetches
 
     @property
@@ -358,78 +601,144 @@ class DetectorPool:
         return self._rounds_executed
 
     def compile_cache_size(self) -> int:
-        """Total executor executables across buckets (== buckets exercised
-        when nothing recompiled; membership churn must not grow it)."""
-        return sum(self.compile_cache_sizes().values())
+        """Total executor executables across buckets and shapes (grows only
+        when a new bucket or block shape is first exercised; membership
+        churn must not grow it)."""
+        return sum(n for d in self.compile_cache_sizes().values()
+                   for n in d.values())
 
     def compile_cache_sizes(self) -> dict:
-        """Per-bucket executor executable counts (each must stay <= 1)."""
-        return {b: fn._cache_size() for b, fn in self._exec.items()}
+        """Per-bucket executable counts, per block shape:
+        ``{bucket: {"block": n, "single": n}}``.  Each entry must stay <= 1
+        — occupancy and membership are data, so nothing recompiles; the
+        ``"single"`` entry (the 1-round H2D fast path, built when
+        ``ring_rounds > 1``) is simply absent until first used."""
+        out: dict = {}
+        for b in self._buckets:
+            d = {"block": self._exec[b]._cache_size()}
+            if b in self._exec1:
+                d["single"] = self._exec1[b]._cache_size()
+            out[b] = d
+        return out
+
+    def executors_compiled_once(self) -> bool:
+        """The churn witness: every executor (per bucket, per block shape)
+        has compiled at most one executable."""
+        return all(n <= 1 for d in self.compile_cache_sizes().values()
+                   for n in d.values())
 
     # -- feeding ------------------------------------------------------------
 
     def feed(self, lane: int, xy: np.ndarray, ts_us: np.ndarray) -> None:
         """Buffer a slab for one session (any length, time-sorted)."""
-        self._check_lane(lane)
-        ln = self._lanes[lane]
-        xy = np.asarray(xy, np.int32).reshape(-1, 2)
-        ts = np.asarray(ts_us, np.int64).reshape(-1)
-        if not ts.size:
-            return
-        if ln.base is None:
-            ln.base = streaming_mod.session_base_us(int(ts[0]), self._cfg)
-        ln.buf_xy = np.concatenate([ln.buf_xy, xy], 0)
-        ln.buf_ts = np.concatenate([ln.buf_ts, ts], 0)
-        ln.n_events += int(ts.size)
+        with self._lock:
+            self._check_open()
+            self._check_lane(lane)
+            ln = self._lanes[lane]
+            xy = np.asarray(xy, np.int32).reshape(-1, 2)
+            ts = np.asarray(ts_us, np.int64).reshape(-1)
+            if not ts.size:
+                return
+            if ln.base is None:
+                ln.base = streaming_mod.session_base_us(
+                    int(ts[0]), self._cfg
+                )
+            ln.buf_xy = np.concatenate([ln.buf_xy, xy], 0)
+            ln.buf_ts = np.concatenate([ln.buf_ts, ts], 0)
+            ln.n_events += int(ts.size)
 
     def pump(self) -> int:
         """Fold every buffered full chunk through the ring executors, K
         rounds per device dispatch, until no active lane has a full chunk
         left.  Returns the number of rounds executed.  Results stay in the
-        on-device rings until ``poll``/``flush`` (or a backpressure drain
-        under the ``"drain"`` policy) fetches them."""
+        on-device rings until ``poll``/``flush`` (or a backpressure
+        drain/seal under the ``"drain"`` policy) hands them to a fetch."""
         return self.pump_rounds(None)
 
     def pump_rounds(self, max_rounds: Optional[int] = None) -> int:
         """Like ``pump`` but stops after at most ``max_rounds`` rounds
         (``None`` = run until dry).  K-round blocks with one fetch per drain
-        are bit-exact vs the same rounds pumped one at a time."""
-        total = 0
-        for bucket in self._buckets:
-            left = None if max_rounds is None else max_rounds - total
-            if left is not None and left <= 0:
-                break
-            total += self._pump_bucket(bucket, max_rounds=left)
-        return total
+        are bit-exact vs the same rounds pumped one at a time.  Concurrent
+        pumpers serialize on the pump token (round order must match the
+        sequential path even while a seal waits on the spare ring)."""
+        with self._lock:
+            self._check_open()
+            self._acquire_pump()
+            try:
+                total = 0
+                for bucket in self._buckets:
+                    left = None if max_rounds is None else max_rounds - total
+                    if left is not None and left <= 0:
+                        break
+                    total += self._pump_bucket(bucket, max_rounds=left)
+                return total
+            finally:
+                self._release_pump()
 
     def flush(self, lane: int) -> tuple[np.ndarray, np.ndarray]:
         """Drain the lane's full chunks, then its padded partial tail, and
         return everything not yet polled.  A lane with an empty re-chunk
         buffer just drains its ring (no extra round is scheduled)."""
-        self._check_lane(lane)
-        self.pump()
-        ln = self._lanes[lane]
-        if ln.buf_ts.size:
-            self._pump_bucket(ln.bucket, max_rounds=1, flush_lane=lane)
-        return self.poll(lane)
+        with self._lock:
+            self._check_open()
+            self._check_lane(lane)
+            self._acquire_pump()
+            try:
+                for bucket in self._buckets:
+                    self._pump_bucket(bucket)          # until dry
+                ln = self._lanes[lane]
+                if ln.buf_ts.size:
+                    self._pump_bucket(ln.bucket, max_rounds=1,
+                                      flush_lane=lane)
+            finally:
+                self._release_pump()
+            return self.poll(lane)
 
-    def poll(self, lane: int) -> tuple[np.ndarray, np.ndarray]:
+    def _acquire_pump(self) -> None:
+        """Take the pump token (caller holds the lock); waits out any pump
+        in flight so two pumpers cannot interleave their round order."""
+        while self._pump_busy:
+            self._check_open()
+            self._cv.wait()
+        self._pump_busy = True
+
+    def _release_pump(self) -> None:
+        self._pump_busy = False
+        self._cv.notify_all()
+
+    def poll(self, lane: int, *,
+             wait: bool = True) -> tuple[np.ndarray, np.ndarray]:
         """Drain the lane's accumulated (scores, kept), in stream order.
 
-        This is the readout (and backpressure) point: it drains the lane's
-        bucket ring — ONE blocking fetch for everything buffered since the
-        last drain, however many pump rounds that spans.  Under
-        ``on_overflow="drop_oldest"``, rounds lost to overflow are simply
-        absent here and counted in ``stats()['ring_dropped_rounds']``."""
-        self._check_lane(lane)
-        self._drain_ring(self._lanes[lane].bucket)
-        ln = self._lanes[lane]
-        if not ln.results:
-            return (np.zeros((0,), np.float32), np.zeros((0,), bool))
-        scores = np.concatenate([r[0] for r in ln.results]).astype(np.float32)
-        kept = np.concatenate([r[1] for r in ln.results]).astype(bool)
-        ln.results.clear()
-        return scores, kept
+        This is the readout (and backpressure) point.  In ``"sync"`` mode
+        it fetches the lane's bucket ring inline — ONE blocking transfer
+        for everything buffered since the last drain, however many pump
+        rounds that spans.  In ``"async"`` mode it *seals* the live ring
+        (atomic swap with the empty spare; the reader thread performs the
+        fetch) and, with ``wait=True`` (default), blocks until the reader
+        has drained it — same results as sync, fetched off this thread.
+        ``wait=False`` never blocks on a transfer in either mode: async
+        seals only when the spare ring is free (never joining an in-flight
+        fetch) and returns what the reader has already drained; sync skips
+        the inline fetch entirely and returns what earlier drains (e.g.
+        backpressure pre-drains) already distributed.  The rest arrives on
+        a later poll.  Under ``on_overflow="drop_oldest"``, rounds lost to
+        overflow are simply absent here and counted in
+        ``stats()['ring_dropped_rounds']``."""
+        with self._lock:
+            self._check_open()
+            self._check_lane(lane)
+            bucket = self._lanes[lane].bucket
+            self._drain_bucket(bucket, wait=wait, block=wait)
+            ln = self._lanes[lane]
+            if not ln.results:
+                return (np.zeros((0,), np.float32), np.zeros((0,), bool))
+            scores = np.concatenate(
+                [r[0] for r in ln.results]
+            ).astype(np.float32)
+            kept = np.concatenate([r[1] for r in ln.results]).astype(bool)
+            ln.results.clear()
+            return scores, kept
 
     def stats(self, lane: int) -> dict:
         """Lane accounting: host float64 books plus the lane's on-device
@@ -437,20 +746,40 @@ class DetectorPool:
         plus ring/bucket occupancy so callers can observe backpressure.
 
         Host books (``kept_total``/``energy_pj``/...) cover *drained*
-        rounds only; ``ring_rounds_buffered`` says how many rounds still sit
-        on device.  The ``device_*`` accumulators are always complete —
-        including rounds dropped under ``drop_oldest``."""
-        self._check_lane(lane)
+        rounds only.  ``ring_rounds_buffered`` says how many rounds sit in
+        the live on-device ring; ``ring_sealed_rounds`` how many are sealed
+        and in the reader's hands but not yet drained (async mode — the
+        reader lag for this bucket; always 0 in sync mode).
+        ``ring_dropped_rounds`` is drops confirmed by fetches plus drops
+        predicted for rounds still on device (the host mirror is audited
+        against the device counter at every fetch).  The ``device_*``
+        accumulators are always complete — including rounds dropped under
+        ``drop_oldest``."""
+        with self._lock:
+            self._check_open()
+            self._check_lane(lane)
+            out, dev = self._lane_stats_locked(lane)
+        return self._finish_stats(out, dev)
+
+    def _lane_stats_locked(self, lane: int):
+        """Host-side stats dict + *pre-indexed* device scalars (caller
+        holds the lock).  Indexing only dispatches; the blocking
+        ``device_get`` belongs in ``_finish_stats``, AFTER the lock is
+        released — the lock discipline keeps blocking transfers off the
+        pool lock, so a monitoring thread syncing on a deep pump queue
+        cannot stall the pump, the reader, or other callers (``stats`` and
+        ``disconnect`` both follow this split)."""
         ln = self._lanes[lane]
         n_scored = max(ln.kept_total, 1)
-        dev_kept, dev_energy, dev_latency = jax.device_get((
+        dev = (
             self._states.kept_total[lane],
             self._states.energy_pj[lane],
             self._states.latency_ns[lane],
-        ))
-        return {
+        )
+        b = ln.bucket
+        out = {
             "lane": lane,
-            "bucket": ln.bucket,
+            "bucket": b,
             "n_events": ln.n_events,
             "n_chunks": ln.n_chunks,
             "kept_total": ln.kept_total,
@@ -458,36 +787,73 @@ class DetectorPool:
             "latency_ns_per_event": ln.latency_ns / n_scored,
             "buffered": int(ln.buf_ts.size),
             "ring_capacity": self._ring_rounds,
-            "ring_rounds_buffered": self._ring_count[ln.bucket],
-            "ring_dropped_rounds": self._ring_dropped[ln.bucket],
-            "device_kept_total": int(dev_kept),
-            "device_energy_pj": float(dev_energy),
-            "device_latency_ns": float(dev_latency),
+            "ring_rounds_buffered": self._ring_count[b],
+            "ring_sealed_rounds": self._sealed_rounds[b],
+            "ring_dropped_rounds": (
+                self._dropped_dev[b] + self._dropped_pred[b]
+            ),
         }
+        return out, dev
+
+    @staticmethod
+    def _finish_stats(out: dict, dev) -> dict:
+        dev_kept, dev_energy, dev_latency = jax.device_get(dev)
+        out["device_kept_total"] = int(dev_kept)
+        out["device_energy_pj"] = float(dev_energy)
+        out["device_latency_ns"] = float(dev_latency)
+        return out
 
     def pool_stats(self) -> dict:
         """Pool-level runtime counters (no device sync): fetch/round ratio,
-        per-bucket ring occupancy and drop counts, sharding layout."""
-        return {
-            "capacity": self._capacity,
-            "active": len(self.active_lanes),
-            "sharded": self._mesh is not None,
-            "devices": (int(self._mesh.devices.size)
-                        if self._mesh is not None else 1),
-            "ring_rounds": self._ring_rounds,
-            "on_overflow": self._overflow,
-            "host_fetches": self._host_fetches,
-            "rounds_executed": self._rounds_executed,
-            "dropped_rounds_total": sum(self._ring_dropped.values()),
-            "buckets": {
-                b: {
-                    "ring_rounds_buffered": self._ring_count[b],
-                    "ring_dropped_rounds": self._ring_dropped[b],
-                    "executables": self._exec[b]._cache_size(),
-                }
-                for b in self._buckets
-            },
-        }
+        per-bucket ring occupancy and drop counts, reader lag, pump drain
+        wait, sharding layout.
+
+        ``pump_drain_wait_s`` is the wall time the *pump* path spent making
+        ring room before a block (sync: the inline fetch+distribute; async:
+        the seal — usually just an enqueue, plus any wait for the spare
+        ring).  ``reader_lag_rounds`` counts rounds sealed to the reader
+        thread but not yet drained; ``dropped_rounds_confirmed`` is the
+        device-counter ground truth accumulated over fetches (equals
+        ``dropped_rounds_total`` once everything has been drained — the
+        host-mirror audit).  ``pump_forced_drains`` counts mid-pump
+        makes-room events (ring occupancy forced a drain/seal before a
+        block) — the reliable backpressure signal; in async mode
+        ``host_fetches`` deltas are NOT, since fetches are counted when the
+        reader completes them, not when the pump seals."""
+        with self._lock:
+            self._check_open()
+            exe = self.compile_cache_sizes()
+            return {
+                "capacity": self._capacity,
+                "active": len(self.active_lanes),
+                "sharded": self._mesh is not None,
+                "devices": (int(self._mesh.devices.size)
+                            if self._mesh is not None else 1),
+                "ring_rounds": self._ring_rounds,
+                "on_overflow": self._overflow,
+                "drain_mode": self._drain_mode,
+                "host_fetches": self._host_fetches,
+                "rounds_executed": self._rounds_executed,
+                "pump_drain_wait_s": self._pump_drain_wait,
+                "pump_forced_drains": self._pump_forced_drains,
+                "reader_lag_rounds": sum(self._sealed_rounds.values()),
+                "dropped_rounds_total": (
+                    sum(self._dropped_dev.values())
+                    + sum(self._dropped_pred.values())
+                ),
+                "dropped_rounds_confirmed": sum(self._dropped_dev.values()),
+                "buckets": {
+                    b: {
+                        "ring_rounds_buffered": self._ring_count[b],
+                        "ring_sealed_rounds": self._sealed_rounds[b],
+                        "ring_dropped_rounds": (
+                            self._dropped_dev[b] + self._dropped_pred[b]
+                        ),
+                        "executables": exe[b],
+                    }
+                    for b in self._buckets
+                },
+            }
 
     # -- internals ----------------------------------------------------------
 
@@ -591,61 +957,182 @@ class DetectorPool:
         return _Round(xy, ts, valid, mask, n_valid)
 
     def _execute_block(self, bucket: int, rounds: list) -> None:
-        """Launch one K-round executor block (shapes are always (K, ...):
-        occupancy is data, so this never recompiles).
-
-        The fixed shape means a block with 1 ready round still uploads
-        (K, phys, chunk) inputs — the padding's compute is skipped by the
-        round-level cond, but its H2D bytes are not.  That is the price of
-        the one-executable-per-bucket witness; latency-sensitive sparse
-        arrivals should size ``ring_rounds`` to their typical burst (see
-        ROADMAP: preallocated pinned input buffers would remove the cost).
-        """
+        """Launch one executor block.  Shapes never depend on occupancy:
+        a block with 2..K ready rounds runs the fixed (K, ...) executor
+        (padding skipped by the round-level cond); a block with exactly ONE
+        round runs the 1-round executor, whose inputs drop the K axis — so
+        sparse arrivals upload (phys, chunk) H2D bytes, not (K, phys,
+        chunk).  Under the ``"drain"`` policy a block that would overflow
+        the live ring first drains it (sync: inline fetch; async: seal to
+        the reader and keep pumping — the wait, if any, is for the spare
+        ring, not for PCIe)."""
         k = self._ring_rounds
         n = len(rounds)
         if self._overflow == "drain" and self._ring_count[bucket] + n > k:
-            self._drain_ring(bucket)
+            t0 = time.perf_counter()
+            self._drain_bucket(bucket, wait=False)
+            self._pump_drain_wait += time.perf_counter() - t0
+            self._pump_forced_drains += 1
 
-        xy = np.zeros((k, self._phys, bucket, 2), np.int32)
-        ts = np.zeros((k, self._phys, bucket), np.int32)
-        valid = np.zeros((k, self._phys, bucket), bool)
-        mask = np.zeros((k, self._phys), bool)
-        n_valid = np.zeros((k, self._phys), np.int32)
-        for i, rnd in enumerate(rounds):
-            xy[i], ts[i], valid[i] = rnd.xy, rnd.ts, rnd.valid
-            mask[i], n_valid[i] = rnd.mask, rnd.n_valid
-        round_active = np.arange(k) < n
+        if n == 1 and bucket in self._exec1:
+            rnd = rounds[0]
+            chunks = state_mod.ChunkInput(
+                xy=jnp.asarray(rnd.xy),
+                ts=jnp.asarray(rnd.ts),
+                valid=jnp.asarray(rnd.valid),
+                ber=jnp.full((self._phys,), self._riders[0], jnp.float32),
+                energy_coef=jnp.full(
+                    (self._phys,), self._riders[1], jnp.float32
+                ),
+                latency_coef=jnp.full(
+                    (self._phys,), self._riders[2], jnp.float32
+                ),
+            )
+            self._states, self._rings[bucket] = self._exec1[bucket](
+                self._states, self._rings[bucket], chunks,
+                jnp.asarray(rnd.mask), jnp.asarray(rnd.n_valid),
+            )
+        else:
+            xy = np.zeros((k, self._phys, bucket, 2), np.int32)
+            ts = np.zeros((k, self._phys, bucket), np.int32)
+            valid = np.zeros((k, self._phys, bucket), bool)
+            mask = np.zeros((k, self._phys), bool)
+            n_valid = np.zeros((k, self._phys), np.int32)
+            for i, rnd in enumerate(rounds):
+                xy[i], ts[i], valid[i] = rnd.xy, rnd.ts, rnd.valid
+                mask[i], n_valid[i] = rnd.mask, rnd.n_valid
+            round_active = np.arange(k) < n
 
-        chunks = state_mod.ChunkInput(
-            xy=jnp.asarray(xy),
-            ts=jnp.asarray(ts),
-            valid=jnp.asarray(valid),
-            ber=jnp.full((k, self._phys), self._riders[0], jnp.float32),
-            energy_coef=jnp.full(
-                (k, self._phys), self._riders[1], jnp.float32
-            ),
-            latency_coef=jnp.full(
-                (k, self._phys), self._riders[2], jnp.float32
-            ),
-        )
-        self._states, self._rings[bucket] = self._exec[bucket](
-            self._states, self._rings[bucket], chunks,
-            jnp.asarray(mask), jnp.asarray(n_valid),
-            jnp.asarray(round_active),
-        )
+            chunks = state_mod.ChunkInput(
+                xy=jnp.asarray(xy),
+                ts=jnp.asarray(ts),
+                valid=jnp.asarray(valid),
+                ber=jnp.full((k, self._phys), self._riders[0], jnp.float32),
+                energy_coef=jnp.full(
+                    (k, self._phys), self._riders[1], jnp.float32
+                ),
+                latency_coef=jnp.full(
+                    (k, self._phys), self._riders[2], jnp.float32
+                ),
+            )
+            self._states, self._rings[bucket] = self._exec[bucket](
+                self._states, self._rings[bucket], chunks,
+                jnp.asarray(mask), jnp.asarray(n_valid),
+                jnp.asarray(round_active),
+            )
         c = self._ring_count[bucket]
-        self._ring_count[bucket] = min(c + n, self._ring_rounds)
-        self._ring_dropped[bucket] += max(0, c + n - self._ring_rounds)
+        self._ring_count[bucket] = min(c + n, k)
+        self._dropped_pred[bucket] += max(0, c + n - k)
         self._rounds_executed += n
 
+    # -- draining: sync (inline fetch) and async (seal to the reader) -------
+
+    def _drain_bucket(self, bucket: int, *, wait: bool = True,
+                      block: bool = True) -> None:
+        """Get this bucket's buffered rounds on their way to the host.  In
+        sync mode that is the inline blocking fetch; in async mode it seals
+        the live ring to the reader and, with ``wait=True``, blocks until
+        the reader has drained everything sealed for this bucket.
+        ``block=False`` is the non-blocking poll path: sync skips the
+        inline fetch entirely, async skips the seal when the spare ring is
+        unavailable."""
+        if self._drain_mode == "sync":
+            if block:
+                self._drain_ring(bucket)
+        else:
+            self._seal_ring(bucket, block=block)
+            if wait:
+                self._wait_bucket_drained(bucket)
+
     def _drain_ring(self, bucket: int) -> None:
-        """ONE blocking fetch: pull every undrained ring slot to the host,
-        distribute per-lane results (oldest round first) and fold the
-        float64 accounting — then mark the device ring empty."""
+        """Sync mode: ONE blocking fetch of the live ring on the calling
+        thread, then distribute and mark the ring empty."""
         if self._ring_count[bucket] == 0:
             return
         ring = jax.device_get(self._rings[bucket])
         self._host_fetches += 1
+        self._distribute(bucket, ring)
+        self._ring_count[bucket] = 0
+        self._rings[bucket] = self._reset_ring(self._rings[bucket])
+
+    def _seal_ring(self, bucket: int, *, block: bool = True) -> None:
+        """Async mode's atomic swap point (caller holds the lock): install
+        the empty spare as the live ring and hand the sealed one to the
+        reader thread.  If the spare is still in the reader's hands (it is
+        double, not N, buffered) this waits on the condition variable —
+        releasing the lock so the reader can distribute and recycle — or,
+        with ``block=False``, simply returns (the live ring keeps
+        accumulating; a later poll seals it)."""
+        if self._ring_count[bucket] == 0:
+            return
+        while self._spare[bucket] is None:
+            if not block:
+                return
+            self._check_open()
+            self._cv.wait()
+            # re-validate after the wakeup: another thread (a concurrent
+            # poll, or the pump making room) may have sealed meanwhile —
+            # sealing an empty ring would cost a pointless blocking fetch
+            # and inflate the rounds-per-fetch witness
+            if self._ring_count[bucket] == 0:
+                return
+        sealed = self._rings[bucket]
+        self._rings[bucket] = self._spare[bucket]
+        self._spare[bucket] = None
+        self._sealed_rounds[bucket] += self._ring_count[bucket]
+        self._inflight[bucket] += 1
+        self._ring_count[bucket] = 0
+        self._sealed_q.put((bucket, sealed))
+
+    def _wait_bucket_drained(self, bucket: int) -> None:
+        """Block (releasing the lock) until the reader has fetched and
+        distributed every ring sealed for this bucket."""
+        while self._inflight[bucket] > 0:
+            self._check_open()
+            self._cv.wait()
+
+    def _fetch_ring(self, ring: state_mod.RingState):
+        """The blocking device transfer (reader thread, no lock held).
+        Split out so tests can inject fetch failures."""
+        return jax.device_get(ring)
+
+    def _reader_loop(self) -> None:
+        """Async drain: fetch sealed rings FIFO (order preserves the
+        sequential result order bit-for-bit), distribute under the lock,
+        recycle the buffer as the bucket's spare.  Any exception is stored
+        and re-raised to the next public API caller."""
+        while True:
+            item = self._sealed_q.get()
+            if item is _STOP:
+                return
+            bucket, sealed = item
+            try:
+                host = self._fetch_ring(sealed)
+            except BaseException as e:
+                with self._cv:
+                    self._reader_exc = e
+                    self._cv.notify_all()
+                return
+            with self._cv:
+                try:
+                    self._host_fetches += 1
+                    self._distribute(bucket, host)
+                    self._spare[bucket] = self._reset_ring(sealed)
+                    self._sealed_rounds[bucket] = max(
+                        0, self._sealed_rounds[bucket] - int(host.count)
+                    )
+                    self._inflight[bucket] -= 1
+                except BaseException as e:
+                    self._reader_exc = e
+                    self._cv.notify_all()
+                    return
+                self._cv.notify_all()
+
+    def _distribute(self, bucket: int, ring) -> None:
+        """Walk a fetched ring's undrained slots (oldest first), hand each
+        lane its results, fold the float64 accounting, and audit the drop
+        mirror against the device counter (caller holds the lock; ``ring``
+        is host data)."""
         n_slots = ring.scores.shape[0]
         for slot in state_mod.ring_slot_order(ring.head, ring.count, n_slots):
             for lane in np.flatnonzero(ring.mask[slot]):
@@ -665,14 +1152,10 @@ class DetectorPool:
                                                        copy=True),
                     ring.keep[slot, lane, :n].astype(bool, copy=True),
                 ))
-        # Device counters are ground truth; resync the host mirrors.  The
-        # zeroed count must match the old scalar's commitment: sharded rings
-        # are committed NamedSharding arrays (a bare jnp scalar would flip
-        # the executor's cache key and recompile), unsharded rings are
-        # uncommitted (a device_put scalar would do the same flip).
-        self._ring_dropped[bucket] = int(ring.dropped)
-        self._ring_count[bucket] = 0
-        zero = jnp.int32(0)
-        if self._mesh is not None:
-            zero = jax.device_put(zero, self._rings[bucket].count.sharding)
-        self._rings[bucket] = self._rings[bucket]._replace(count=zero)
+        # The device counter is ground truth: drops confirmed by this fetch
+        # move from the predicted mirror to the confirmed tally.  (Each ring
+        # resets its dropped counter when recycled, so per-fetch counts are
+        # disjoint and the two host tallies always sum to the truth.)
+        d = int(ring.dropped)
+        self._dropped_dev[bucket] += d
+        self._dropped_pred[bucket] -= d

@@ -63,14 +63,23 @@ def _check_streamable(cfg) -> None:
 
 
 @functools.lru_cache(maxsize=None)
-def _step_fn(cfg):
-    """One jitted detector_step, shared by every session with this config."""
-    donate = ("state",) if jax.default_backend() != "cpu" else ()
+def _step_fn(cfg, donate: bool = False):
+    """One jitted detector_step, shared by every session with this config
+    and donation decision.
+
+    ``donate`` hands the carried state's buffers to XLA for an in-place
+    accelerator update.  It is keyed off the placement of the session's
+    actual state (``state_mod.donation_ok``), NOT ``jax.default_backend()``:
+    a session explicitly placed on CPU under a GPU default backend must not
+    donate host buffers, and a session placed on an accelerator under a CPU
+    default backend still should.
+    """
+    donate_args = ("state",) if donate else ()
 
     def run(state, chunk):
         return state_mod.detector_step(cfg, state, chunk)
 
-    return jax.jit(run, donate_argnames=donate)
+    return jax.jit(run, donate_argnames=donate_args)
 
 
 def shift_state_base(state: state_mod.DetectorState, delta_us,
@@ -185,8 +194,8 @@ class StreamingDetector:
             cfg = dataclasses.replace(cfg, chunk=int(chunk))
         self._cfg = cfg
         self._tcfg = pipeline_mod._trace_cfg(cfg)
-        self._step = _step_fn(self._tcfg)
         self._state = state_mod.detector_init(cfg, seed=seed)
+        self._refresh_step()
         self._buf_xy = np.zeros((0, 2), np.int32)
         self._buf_ts = np.zeros((0,), np.int64)
         self._base: Optional[int] = None if base_ts is None else int(base_ts)
@@ -259,6 +268,16 @@ class StreamingDetector:
 
     # -- internals ----------------------------------------------------------
 
+    def _refresh_step(self) -> None:
+        """(Re)bind the jitted step to the *current* state's placement.
+
+        Donation is a property of where the state lives, so any rebinding of
+        ``self._state`` to differently-placed buffers (construction,
+        ``restore``) must re-derive it — never ``jax.default_backend()``.
+        """
+        self._donate = state_mod.donation_ok(self._state)
+        self._step = _step_fn(self._tcfg, self._donate)
+
     def _maybe_rebase(self, chunk_ts: np.ndarray) -> None:
         """Re-base before folding a chunk whose relative clock ran long
         (explicit carry on the SAE and the rate estimator's window cursor).
@@ -321,10 +340,20 @@ class StreamingDetector:
     # -- checkpointing ------------------------------------------------------
 
     def snapshot(self) -> dict:
-        """Host checkpoint of the whole session (state+buffer+accounting)."""
+        """Host checkpoint of the whole session (state+buffer+accounting).
+
+        The state leaves are *owned deep copies* (``np.array`` after the
+        fetch): on the CPU backend ``device_get`` can return zero-copy views
+        of the live device buffers, so a snapshot that merely held those
+        views would be corrupted the moment a later ``feed`` donated the
+        state it aliases.  Copying at snapshot time makes the checkpoint
+        donation-proof however the session is stepped afterwards.
+        """
         return {
             "cfg": self._cfg,
-            "state": jax.device_get(self._state),
+            "state": jax.tree.map(
+                lambda a: np.array(a), jax.device_get(self._state)
+            ),
             "buf_xy": self._buf_xy.copy(),
             "buf_ts": self._buf_ts.copy(),
             "base": self._base,
@@ -341,7 +370,15 @@ class StreamingDetector:
     @classmethod
     def restore(cls, snap: dict) -> "StreamingDetector":
         det = cls(snap["cfg"], base_ts=snap["base"])
-        det._state = jax.tree.map(jnp.asarray, snap["state"])
+        # device_put an owned copy (on CPU, device_put of a host array is
+        # zero-copy — the restored state must own its memory so a donating
+        # step cannot reach back into the checkpoint, and restoring the
+        # same snapshot twice cannot couple the two sessions), then re-key
+        # the step's donation off where the restored state actually landed.
+        det._state = jax.device_put(
+            jax.tree.map(np.array, snap["state"])
+        )
+        det._refresh_step()
         det._buf_xy = np.asarray(snap["buf_xy"], np.int32).copy()
         det._buf_ts = np.asarray(snap["buf_ts"], np.int64).copy()
         det._base = snap["base"]

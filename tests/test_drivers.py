@@ -72,3 +72,53 @@ def test_restore_across_mesh_change(tmp_path):
         jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec("data", None)),
     )
     np.testing.assert_array_equal(np.asarray(sharded), np.asarray(tree["w"]))
+
+
+def test_bench_regression_gate(tmp_path):
+    """The perf gate trips on structural regressions, fails closed on
+    missing gated rows and empty baselines, and skips wall-time rows when
+    the smoke flags differ (incomparable sizes)."""
+    import json
+
+    from benchmarks.run import check_regression
+
+    def row(v):
+        return {"derived": v, "us_per_call": 0.0, "module": "m"}
+
+    def baseline(rows, smoke=True):
+        p = tmp_path / "base.json"
+        p.write_text(json.dumps({"smoke": smoke, "rows": rows}))
+        return str(p)
+
+    base = {
+        "a_burst_rounds_per_fetch": row(6.0),     # higher is better
+        "b_fetches_per_round": row(0.5),          # lower is better
+        "c_slab_p99_ms": row(10.0),               # wall time
+        "unrelated_row": row(1.0),                # never gated
+    }
+    ok = {
+        "a_burst_rounds_per_fetch": row(6.0),
+        "b_fetches_per_round": row(0.5),
+        "c_slab_p99_ms": row(11.0),
+        "unrelated_row": row(99.0),
+    }
+    kw = dict(smoke=True, tol=0.35, tol_time=3.0)
+    assert check_regression(ok, baseline(base), **kw) == 0
+    # structural regression: rounds-per-fetch collapsed
+    bad = dict(ok, a_burst_rounds_per_fetch=row(1.0))
+    assert check_regression(bad, baseline(base), **kw) == 1
+    # fetches-per-round ballooned
+    bad = dict(ok, b_fetches_per_round=row(1.0))
+    assert check_regression(bad, baseline(base), **kw) == 1
+    # wall-time blowup beyond tol_time
+    bad = dict(ok, c_slab_p99_ms=row(100.0))
+    assert check_regression(bad, baseline(base), **kw) == 1
+    # ... but wall time is skipped when smoke flags differ
+    assert check_regression(bad, baseline(base, smoke=False), **kw) == 0
+    # fail closed: a gated baseline row vanished from the run
+    missing = {k: v for k, v in ok.items()
+               if k != "a_burst_rounds_per_fetch"}
+    assert check_regression(missing, baseline(base), **kw) == 1
+    # fail closed: baseline with no gated rows checks nothing
+    assert check_regression(ok, baseline({"unrelated_row": row(1.0)}),
+                            **kw) == 1

@@ -1,0 +1,283 @@
+"""Async double-buffered drain runtime: reader thread, thread safety,
+non-blocking readout, failure propagation, lifecycle.
+
+Contracts (ISSUE 4):
+
+  * ``DetectorPool``'s public API (``connect``/``disconnect``/``feed``/
+    ``poll``/``pump``/``stats``) is safe under concurrent callers: one lock
+    guards all mutable pool state, the reader thread only takes it to
+    distribute/recycle, and a feed-while-poll stress run stays bit-exact.
+  * Reader-thread exceptions propagate to the next public API caller (the
+    ``PrefetchingLoader`` contract) and the pool stays failed afterwards.
+  * ``poll(lane, wait=False)`` never blocks on the fetch: it returns what
+    the reader has already drained; repeated polls converge to the full
+    result set.
+  * ``stats()``/``pool_stats()`` expose the async runtime: sealed-ring
+    occupancy (reader lag) and the pump's cumulative drain wait.
+  * ``close()`` stops the reader; a closed pool rejects further use.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import pipeline
+from repro.events import synthetic
+from repro.serve import DetectorPool
+
+CFG = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+
+
+@pytest.fixture(scope="module")
+def stream():
+    st = synthetic.shapes_stream(duration_us=40_000, seed=0)
+    return st.xy[:2000], st.ts[:2000]
+
+
+@pytest.fixture(scope="module")
+def ref(stream):
+    return pipeline.run_pipeline(*stream, CFG)
+
+
+def test_concurrent_feed_while_poll_bitexact(stream, ref):
+    """A producer thread feeding+pumping while a consumer thread polls
+    (non-blocking) must neither crash nor reorder: the concatenated
+    readout equals run_pipeline on the whole stream."""
+    xy, ts = stream
+    pool = DetectorPool(CFG, capacity=1, ring_rounds=4, drain_mode="async")
+    lane = pool.connect(seed=CFG.seed)
+    errs: list = []
+    collected: list = []
+    stop = threading.Event()
+
+    def poller():
+        try:
+            while not stop.is_set():
+                s, k = pool.poll(lane, wait=False)
+                if s.size:
+                    collected.append((s, k))
+                time.sleep(0.0005)
+        except Exception as e:  # pragma: no cover - failure path
+            errs.append(e)
+
+    t = threading.Thread(target=poller)
+    t.start()
+    try:
+        for i in range(0, len(ts), 200):
+            pool.feed(lane, xy[i:i + 200], ts[i:i + 200])
+            pool.pump()
+    finally:
+        stop.set()
+        t.join(timeout=30)
+    assert not t.is_alive()
+    assert not errs, errs
+    s, k = pool.flush(lane)                  # barrier: the remainder
+    if s.size:
+        collected.append((s, k))
+    scores = np.concatenate([c[0] for c in collected])
+    kept = np.concatenate([c[1] for c in collected])
+    np.testing.assert_array_equal(scores, ref.scores)
+    np.testing.assert_array_equal(kept, ref.kept)
+    st = pool.stats(lane)
+    assert st["energy_pj"] == ref.energy_pj  # books intact under threads
+    pool.close()
+
+
+def test_concurrent_stats_and_pool_stats(stream):
+    """stats()/pool_stats() from a second thread during pumping: no tearing
+    of host mirrors, no exceptions."""
+    xy, ts = stream
+    pool = DetectorPool(CFG, capacity=1, ring_rounds=2, drain_mode="async")
+    lane = pool.connect(seed=CFG.seed)
+    errs: list = []
+    stop = threading.Event()
+
+    def watcher():
+        try:
+            while not stop.is_set():
+                s = pool.stats(lane)
+                assert s["ring_rounds_buffered"] >= 0
+                ps = pool.pool_stats()
+                assert ps["reader_lag_rounds"] >= 0
+        except Exception as e:  # pragma: no cover - failure path
+            errs.append(e)
+
+    t = threading.Thread(target=watcher)
+    t.start()
+    try:
+        for i in range(0, len(ts), 300):
+            pool.feed(lane, xy[i:i + 300], ts[i:i + 300])
+            pool.pump()
+            pool.poll(lane)
+    finally:
+        stop.set()
+        t.join(timeout=30)
+    assert not errs, errs
+    pool.close()
+
+
+def test_poll_nowait_is_nonblocking_and_converges(stream, ref):
+    """poll(wait=False) seals the live ring and returns only what the
+    reader has finished; repeated polls deliver everything, in order."""
+    xy, ts = stream
+    pool = DetectorPool(CFG, capacity=1, ring_rounds=8, drain_mode="async")
+    lane = pool.connect(seed=CFG.seed)
+    pool.feed(lane, xy[:1792], ts[:1792])         # 7 full rounds
+    pool.pump()
+    got: list = []
+    deadline = time.monotonic() + 30
+    while sum(s.size for s, _ in got) < 1792:
+        assert time.monotonic() < deadline, "reader never delivered"
+        s, k = pool.poll(lane, wait=False)
+        if s.size:
+            got.append((s, k))
+    np.testing.assert_array_equal(
+        np.concatenate([s for s, _ in got]), ref.scores[:1792]
+    )
+    pool.close()
+
+
+def test_concurrent_pumps_fold_in_stream_order(stream, ref):
+    """Two threads hammering pump() while slabs arrive must not interleave
+    round collection (a seal waiting on the spare ring releases the lock
+    mid-block): the pump token serializes passes, so the readout stays
+    bit-exact."""
+    xy, ts = stream
+    pool = DetectorPool(CFG, capacity=1, ring_rounds=2, drain_mode="async")
+    lane = pool.connect(seed=CFG.seed)
+    errs: list = []
+    stop = threading.Event()
+
+    def pumper():
+        try:
+            while not stop.is_set():
+                pool.pump()
+        except Exception as e:  # pragma: no cover - failure path
+            errs.append(e)
+
+    threads = [threading.Thread(target=pumper) for _ in range(2)]
+    for t in threads:
+        t.start()
+    try:
+        for i in range(0, len(ts), 150):
+            pool.feed(lane, xy[i:i + 150], ts[i:i + 150])
+            pool.pump()
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=30)
+    assert not errs, errs
+    s, k = pool.flush(lane)
+    got = [pool.poll(lane)]  # anything a racing poll left behind: none
+    assert got[0][0].size == 0
+    np.testing.assert_array_equal(s, ref.scores)
+    np.testing.assert_array_equal(k, ref.kept)
+    pool.close()
+
+
+def test_poll_nowait_never_blocks_on_inflight_fetch(stream):
+    """poll(wait=False) must not wait for the spare ring: with the reader
+    artificially stalled mid-fetch and rounds buffered in the live ring,
+    the non-blocking poll returns immediately instead of sleeping through
+    the transfer."""
+    xy, ts = stream
+    pool = DetectorPool(CFG, capacity=1, ring_rounds=2, drain_mode="async")
+    lane = pool.connect(seed=CFG.seed)
+    fetch_started = threading.Event()
+    fetch_release = threading.Event()
+    real_fetch = pool._fetch_ring
+
+    def slow_fetch(ring):
+        fetch_started.set()
+        assert fetch_release.wait(timeout=30)
+        return real_fetch(ring)
+
+    pool._fetch_ring = slow_fetch
+    try:
+        pool.feed(lane, xy[:1024], ts[:1024])   # 4 rounds through 2 slots
+        pool.pump()                             # seals; reader now stalled
+        assert fetch_started.wait(timeout=30)
+        t0 = time.monotonic()
+        s, _ = pool.poll(lane, wait=False)      # must not join the fetch
+        assert time.monotonic() - t0 < 5.0
+        assert s.size == 0                      # nothing drained yet
+    finally:
+        fetch_release.set()
+    s, k = pool.flush(lane)
+    ref4 = pipeline.run_pipeline(xy[:1024], ts[:1024], CFG)
+    got = np.concatenate([s])
+    np.testing.assert_array_equal(got, ref4.scores)
+    pool.close()
+
+
+def test_reader_exception_propagates_to_next_caller(stream):
+    """A fetch failure on the reader thread surfaces as a RuntimeError on
+    the next public call (the PrefetchingLoader contract) and the pool
+    stays failed — its rings may hold unfetchable rounds."""
+    xy, ts = stream
+    pool = DetectorPool(CFG, capacity=1, ring_rounds=4, drain_mode="async")
+    lane = pool.connect(seed=CFG.seed)
+    pool.feed(lane, xy[:512], ts[:512])
+    pool.pump()
+    boom = OSError("injected PCIe failure")
+
+    def bad_fetch(ring):
+        raise boom
+
+    pool._fetch_ring = bad_fetch
+    with pytest.raises(RuntimeError, match="reader thread failed") as ei:
+        pool.poll(lane)
+    assert ei.value.__cause__ is boom
+    # sticky: every subsequent public call re-raises
+    with pytest.raises(RuntimeError, match="reader thread failed"):
+        pool.feed(lane, xy[:10], ts[:10])
+    with pytest.raises(RuntimeError, match="reader thread failed"):
+        pool.pump()
+    pool.close()
+
+
+def test_async_stats_fields_and_drain_wait(stream):
+    """The async runtime is observable: sealed-ring occupancy / reader lag
+    in stats, cumulative pump drain wait in pool_stats, and a drained pool
+    reports everything caught up."""
+    xy, ts = stream
+    pool = DetectorPool(CFG, capacity=1, ring_rounds=2, drain_mode="async")
+    lane = pool.connect(seed=CFG.seed)
+    st = pool.stats(lane)
+    assert st["ring_sealed_rounds"] == 0
+    pool.feed(lane, xy, ts)
+    pool.pump()                      # 7 rounds through a 2-slot ring: seals
+    ps = pool.pool_stats()
+    assert ps["drain_mode"] == "async"
+    assert ps["pump_drain_wait_s"] >= 0.0
+    s, _ = pool.flush(lane)
+    assert s.size                    # lossless through the seals
+    st = pool.stats(lane)
+    assert st["ring_rounds_buffered"] == 0
+    assert st["ring_sealed_rounds"] == 0          # reader fully caught up
+    assert pool.pool_stats()["reader_lag_rounds"] == 0
+    pool.close()
+
+
+def test_close_stops_reader_and_rejects_use(stream):
+    xy, ts = stream
+    with DetectorPool(CFG, capacity=1, drain_mode="async") as pool:
+        lane = pool.connect(seed=CFG.seed)
+        pool.feed(lane, xy[:512], ts[:512])
+        pool.pump()
+        pool.flush(lane)
+        reader = pool._reader
+    assert not reader.is_alive()
+    with pytest.raises(RuntimeError, match="closed"):
+        pool.pump()
+    with pytest.raises(RuntimeError, match="closed"):
+        pool.connect()
+    pool.close()                     # idempotent
+
+
+def test_sync_mode_has_no_reader_thread():
+    pool = DetectorPool(CFG, capacity=1, drain_mode="sync")
+    assert pool._reader is None
+    assert pool.drain_mode == "sync"
+    pool.close()

@@ -1,20 +1,23 @@
-"""Device-resident pool runtime: ring-buffered K-round execution, chunk-size
-buckets, and sharded lanes.
+"""Device-resident pool runtime: ring-buffered K-round execution, async
+double-buffered drain, chunk-size buckets, and sharded lanes.
 
-Acceptance contracts (ISSUE 3):
+Acceptance contracts (ISSUE 3 + ISSUE 4):
 
   * K-round ring-buffered ``pump_rounds(K)`` is bit-exact (scores, kept,
     final TOS, float64 energy books) vs K sequential single-round pumps,
     for K in {1, 3, 8}, on the jnp and Pallas backends, with lanes joining
-    and leaving mid-run.
-  * Compile-count assertions hold per bucket: <= 1 compiled executor per
-    chunk-size bucket tier, through membership churn, flushes, drains, and
-    lane migration across buckets.
+    and leaving mid-run — in BOTH drain modes (``sync``: the PR 3 inline
+    fetch; ``async``: double-buffered rings drained by a reader thread).
+  * Compile-count assertions hold per bucket: at most one K-block and one
+    1-round executable per chunk-size bucket tier, each compiled at most
+    once through membership churn, flushes, drains, and lane migration.
   * The ring cuts host fetches: K back-to-back rounds cost one blocking
-    fetch, not K (``host_fetches`` is the witness).
+    fetch, not K (``host_fetches`` is the witness, counted on the reader
+    thread in async mode).
   * Edge cases: ``flush()`` with an empty re-chunk buffer, ``disconnect()``
     with undrained ring slots, ragged slabs crossing bucket boundaries,
-    ``poll()`` under ring overflow (both policies).
+    ``poll()`` under ring overflow (both policies x both drain modes, with
+    the drop host-mirror audited against the device counter).
 """
 import dataclasses
 import subprocess
@@ -28,6 +31,10 @@ import pytest
 from repro.core import pipeline
 from repro.events import synthetic
 from repro.serve import DetectorPool
+
+_RING_CFG = pipeline.PipelineConfig(
+    chunk=256, lut_every_chunks=2, vdd=0.6, inject_ber=True
+)
 
 
 @pytest.fixture(scope="module")
@@ -48,6 +55,12 @@ def _lane_state(pool, lane):
 def _assert_states_equal(sa, sb):
     for x, y in zip(jax.tree.leaves(sa), jax.tree.leaves(sb)):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _assert_compiled_once(pool):
+    """The churn witness: every executor (per bucket, per block shape —
+    K-block and the 1-round H2D fast path) compiled at most once."""
+    assert pool.executors_compiled_once(), pool.compile_cache_sizes()
 
 
 def _serve_staggered_k(pool, streams, cfg, k, *, slab_rng_seed=0):
@@ -92,37 +105,59 @@ def _serve_staggered_k(pool, streams, cfg, k, *, slab_rng_seed=0):
     }
 
 
+@pytest.fixture(scope="module")
+def ring_refs(streams):
+    """run_pipeline oracle per stream for _RING_CFG (computed once)."""
+    return [pipeline.run_pipeline(xy, ts, _RING_CFG) for xy, ts in streams]
+
+
+@pytest.fixture(scope="module")
+def seq_served(streams):
+    """The sequential baseline: single-round pumps, synchronous drain —
+    the PR 3 reference execution plan every (K, drain_mode) must match."""
+    seq = DetectorPool(_RING_CFG, capacity=3, ring_rounds=1,
+                       drain_mode="sync")
+    out = _serve_staggered_k(seq, streams, _RING_CFG, 1)
+    _assert_compiled_once(seq)
+    seq.close()
+    return out
+
+
+@pytest.mark.parametrize("drain_mode", ["sync", "async"])
 @pytest.mark.parametrize("k", [1, 3, 8])
-def test_ring_k_rounds_bitexact_vs_sequential(streams, k):
+def test_ring_k_rounds_bitexact_vs_sequential(streams, ring_refs,
+                                              seq_served, k, drain_mode):
     """pump_rounds(K) through a ring_rounds=K executor == K single-round
-    pumps, bit for bit, under membership churn (and both == run_pipeline)."""
-    cfg = pipeline.PipelineConfig(
-        chunk=256, lut_every_chunks=2, vdd=0.6, inject_ber=True
-    )
-    ring = DetectorPool(cfg, capacity=3, ring_rounds=k)
-    seq = DetectorPool(cfg, capacity=3, ring_rounds=1)
-    a = _serve_staggered_k(ring, streams, cfg, k)
-    b = _serve_staggered_k(seq, streams, cfg, 1)
-    for i, (xy, ts) in enumerate(streams):
-        ref = pipeline.run_pipeline(xy, ts, cfg)
-        np.testing.assert_array_equal(a[i][0], ref.scores,
-                                      err_msg=f"lane {i} scores (ring)")
+    pumps, bit for bit, under membership churn (and both == run_pipeline) —
+    whether the ring drains inline (sync) or on the reader thread (async,
+    double-buffered)."""
+    ring = DetectorPool(_RING_CFG, capacity=3, ring_rounds=k,
+                        drain_mode=drain_mode)
+    a = _serve_staggered_k(ring, streams, _RING_CFG, k)
+    b = seq_served
+    for i in range(len(streams)):
+        ref = ring_refs[i]
+        np.testing.assert_array_equal(
+            a[i][0], ref.scores,
+            err_msg=f"lane {i} scores (ring, {drain_mode})"
+        )
         np.testing.assert_array_equal(a[i][0], b[i][0])
         np.testing.assert_array_equal(a[i][1], b[i][1])
         np.testing.assert_array_equal(a[i][1], ref.kept)
-        # float64 energy books identical between the two execution plans
+        # float64 energy books identical between the execution plans
         assert a[i][2]["energy_pj"] == b[i][2]["energy_pj"] == ref.energy_pj
         assert a[i][2]["kept_total"] == int(ref.kept.sum())
-    # churn (3 joins, 3 leaves, ragged arrivals) => 1 executable each
-    assert ring.compile_cache_size() == 1
-    assert seq.compile_cache_size() == 1
+    # churn (3 joins, 3 leaves, ragged arrivals) => nothing recompiled
+    _assert_compiled_once(ring)
+    ring.close()
 
 
 @pytest.mark.parametrize("backend", ["pallas_nmc", "pallas_batched"])
 @pytest.mark.parametrize("k", [1, 3, 8])
 def test_ring_k_rounds_pallas_backends(backend, k):
     """The K-round executor is backend-agnostic: Pallas kernels inside the
-    vmapped scan match the scan pipeline bit-for-bit, with a mid-run join."""
+    vmapped scan match the scan pipeline bit-for-bit, with a mid-run join
+    (async drain — the default — exercises the reader thread here too)."""
     rng = np.random.default_rng(0)
     e, h, w = 768, 64, 64
     mk = lambda s: (
@@ -149,7 +184,8 @@ def test_ring_k_rounds_pallas_backends(backend, k):
         ref = pipeline.run_pipeline(st[0], st[1], cfg)
         np.testing.assert_array_equal(res[0], ref.scores)
         np.testing.assert_array_equal(res[1], ref.kept)
-    assert pool.compile_cache_size() == 1
+    _assert_compiled_once(pool)
+    pool.close()
 
 
 def test_ring_residency_final_state_matches(streams):
@@ -158,7 +194,7 @@ def test_ring_residency_final_state_matches(streams):
     cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2,
                                   vdd=0.6, inject_ber=True)
     ring = DetectorPool(cfg, capacity=1, ring_rounds=4)
-    seq = DetectorPool(cfg, capacity=1, ring_rounds=1)
+    seq = DetectorPool(cfg, capacity=1, ring_rounds=1, drain_mode="sync")
     xy, ts = streams[0]
     for pool in (ring, seq):
         lane = pool.connect(seed=cfg.seed)
@@ -175,13 +211,18 @@ def test_ring_residency_final_state_matches(streams):
     )
 
 
-def test_ring_fewer_host_fetches(streams):
+@pytest.mark.parametrize("drain_mode", ["sync", "async"])
+def test_ring_fewer_host_fetches(streams, drain_mode):
     """K rounds back-to-back cost ~K/ring_rounds fetches, not K (the
-    serving-layer analogue of PR 1's O(n_chunks) -> 1 transfer cut)."""
+    serving-layer analogue of PR 1's O(n_chunks) -> 1 transfer cut).  The
+    count is mode-independent: async moves the fetch to the reader thread,
+    it does not add transfers."""
     cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
     xy, ts = streams[0]                       # 2000 events -> 7 full rounds
-    ring = DetectorPool(cfg, capacity=1, ring_rounds=8)
-    seq = DetectorPool(cfg, capacity=1, ring_rounds=1)
+    ring = DetectorPool(cfg, capacity=1, ring_rounds=8,
+                        drain_mode=drain_mode)
+    seq = DetectorPool(cfg, capacity=1, ring_rounds=1,
+                       drain_mode=drain_mode)
     for pool in (ring, seq):
         lane = pool.connect(seed=cfg.seed)
         pool.feed(lane, xy, ts)
@@ -191,6 +232,8 @@ def test_ring_fewer_host_fetches(streams):
     assert ring.host_fetches == 1             # 7 rounds, one drain
     assert seq.host_fetches == 7              # the per-round world
     assert ring.rounds_executed == seq.rounds_executed == 7
+    ring.close()
+    seq.close()
 
 
 def test_pump_rounds_budget(streams):
@@ -217,7 +260,7 @@ def test_pump_rounds_budget(streams):
 def test_bucketed_lanes_ragged_slabs_cross_bucket_boundaries(streams):
     """Lanes in different chunk-size buckets, fed ragged slabs that straddle
     every bucket size, each match run_pipeline at their own bucket's chunk;
-    one compiled executor per exercised bucket."""
+    at most one K-block + one 1-round executable per exercised bucket."""
     cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
     pool = DetectorPool(cfg, capacity=3, ring_rounds=3,
                         buckets=(128, 256, 512))
@@ -245,7 +288,14 @@ def test_bucketed_lanes_ragged_slabs_cross_bucket_boundaries(streams):
         np.testing.assert_array_equal(s, ref.scores, err_msg=f"bucket {bucket}")
         np.testing.assert_array_equal(kk, ref.kept)
         assert pool.disconnect(ln)["energy_pj"] == ref.energy_pj
-    assert pool.compile_cache_sizes() == {128: 1, 256: 1, 512: 1}
+    sizes = pool.compile_cache_sizes()
+    assert set(sizes) == {128, 256, 512}
+    # every exercised bucket compiled something; nothing compiled twice
+    # (a bucket whose rounds always arrived one at a time legitimately
+    # never traces its K-block — only the 1-round fast path)
+    assert all(sum(d.values()) >= 1 for d in sizes.values()), sizes
+    _assert_compiled_once(pool)
+    pool.close()
 
 
 def test_bucket_selection_and_errors(streams):
@@ -291,8 +341,9 @@ def test_flush_with_empty_rechunk_buffer(streams):
 
 
 def test_disconnect_with_undrained_ring_slots(streams):
-    """disconnect() drains the lane's ring first: its final stats cover all
-    pumped rounds, and a session reusing the slot inherits nothing."""
+    """disconnect() drains the lane's ring first (waiting on the reader in
+    async mode): its final stats cover all pumped rounds, and a session
+    reusing the slot inherits nothing."""
     cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
     xy, ts = streams[0]
     ref = pipeline.run_pipeline(xy[:1792], ts[:1792], cfg)   # 7 full chunks
@@ -305,6 +356,7 @@ def test_disconnect_with_undrained_ring_slots(streams):
     assert stats["kept_total"] == int(ref.kept.sum())
     assert stats["energy_pj"] == ref.energy_pj
     assert stats["ring_rounds_buffered"] == 0
+    assert stats["ring_sealed_rounds"] == 0                  # reader caught up
     # slot reuse starts clean
     lane2 = pool.connect(seed=cfg.seed)
     s, k = pool.flush(lane2)
@@ -312,14 +364,17 @@ def test_disconnect_with_undrained_ring_slots(streams):
     assert pool.stats(lane2)["kept_total"] == 0
 
 
-def test_poll_under_ring_overflow_drop_oldest(streams):
+@pytest.mark.parametrize("drain_mode", ["sync", "async"])
+def test_poll_under_ring_overflow_drop_oldest(streams, drain_mode):
     """drop_oldest: a full ring overwrites its oldest rounds; poll() returns
     only the survivors, the drop counters (host mirror and device ground
-    truth) agree, and the in-state device accumulators stay complete."""
+    truth) agree, and the in-state device accumulators stay complete — in
+    both drain modes (the host-mirror audit runs under the reader thread
+    in async mode)."""
     cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
     xy, ts = streams[0]
     pool = DetectorPool(cfg, capacity=1, ring_rounds=2,
-                        on_overflow="drop_oldest")
+                        on_overflow="drop_oldest", drain_mode=drain_mode)
     lane = pool.connect(seed=cfg.seed)
     pool.feed(lane, xy[:1792], ts[:1792])         # 7 rounds into 2 slots
     assert pool.pump() == 7
@@ -333,23 +388,33 @@ def test_poll_under_ring_overflow_drop_oldest(streams):
     # carried state never lost a round
     assert st["kept_total"] == int(ref.kept[5 * 256:].sum())
     assert st["device_kept_total"] == int(ref.kept.sum())
-    assert pool.pool_stats()["dropped_rounds_total"] == 5
+    ps = pool.pool_stats()
+    assert ps["dropped_rounds_total"] == 5
+    # everything has been fetched, so the predicted mirror has fully
+    # resolved against the device counter (the audit)
+    assert ps["dropped_rounds_confirmed"] == 5
+    pool.close()
 
 
-def test_ring_overflow_drain_policy_is_lossless(streams):
-    """drain: the host pre-drains a full ring instead of dropping — more
-    fetches under overload, never data loss."""
+@pytest.mark.parametrize("drain_mode", ["sync", "async"])
+def test_ring_overflow_drain_policy_is_lossless(streams, drain_mode):
+    """drain: the pump makes room in a full ring (sync: inline fetch;
+    async: seal to the reader) instead of dropping — more fetches under
+    overload, never data loss."""
     cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
     xy, ts = streams[0]
-    pool = DetectorPool(cfg, capacity=1, ring_rounds=2)
+    pool = DetectorPool(cfg, capacity=1, ring_rounds=2,
+                        drain_mode=drain_mode)
     lane = pool.connect(seed=cfg.seed)
     pool.feed(lane, xy, ts)
     pool.pump()                                   # 7 rounds, R=2 -> drains
-    assert pool.host_fetches >= 3
     s, k = pool.flush(lane)
+    assert pool.host_fetches >= 3
     ref = pipeline.run_pipeline(xy, ts, cfg)
     np.testing.assert_array_equal(s, ref.scores)
     assert pool.stats(lane)["ring_dropped_rounds"] == 0
+    assert pool.pool_stats()["dropped_rounds_confirmed"] == 0
+    pool.close()
 
 
 def test_pool_rejects_bad_config():
@@ -358,6 +423,8 @@ def test_pool_rejects_bad_config():
         DetectorPool(cfg, capacity=1, ring_rounds=0)
     with pytest.raises(ValueError, match="on_overflow"):
         DetectorPool(cfg, capacity=1, on_overflow="block")
+    with pytest.raises(ValueError, match="drain_mode"):
+        DetectorPool(cfg, capacity=1, drain_mode="threaded")
 
 
 # ---------------------------------------------------------------------------
@@ -367,8 +434,8 @@ def test_pool_rejects_bad_config():
 
 def test_sharded_executor_single_device_fallback(streams):
     """shard=True on a 1-device host runs the shard_map path on a 1-wide
-    lane mesh — same bits, same single executable (the transparency
-    contract that lets one code path serve laptops and pods)."""
+    lane mesh — same bits, same executables (the transparency contract that
+    lets one code path serve laptops and pods)."""
     cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2,
                                   dvfs=True, dvfs_online=True)
     pool = DetectorPool(cfg, capacity=2, ring_rounds=3, shard=True)
@@ -381,7 +448,8 @@ def test_sharded_executor_single_device_fallback(streams):
     ref = pipeline.run_pipeline(xy, ts, cfg)
     np.testing.assert_array_equal(s, ref.scores)
     np.testing.assert_array_equal(k, ref.kept)
-    assert pool.compile_cache_size() == 1
+    _assert_compiled_once(pool)
+    pool.close()
 
 
 _SHARDED_SUBPROCESS = textwrap.dedent("""
@@ -400,6 +468,7 @@ _SHARDED_SUBPROCESS = textwrap.dedent("""
     pool = DetectorPool(cfg, capacity=3, ring_rounds=4)   # auto-shards
     ps = pool.pool_stats()
     assert ps["sharded"] and ps["devices"] == 4, ps
+    assert ps["drain_mode"] == "async"                    # reader + shards
     assert pool._phys == 4                                # padded to mesh
     lanes = [pool.connect(seed=cfg.seed) for _ in range(3)]
     for i, ln in enumerate(lanes):
@@ -423,16 +492,19 @@ _SHARDED_SUBPROCESS = textwrap.dedent("""
                                     cfg)
         assert np.array_equal(s, ref.scores), i
         assert np.array_equal(k, ref.kept), i
-    assert pool.compile_cache_size() == 1, pool.compile_cache_sizes()
+    assert pool.executors_compiled_once(), pool.compile_cache_sizes()
+    sizes = pool.compile_cache_sizes()
+    assert sizes[256]["block"] == 1, sizes
+    pool.close()
     print("OK")
 """)
 
 
 @pytest.mark.slow
 def test_sharded_pool_4_devices_subprocess():
-    """Lane-sharded pool on 4 forced host devices: bit-exact vs
-    run_pipeline per lane, one executable through churn (out-of-process so
-    the main pytest run stays on 1 device)."""
+    """Lane-sharded pool on 4 forced host devices, async drain: bit-exact
+    vs run_pipeline per lane, nothing recompiled through churn (out-of-
+    process so the main pytest run stays on 1 device)."""
     r = subprocess.run(
         [sys.executable, "-c", _SHARDED_SUBPROCESS],
         capture_output=True, text=True, timeout=600,

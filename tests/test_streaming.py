@@ -6,6 +6,7 @@ at a time) produces bit-identical scores, kept mask, final state, vdd
 trace, and float64 energy accounting to one ``run_pipeline`` call on the
 concatenated stream.
 """
+import jax
 import numpy as np
 import pytest
 
@@ -178,6 +179,55 @@ def test_snapshot_restore_resumes_bitexact(stream):
     _assert_session_matches(det2, scores, kept, ref)
     # accounting carried across the restore
     assert det2.n_events == len(ts)
+
+
+def test_snapshot_is_donation_proof(stream):
+    """Use-after-donate regression: a snapshot must own deep copies of the
+    state (on CPU ``device_get`` can return zero-copy views of the live
+    buffers, and with donation enabled a later step invalidates them), and
+    ``restore`` must re-``device_put`` so the restored session's buffers
+    never alias the checkpoint.  Snapshot -> keep stepping the original ->
+    restore -> replay must be bit-exact."""
+    xy, ts = stream.xy[:2500], stream.ts[:2500]
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    ref = pipeline.run_pipeline(xy, ts, cfg)
+
+    det = StreamingDetector(cfg)
+    s1, k1 = det.feed(xy[:1111], ts[:1111])
+    snap = det.snapshot()
+    # the checkpoint owns its memory — nothing aliases the live state
+    for snap_leaf, live_leaf in zip(
+        jax.tree.leaves(snap["state"]), jax.tree.leaves(det.state)
+    ):
+        assert not np.shares_memory(
+            np.asarray(snap_leaf), np.asarray(live_leaf)
+        )
+
+    # step the ORIGINAL session onward (with donation on accelerators this
+    # consumes the pre-step buffers a view-holding snapshot would alias)
+    s2, k2 = det.feed(xy[1111:], ts[1111:])
+    s3, k3 = det.flush()
+    _assert_session_matches(
+        det, np.concatenate([s1, s2, s3]), np.concatenate([k1, k2, k3]), ref
+    )
+
+    # the snapshot replays the same tail bit-exactly
+    det2 = StreamingDetector.restore(snap)
+    for snap_leaf, rest_leaf in zip(
+        jax.tree.leaves(snap["state"]), jax.tree.leaves(det2.state)
+    ):
+        assert not np.shares_memory(
+            np.asarray(snap_leaf), np.asarray(rest_leaf)
+        )
+    r2, q2 = det2.feed(xy[1111:], ts[1111:])
+    r3, q3 = det2.flush()
+    np.testing.assert_array_equal(np.concatenate([r2, r3]),
+                                  np.concatenate([s2, s3]))
+    np.testing.assert_array_equal(np.concatenate([q2, q3]),
+                                  np.concatenate([k2, k3]))
+    _assert_session_matches(
+        det2, np.concatenate([s1, r2, r3]), np.concatenate([k1, q2, q3]), ref
+    )
 
 
 def test_device_slab_loader_feed(stream):
