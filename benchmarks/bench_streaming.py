@@ -36,6 +36,17 @@ Rows per pool size K in {1, 4, 16}:
   * ``poolK_sharded_events_per_s`` — the lane-sharded pool across local
     devices; on a single-device host the row is reported with a
     ``_skipped`` suffix (derived 0) instead of crashing.
+  * ``poolK_migration_*`` — the adaptive control plane (ISSUE 5) under a
+    rate-ramp: every lane connects in the small bucket at ~100 events per
+    DVFS half-window, then ramps to ~512; the static policy keeps folding
+    4-round blocks through the K=8 executor (half the uploaded (K, lanes,
+    chunk) block is padding), the adaptive policy live-migrates each lane
+    to the big bucket (1-round fast path, ~zero padding).
+    ``..._count`` (applied migrations) and ``..._padding_saved_ratio``
+    (1 - adaptive/static H2D padding bytes) are machine-independent
+    structural witnesses gated by ``run.py --check-regression``;
+    ``..._padding_saved_mb`` and ``..._rounds_per_fetch`` ride along as
+    context.
 
 plus the batch-path reference (``batchK_events_per_s`` via the vmapped
 ``run_pipeline_batched`` scan) so the cost of *online* serving is visible
@@ -132,6 +143,36 @@ def _run_burst(cfg, streams, *, ring_rounds: int, drain_mode: str = "sync"):
     return dt, rounds, fetches, drain_wait
 
 
+def _run_ramp(cfg, k, *, policy, rates):
+    """Serve k rate-ramp lanes (connected in the small bucket) and return
+    the structural counters the migration rows report: H2D padding bytes,
+    applied migrations, rounds, fetches.  The lanes are polled, not
+    flushed: the witness measures steady-state serving padding, and a
+    flush tail is one padded ``(lanes, bucket)`` round *per lane* — a k^2
+    shutdown artifact that would swamp the per-round signal at pool16."""
+    half = cfg.dvfs_cfg.half_us
+    streams = [synthetic.ramp_stream(rates, half, seed=SEED + s)
+               for s in range(k)]
+    pool = DetectorPool(cfg, capacity=k, ring_rounds=RING_ROUNDS,
+                        buckets=(128, 512), policy=policy,
+                        migrate_patience=2)
+    lanes = {i: pool.connect(seed=SEED + i, chunk=128) for i in range(k)}
+    for j in range(len(rates)):
+        for i, lane in lanes.items():
+            st = streams[i]
+            m = (st.ts // half) == j
+            pool.feed(lane, st.xy[m], st.ts[m])
+        pool.pump()
+        for lane in lanes.values():
+            pool.poll(lane)
+    ps = pool.pool_stats()
+    out = (ps["h2d_padding_bytes"], ps["migrations_total"],
+           ps["rounds_executed"], ps["host_fetches"])
+    assert pool.executors_compiled_once(), pool.compile_cache_sizes()
+    pool.close()
+    return out
+
+
 def _run_batch(cfg, streams):
     k = len(streams)
     e = min(len(s) for s in streams)
@@ -209,6 +250,21 @@ def rows(smoke: bool = False):
             )
             out.append((f"pool{k}_sharded_events_per_s",
                         sdt * 1e6 / max(n_total, 1), n_total / sdt))
+
+        # adaptive control plane under a rate-ramp: padding saved + moves
+        ramp_rates = ([100] * 3 + [512] * 9) if smoke \
+            else ([100] * 5 + [512] * 14)
+        pad_s, _, _, _ = _run_ramp(cfg, k, policy="static",
+                                   rates=ramp_rates)
+        pad_a, migs, rounds, fetches = _run_ramp(cfg, k, policy="adaptive",
+                                                 rates=ramp_rates)
+        out.append((f"pool{k}_migration_count", 0.0, float(migs)))
+        out.append((f"pool{k}_migration_padding_saved_ratio", 0.0,
+                    1.0 - pad_a / max(pad_s, 1)))
+        out.append((f"pool{k}_migration_padding_saved_mb", 0.0,
+                    (pad_s - pad_a) / 1e6))
+        out.append((f"pool{k}_migration_rounds_per_fetch", 0.0,
+                    rounds / max(fetches, 1)))
 
         bdt, bn = _run_batch(cfg, streams)
         out.append((f"batch{k}_events_per_s", bdt * 1e6 / max(bn, 1),

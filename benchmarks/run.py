@@ -18,10 +18,13 @@ modules finish, key serving rows are compared against the committed
 baseline JSON and the process exits non-zero on a regression.
 
   * structural rows (``*_burst_rounds_per_fetch`` higher-is-better,
-    ``*_fetches_per_round`` lower-is-better) count blocking transfers per
-    executed round — machine-independent and deterministic at fixed sizes,
-    so they get the tight ``--tol`` (default 0.35 = 35%).  These catch
-    "the ring quietly started fetching every round" class bugs.
+    ``*_fetches_per_round`` lower-is-better, and the ISSUE 5 migration
+    witnesses ``*_migration_count`` / ``*_migration_padding_saved_ratio``,
+    both higher-is-better) count blocking transfers per executed round and
+    the adaptive scheduler's work — machine-independent and deterministic
+    at fixed sizes, so they get the tight ``--tol`` (default 0.35 = 35%).
+    These catch "the ring quietly started fetching every round" and "the
+    scheduler quietly stopped migrating" class bugs.
   * wall-time rows (``*_slab_p99_ms`` lower-is-better) get the loose
     ``--tol-time`` (default 3.0 = 4x baseline) so the gate survives CI
     machine variance, and are skipped entirely when the run's ``--smoke``
@@ -45,6 +48,11 @@ import time
 _GATE_STRUCTURAL = (
     ("_burst_rounds_per_fetch", "higher"),
     ("_fetches_per_round", "lower"),
+    # adaptive control plane (ISSUE 5): the rate-ramp scenario must keep
+    # migrating lanes (count) and keep shrinking the H2D padding vs the
+    # static policy (ratio) — both machine-independent at fixed sizes
+    ("_migration_count", "higher"),
+    ("_migration_padding_saved_ratio", "higher"),
 )
 _GATE_TIME = (
     ("_slab_p99_ms", "lower"),

@@ -140,6 +140,42 @@ def demo_streaming(stream):
           f" (executors per bucket: {pool2.compile_cache_sizes()})")
     pool2.close()
 
+    # 5) Adaptive control plane: a lane connected in the small bucket whose
+    #    measured rate outgrows it is live-migrated (seal + drain +
+    #    donation-proof snapshot/restore) to the fitting bucket — zero
+    #    recompiles, bit-exact vs a StreamingDetector rebucketed at the
+    #    same event boundary.
+    half = cfg.dvfs_cfg.half_us
+    ramp = synthetic.ramp_stream([100] * 4 + [500] * 8, half, seed=3,
+                                 height=cfg.height, width=cfg.width)
+    rxy, rts = ramp.xy, ramp.ts                   # ~100 -> ~500 ev/half-win
+    pool3 = DetectorPool(cfg, capacity=1, ring_rounds=4,
+                         buckets=(128, 512), policy="adaptive",
+                         migrate_patience=2)
+    lane = pool3.connect(seed=cfg.seed, chunk=128)
+    outs = []
+    for j in range(int(rts[-1]) // half + 1):
+        m = (rts // half) == j
+        pool3.feed(lane, rxy[m], rts[m])
+        pool3.pump()
+        outs.append(pool3.poll(lane)[0])
+    outs.append(pool3.flush(lane)[0])
+    st = pool3.stats(lane)
+    det3 = StreamingDetector(cfg, chunk=128, seed=cfg.seed)
+    replay, cur = [], 0
+    for m_ev, _frm, to in st["migration_log"]:
+        replay.append(det3.feed(rxy[cur:m_ev], rts[cur:m_ev])[0])
+        det3.rebucket(to)
+        cur = m_ev
+    replay.append(det3.feed(rxy[cur:], rts[cur:])[0])
+    replay.append(det3.flush()[0])
+    print("  adaptive migration (128->512):   bit-exact vs rebucket replay:",
+          np.array_equal(np.concatenate(outs), np.concatenate(replay)),
+          f" (migrations {st['migration_log']},"
+          f" rate est {st['events_per_s_est'] / 1e3:.0f} kev/s,"
+          f" executables: {pool3.compile_cache_sizes()})")
+    pool3.close()
+
 
 def main():
     for name, gen, seed in (("shapes_dof", synthetic.shapes_stream, 0),

@@ -69,6 +69,7 @@ __all__ = [
     "detector_step",
     "detector_scan",
     "donation_ok",
+    "rate_estimate_eps",
     "ring_init",
     "ring_push",
     "ring_slot_order",
@@ -97,6 +98,29 @@ def donation_ok(tree) -> bool:
             return False
         devs |= set(get())
     return bool(devs) and all(d.platform != "cpu" for d in devs)
+
+
+def rate_estimate_eps(prev1, prev2, dvfs_cfg) -> float:
+    """Events/s read-out of the streaming rate estimator's closed pair.
+
+    The single formula both rate sources share (host scalar math):
+
+      * the estimator carried in ``DetectorState.rate`` (``prev1``/
+        ``prev2`` fetched off device) — only integrated by the step in
+        online-DVFS mode;
+      * the serving layer's host twin, which bins *fed* timestamps with
+        the same half-window rotation so rate-aware scheduling works for
+        every servable config without a device sync.
+
+    Mirrors ``dvfs.online_vdd_from_chunk_ts``'s read exactly: both closed
+    counters saturate at ``2^counter_bits - 1``, and the rate divide is
+    float32 like the device path (the estimate an operating-point choice
+    would see), scaled from events/us to events/s.
+    """
+    sat = (1 << dvfs_cfg.counter_bits) - 1
+    pair = min(int(prev1), sat) + min(int(prev2), sat)
+    est_mpus = np.float32(pair) / np.float32(dvfs_cfg.tw_us)
+    return float(est_mpus) * 1e6
 
 
 class DetectorState(NamedTuple):

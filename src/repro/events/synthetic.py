@@ -21,7 +21,13 @@ import dataclasses
 
 import numpy as np
 
-__all__ = ["EventStream", "shapes_stream", "dynamic_stream", "rate_profile_stream"]
+__all__ = [
+    "EventStream",
+    "shapes_stream",
+    "dynamic_stream",
+    "rate_profile_stream",
+    "ramp_stream",
+]
 
 
 @dataclasses.dataclass
@@ -192,5 +198,29 @@ def rate_profile_stream(
     for meps in profile_meps:
         n = rng.poisson(float(meps) * window_us)
         parts.append(_noise_events(n, t0, t0 + window_us, height, width, rng))
+        t0 += window_us
+    return _merge(parts, height, width)
+
+
+def ramp_stream(
+    events_per_window,
+    window_us: int = 5_000,
+    *,
+    height: int = 180,
+    width: int = 240,
+    seed: int = 7,
+) -> EventStream:
+    """Deterministic rate ramp: window ``j`` carries EXACTLY
+    ``events_per_window[j]`` events, uniform in space and time within the
+    window (no Poisson draw — the adaptive-scheduler witnesses need the
+    DVFS rate estimator to read exact, reproducible per-window counts).
+    ``window_us`` should be the DVFS half-window for those use cases."""
+    rng = np.random.default_rng(seed)
+    parts = []
+    t0 = 0
+    for n in events_per_window:
+        parts.append(
+            _noise_events(int(n), t0, t0 + window_us, height, width, rng)
+        )
         t0 += window_us
     return _merge(parts, height, width)

@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.serve_events --sessions 4 \
         --duration-us 40000 --slab 400 --dvfs --ring-rounds 8 \
-        --drain-mode async
+        --drain-mode async --policy adaptive --buckets 64,256,1024 \
+        --connect-chunk 64
 
 Spins up a ``DetectorPool`` (ring-buffered K-round executor; lane-sharded
 automatically when the host has >1 local device), connects ``--sessions``
@@ -14,19 +15,33 @@ buffered/dropped rounds, pump drain wait) — the serving-side counterpart of
 
 ``--drain-mode`` picks the readout runtime:
 
-  * ``async`` (default): double-buffered device rings per bucket; a
-    dedicated reader thread performs the blocking ``device_get`` while the
-    pump keeps scanning rounds into the live ring.  The pump's only drain
-    cost is the atomic ring swap (``pump_drain_wait_s`` stays near zero
-    unless the reader falls behind the spare ring).
+  * ``async`` (default): an N-deep ring-of-rings per bucket
+    (``--ring-depth``, default 2 = double buffering); a dedicated reader
+    thread performs the blocking ``device_get`` while the pump keeps
+    scanning rounds into the live ring.  The pump's only drain cost is the
+    atomic ring swap (``pump_drain_wait_s`` stays near zero unless the
+    reader falls behind every spare).
   * ``sync``: the PR 3 single-ring runtime — every drain blocks the pump
     thread on the fetch.  Kept for comparison and debugging; both modes are
     bit-exact (property-tested).
 
-Backpressure is observable, not silent: every round the driver checks
-``pool.pool_stats()`` and logs when the overflow policy dropped rounds
-(``--overflow drop_oldest``) or when ring occupancy forced an early
-drain/seal.
+``--policy`` picks the control plane:
+
+  * ``static`` (default): PR 4 placement — each lane stays in the bucket
+    chosen at connect (``--connect-chunk``, rounded up to a ``--buckets``
+    tier) for life.
+  * ``adaptive``: lanes whose measured events-per-half-window outgrow (or
+    undershoot) their bucket for ``--migrate-patience`` consecutive drains
+    are live-migrated to the better-fitting bucket (seal + drain +
+    snapshot/restore; zero recompiles, bit-exact), and the most backlogged
+    bucket pumps first.  Connect the sessions with a deliberately small
+    ``--connect-chunk`` to watch them re-budget themselves upward.
+
+Backpressure and migration are observable, not silent: every round the
+driver checks ``pool.pool_stats()`` and logs dropped rounds (``--overflow
+drop_oldest``), forced mid-pump drains, and each applied migration; the
+final per-lane report prints the rate estimate, bucket, and migration
+count ``stats()`` now carries.
 """
 from __future__ import annotations
 
@@ -49,6 +64,10 @@ def main(argv=None):
                     help="events per arriving slab")
     ap.add_argument("--ring-rounds", type=int, default=8,
                     help="K: rounds per executor block / ring capacity")
+    ap.add_argument("--ring-depth", type=int, default=2,
+                    help="device rings per bucket in async mode (2 = the "
+                         "PR 4 double buffer; deeper absorbs longer fetch "
+                         "stalls)")
     ap.add_argument("--overflow", default="drain",
                     choices=("drain", "drop_oldest"),
                     help="ring overflow policy (drain=lossless backpressure)")
@@ -56,6 +75,19 @@ def main(argv=None):
                     choices=("async", "sync"),
                     help="async: reader thread fetches sealed rings off the "
                          "pump thread; sync: drains block the caller")
+    ap.add_argument("--policy", default="static",
+                    choices=("static", "adaptive"),
+                    help="control plane: static=PR 4 placement for life; "
+                         "adaptive=rate-aware live bucket migration")
+    ap.add_argument("--buckets", default=None,
+                    help="comma-separated chunk-size buckets "
+                         "(e.g. 64,256,1024); default: just --chunk")
+    ap.add_argument("--connect-chunk", type=int, default=None,
+                    help="per-session chunk request at connect (rounded up "
+                         "to a bucket); default: --chunk")
+    ap.add_argument("--migrate-patience", type=int, default=3,
+                    help="consecutive drains past the hysteresis threshold "
+                         "before an adaptive migration commits")
     ap.add_argument("--dvfs", action="store_true",
                     help="online (in-step) DVFS instead of fixed 1.2 V")
     ap.add_argument("--backend", default="jnp",
@@ -66,17 +98,27 @@ def main(argv=None):
         chunk=args.chunk, lut_every_chunks=2, backend=args.backend,
         dvfs=args.dvfs, dvfs_online=args.dvfs,
     )
+    buckets = (
+        tuple(int(b) for b in args.buckets.split(","))
+        if args.buckets else None
+    )
     streams = [
         synthetic.shapes_stream(duration_us=args.duration_us, seed=s)
         for s in range(args.sessions)
     ]
     pool = DetectorPool(cfg, capacity=args.sessions,
                         ring_rounds=args.ring_rounds,
+                        ring_depth=args.ring_depth,
+                        buckets=buckets,
                         on_overflow=args.overflow,
-                        drain_mode=args.drain_mode)
+                        drain_mode=args.drain_mode,
+                        policy=args.policy,
+                        migrate_patience=args.migrate_patience)
     ps = pool.pool_stats()
     print(f"pool: capacity {args.sessions}, ring_rounds {args.ring_rounds} "
-          f"({args.overflow}, drain_mode={args.drain_mode}), "
+          f"x depth {ps['ring_depth']} "
+          f"({args.overflow}, drain_mode={args.drain_mode}, "
+          f"policy={ps['policy']}, buckets={pool.buckets}), "
           f"sharded={ps['sharded']} over {ps['devices']} device(s)")
 
     # Warm both executor shapes (K-block + 1-round) outside the timed loop.
@@ -88,42 +130,53 @@ def main(argv=None):
     lanes, cursors = {}, {}
     lat_ms, done = [], 0
     dropped_seen = 0
-    forced_drains = 0
+    drains_seen = drains0
+    migrations_seen = 0
+    final_lane_stats = []
     n_total = sum(len(s) for s in streams)
     t0 = time.perf_counter()
     while done < args.sessions:
         # staggered joins: one new camera per round until all are live
         if len(cursors) < args.sessions:
             i = len(cursors)
-            lanes[i] = pool.connect(seed=i)
+            lanes[i] = pool.connect(seed=i, chunk=args.connect_chunk)
             cursors[i] = 0
+        # sample counters OUTSIDE the timed window: pool_stats walks every
+        # lane and executor, and that observability cost must not inflate
+        # the reported round latency percentiles
+        drains_before = pool.pool_stats()["pump_forced_drains"]
         t1 = time.perf_counter()
         for i, lane in list(lanes.items()):
             st, c = streams[i], cursors[i]
             if c >= len(st):
                 pool.flush(lane)
-                pool.disconnect(lane)
+                final_lane_stats.append(pool.disconnect(lane))
                 del lanes[i]
                 done += 1
                 continue
             pool.feed(lane, st.xy[c:c + args.slab], st.ts[c:c + args.slab])
             cursors[i] = c + args.slab
-        # mid-pump makes-room events are counted by the pool itself
-        # (host_fetches deltas are racy in async mode: the reader counts a
-        # fetch when the transfer completes, not when the pump seals)
-        drains_before = pool.pool_stats()["pump_forced_drains"]
         pool.pump()
-        now = pool.pool_stats()["pump_forced_drains"]
-        if now > drains_before:
-            if forced_drains == 0:
-                print("  [backpressure] ring full mid-pump: draining early "
-                      "(lossless; fetch cadence rises under this load)")
-            forced_drains = now - drains0
         for lane in lanes.values():
             pool.poll(lane)
         lat_ms.append((time.perf_counter() - t1) * 1e3)
-        # backpressure: log drops instead of silently losing rounds
         ps = pool.pool_stats()
+        # mid-pump makes-room events are counted by the pool itself
+        # (host_fetches deltas are racy in async mode: the reader counts a
+        # fetch when the transfer completes, not when the pump seals);
+        # the delta here also covers drains forced inside flush()
+        if ps["pump_forced_drains"] > drains_before:
+            if drains_seen == drains0:
+                print("  [backpressure] ring full mid-pump: draining early "
+                      "(lossless; fetch cadence rises under this load)")
+            drains_seen = ps["pump_forced_drains"]
+        # migration: log each applied move (adaptive policy only)
+        if ps["migrations_total"] > migrations_seen:
+            print(f"  [migration] {ps['migrations_total'] - migrations_seen}"
+                  f" lane(s) re-bucketed (total "
+                  f"{ps['migrations_total']}; zero recompiles)")
+            migrations_seen = ps["migrations_total"]
+        # backpressure: log drops instead of silently losing rounds
         if ps["dropped_rounds_total"] > dropped_seen:
             print(f"  [backpressure] ring dropped "
                   f"{ps['dropped_rounds_total'] - dropped_seen} round(s) "
@@ -133,6 +186,7 @@ def main(argv=None):
 
     lat = np.asarray(lat_ms)
     ps = pool.pool_stats()
+    forced_drains = ps["pump_forced_drains"] - drains0
     print(f"served {args.sessions} sessions / {n_total} events in {dt:.2f}s "
           f"({n_total / dt / 1e3:.1f} kev/s aggregate)")
     print(f"round latency ms: p50 {np.percentile(lat, 50):.2f}  "
@@ -147,8 +201,18 @@ def main(argv=None):
           f"{(ps['pump_drain_wait_s'] - drain_wait0) * 1e3:.2f} ms total "
           f"({args.drain_mode}; async seals swap buffers instead of "
           f"fetching), reader lag {ps['reader_lag_rounds']} round(s)")
+    pad = ps["h2d_padding_bytes"]
+    print(f"h2d padding: {pad / 1e6:.3f} MB over "
+          f"{ps['h2d_event_slots']} uploaded slots "
+          f"({ps['h2d_valid_events']} valid events) — "
+          f"{ps['migrations_total']} migration(s), policy={ps['policy']}")
+    for st in final_lane_stats:
+        print(f"  lane {st['lane']}: bucket {st['bucket']}, "
+              f"rate est {st['events_per_s_est'] / 1e3:.1f} kev/s "
+              f"(device est {st['device_events_per_s_est'] / 1e3:.1f}), "
+              f"{st['migrations']} migration(s) {st['migration_log']}")
     print(f"compiled executors: {pool.compile_cache_sizes()} "
-          f"(membership churn must not recompile)")
+          f"(membership churn and migration must not recompile)")
     pool.close()
     return dt, lat
 

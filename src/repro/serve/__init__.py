@@ -4,30 +4,52 @@
               slabs of any length, scores come back as chunks complete;
               flush/snapshot/restore; automatic timebase re-basing for
               unbounded session length; per-session ``chunk=`` override
-              (bucket tier) for heterogeneous sensors.
-  pool      — ``DetectorPool``: N sessions through per-bucket compiled
-              K-round executors.  Rounds run back-to-back in a jitted
-              ``lax.scan`` whose outputs land in an on-device result ring
-              (one blocking fetch per drain, not per round); with
-              ``drain_mode="async"`` (default) each bucket double-buffers
-              that ring and a dedicated reader thread performs the fetch,
-              so the pump thread never waits on the transfer; lanes shard
-              across local devices through ``repro.compat.shard_map`` when
-              more than one is present; membership is an active-mask lane
-              system — sessions join/leave without recompilation; on
-              accelerator-resident pools the executors donate states+ring
-              (keyed off actual placement, never the default backend).
-              ``poll()`` is the readout/backpressure point; overflow is
-              either lossless (``"drain"``) or counted (``"drop_oldest"``).
-              Public API is thread-safe (one lock; reader exceptions
-              propagate to the next caller).
+              (bucket tier) for heterogeneous sensors; ``rebucket()``
+              hops a live session to a new chunk size exactly.
+  runtime   — ``PoolRuntime``: the pool's *data plane*.  N sessions
+              through per-bucket compiled K-round executors whose rounds
+              land in an on-device result ring (one blocking fetch per
+              drain, not per round); with ``drain_mode="async"`` (default)
+              each bucket owns an N-deep ring-of-rings (``ring_depth``)
+              and a dedicated reader thread performs the fetch off the
+              pump thread; lanes shard across local devices; membership is
+              an active-mask lane system (join/leave/migrate without
+              recompilation); executors donate states+ring on accelerator
+              pools (keyed off actual placement).  Also the seal/drain/
+              snapshot/restore mechanics of live lane migration and the
+              host twin of the DVFS rate estimator (measurement, not
+              policy).
+  scheduler — the pool's *control plane*: lane->bucket placement as
+              policy.  ``StaticScheduler`` freezes placement at connect;
+              ``AdaptiveScheduler`` re-buckets live lanes from their
+              measured event rate (hysteresis + patience) and pumps the
+              most starved bucket first under round budgets.
+  pool      — ``DetectorPool``: the façade wiring scheduler policy to
+              runtime mechanics.  ``policy="static"`` (default) is PR 4
+              behavior exactly; ``policy="adaptive"`` adds live bucket
+              migration and rate-aware pump order.  ``poll()`` is the
+              readout/backpressure point; overflow is either lossless
+              (``"drain"``) or counted (``"drop_oldest"``); public API is
+              thread-safe.
 
-Both fold the same pure detector core (``repro.core.state``) the batch
-pipeline folds, so a served stream is bit-identical to ``run_pipeline`` on
-the concatenated events — per lane, per bucket, per shard, and per K-round
-block (property-tested).
+All of them fold the same pure detector core (``repro.core.state``) the
+batch pipeline folds, so a served stream is bit-identical to
+``run_pipeline`` on the concatenated events — per lane, per bucket, per
+shard, per K-round block, and across live migrations (property-tested).
 """
 from repro.serve.pool import DetectorPool  # noqa: F401
+from repro.serve.runtime import PoolRuntime  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    AdaptiveScheduler,
+    StaticScheduler,
+)
 from repro.serve.streaming import StreamingDetector, session_base_us  # noqa: F401
 
-__all__ = ["StreamingDetector", "DetectorPool", "session_base_us"]
+__all__ = [
+    "StreamingDetector",
+    "DetectorPool",
+    "PoolRuntime",
+    "StaticScheduler",
+    "AdaptiveScheduler",
+    "session_base_us",
+]

@@ -1,332 +1,120 @@
-"""Multi-camera serving: a device-resident pool runtime.
+"""Multi-camera serving: data-plane runtime wired to a control-plane
+scheduler.
 
-``DetectorPool`` holds ``capacity`` detector lanes as a single stacked
-``DetectorState`` pytree on device.  Four mechanisms make its execution
-model fully device-resident and keep the pump thread off the PCIe bus
-(PR 3 + PR 4 — the serving-layer analogue of the read/write decoupling the
-paper's 8T TOS cell performs in silicon):
+``DetectorPool`` is now a thin façade over two layers (the PR 5 split):
 
-**Ring-buffered multi-round pump.**  Instead of one vmapped round per jit
-call followed by a blocking fetch, rounds execute in jitted K-round
-``lax.scan`` blocks whose per-round outputs (scores, keep masks, kept
-counts, chunk metadata) land in a fixed-capacity on-device result ring
-(``repro.core.state.RingState``).  The host performs ONE blocking fetch per
-drain — so K back-to-back rounds cost one sync, not K.  Padded no-op rounds
-inside a block are skipped by a round-level ``lax.cond`` (data, not shape);
-a block with exactly ONE ready round takes a second, 1-round executor whose
-input shapes drop the K axis entirely, so sparse arrivals stop uploading
-K rounds of padding over H2D.  Each bucket therefore compiles at most two
-executables (K-block + 1-round), each exactly once — membership churn must
-not grow either (asserted in CI).  Overflow policy:
+  * ``repro.serve.runtime.PoolRuntime`` — the data plane.  Compiled
+    per-bucket K-round executors, the on-device result rings (an N-deep
+    ring-of-rings drained by a dedicated reader thread in async mode),
+    donation and sharding bookkeeping, host re-chunk buffers, and the
+    seal/drain/snapshot/restore mechanics of live lane migration.  Pure
+    mechanism: it can run any lane in any bucket, but never decides which.
+  * ``repro.serve.scheduler`` — the control plane.  Lane->bucket placement
+    as *policy*: ``policy="static"`` (default) freezes the PR 4 behavior —
+    a lane stays in the bucket chosen at ``connect()`` for life, buckets
+    pump in ascending order; ``policy="adaptive"`` re-budgets lanes from
+    their *measured* event rate, the serving-layer twin of the paper's
+    DVFS controller (which re-picks the operating point from the same
+    3-counter estimate): lanes whose events-per-half-window drift past
+    hysteresis thresholds for ``migrate_patience`` consecutive drains are
+    live-migrated to the better-fitting bucket, and buckets with the
+    deepest re-chunk backlog pump first when a round budget is in force.
 
-  * ``on_overflow="drain"`` (default): the host drains the ring before a
-    block that would not fit — lossless backpressure, the fetch cadence
-    simply rises toward once per round under sustained overload.
-  * ``on_overflow="drop_oldest"``: a full ring overwrites its oldest slot
-    and counts the loss (``stats()['ring_dropped_rounds']``) — the
-    real-time mode where stale results are worth less than fresh latency.
-    Host accounting skips dropped rounds; the in-state device accumulators
-    (kept/energy/latency) remain complete either way.
+The façade wires them together: ``connect`` asks the scheduler where a
+lane lands, ``pump``/``flush`` pass the scheduler's bucket order to the
+runtime (which first applies any staged migrations, under the pump
+token), and every drain observation (``poll``/``flush``) feeds the
+scheduler one rate sample per lane — a returned migration target is
+staged with the runtime (seal + drain + donation-proof snapshot) and
+restored into the new bucket at the start of the next pump pass.
 
-**Async double-buffered drain** (``drain_mode="async"``, the default).
-Each bucket owns a *pair* of device rings: the pump pushes rounds into the
-live ring, and draining *seals* it — an atomic swap that installs the empty
-spare ring as the new live one and hands the sealed ring to a dedicated
-reader thread, which performs the blocking ``device_get`` off the pump
-thread.  ``_execute_block`` keeps scanning rounds into the live ring while
-the reader drains the sealed one, luvHarris-style (fast event-rate thread
-decoupled from the slower readout thread).  ``drain_mode="sync"`` keeps the
-single-ring PR 3 behavior (the fetch blocks the calling thread) — both
-modes are bit-exact against each other and against ``run_pipeline``
-(property-tested).  Reader-thread exceptions propagate to the next public
-API caller (the same contract ``PrefetchingLoader`` carries); the pool then
-stays failed, since its device rings may hold unfetchable rounds.
+Migration is invisible to results: a lane served with ``policy=
+"adaptive"`` is bit-exact (scores, kept, final TOS/SAE/LUT, float64
+energy books) vs the same stream served fixed in each bucket and
+rebucketed at the same boundaries — no round is lost, duplicated, or
+reordered, and nothing recompiles (``executors_compiled_once()`` holds
+through migrations: at most one K-block and one 1-round executable per
+bucket, ever).  ``stats(lane)['migration_log']`` is not needed for that
+replay — the per-lane ``migrations`` count and the runtime's
+``lane.migration_log`` give the exact event boundaries (property-tested
+against ``StreamingDetector.rebucket`` replays).
 
-``poll()`` is the readout point: it seals the lane's bucket ring and (by
-default) waits for the reader to finish draining it, so its results match
-the synchronous mode exactly; ``poll(lane, wait=False)`` returns only what
-the reader has already drained — the fully non-blocking readout.  Update
-cadence (``pump``) and readout cadence (``poll``) are decoupled either way.
-
-**Thread safety.**  One re-entrant lock guards ALL pool mutable state
-(host mirrors, lane buffers, result queues, ring bindings); every public
-method acquires it, and the reader thread acquires it only to distribute
-fetched results and recycle the sealed ring — the blocking ``device_get``
-itself runs unlocked, so it overlaps with the pump.  ``connect`` /
-``disconnect`` / ``feed`` / ``pump`` / ``poll`` / ``flush`` / ``stats`` may
-therefore be called from any mix of threads; calls serialize on the lock
-(coarse-grained by design — correctness first, the fetch is the only part
-worth overlapping).  Waits use a condition variable on the same lock, so a
-pump blocked on the spare ring releases it for the reader.
-
-**Sharded lanes.**  With more than one local device (or ``shard=True``),
-the lane axis of the stacked state, the chunk inputs, and the rings is
-split across a 1-D ``('lanes',)`` mesh via ``repro.compat.shard_map`` +
-``repro.launch.sharding`` helpers.  The detector step has no cross-lane
-term, so the sharded executor needs zero collectives; lane->device
-placement is pure data (lane i is a fixed offset of the stacked pytree), so
-join/leave still never recompiles.  Single-device hosts fall back
-transparently (``shard="auto"``).
-
-**Chunk-size buckets.**  Heterogeneous sensors don't share one global chunk
-size: the pool compiles one executor pair per chunk-size *bucket* (e.g.
-256/512/1024) and ``connect(chunk=...)`` places the session in the smallest
-bucket that fits.  A lane in bucket ``c`` behaves bit-identically to a
-standalone session (and to ``run_pipeline``) at ``chunk=c``.
-
-**Donation.**  On accelerator backends the per-bucket executors donate the
-stacked lane states and the live ring (``donate_argnames``), so XLA updates
-both in place instead of holding two copies of the pool's HBM working set.
-The decision is keyed off the *actual placement* of the stacked state
-(``repro.core.state.donation_ok``), never ``jax.default_backend()`` — a
-CPU-resident pool under a GPU default backend must not donate host buffers.
-Double buffering is what makes donation and async drain compose: the sealed
-ring the reader is fetching is never the buffer the executor donates.
-
-Membership remains an *active-mask lane system*: a ``(capacity,)`` bool
-mask plus per-lane dummy chunks — data, never a shape — so a changing
-session population NEVER triggers a recompile.  Inactive/starved lanes ride
-along as masked no-ops: their carried state stays byte-identical (PRNG key
-and chunk cursor included), so a lane pausing costs nothing and resumes
-exactly where it left off.
-
-Per lane the pool keeps exactly what a ``StreamingDetector`` keeps: a host
-re-chunking buffer (int64 timestamps, per-lane timebase), float64 energy
-accounting, and a result queue.  A lane's outputs are bit-identical to a
-standalone session — and hence to ``run_pipeline`` on that lane's full
-stream — regardless of how other lanes interleave, how many rounds share a
-block, how lanes are sharded, or which drain mode runs (property-tested).
+Everything below the policy line — ring-buffered multi-round pump, async
+N-deep drain, overflow policies, sharded lanes, chunk-size buckets,
+donation, the active-mask membership system, thread safety — is the
+PR 3/4 machinery, documented in ``repro.serve.runtime``.  A lane's
+outputs remain bit-identical to a standalone ``StreamingDetector`` and to
+``run_pipeline`` on that lane's full stream regardless of interleaving,
+K-blocking, sharding, drain mode, or migrations (property-tested).
 
 Like ``StreamingDetector``, only fixed-Vdd and online-DVFS configs are
 servable (host-precomputed DVFS needs future knowledge).
 """
 from __future__ import annotations
 
-import queue
-import threading
-import time
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import PartitionSpec as P
-
-from repro import compat
-from repro.core import dvfs as dvfs_mod
-from repro.core import pipeline as pipeline_mod
-from repro.core import state as state_mod
-from repro.launch import sharding as sharding_mod
-from repro.serve import streaming as streaming_mod
+from repro.serve import scheduler as scheduler_mod
+from repro.serve.runtime import PoolRuntime
 
 __all__ = ["DetectorPool"]
 
-_OVERFLOW_POLICIES = ("drain", "drop_oldest")
-_DRAIN_MODES = ("sync", "async")
-_STOP = object()          # reader-thread shutdown sentinel
-
-
-def _mask_tree(active, new_tree, old_tree):
-    """Per-leaf select: lane i takes ``new`` iff ``active[i]``."""
-    def sel(new, old):
-        m = active.reshape((-1,) + (1,) * (new.ndim - 1))
-        return jnp.where(m, new, old)
-
-    return jax.tree.map(sel, new_tree, old_tree)
-
-
-class _Lane:
-    """Host-side bookkeeping for one pool slot."""
-
-    __slots__ = ("bucket", "buf_xy", "buf_ts", "base", "results", "n_events",
-                 "n_chunks", "kept_total", "energy_pj", "latency_ns",
-                 "vdd_trace")
-
-    def __init__(self, bucket: int):
-        self.bucket = bucket
-        self.buf_xy = np.zeros((0, 2), np.int32)
-        self.buf_ts = np.zeros((0,), np.int64)
-        self.base: Optional[int] = None
-        self.results: list[tuple[np.ndarray, np.ndarray]] = []
-        self.n_events = 0
-        self.n_chunks = 0
-        self.kept_total = 0
-        self.energy_pj = 0.0
-        self.latency_ns = 0.0
-        self.vdd_trace: list[float] = []
-
-
-class _Round:
-    """One collected pump round (host arrays, lane-stacked) for a bucket."""
-
-    __slots__ = ("xy", "ts", "valid", "mask", "n_valid")
-
-    def __init__(self, xy, ts, valid, mask, n_valid):
-        self.xy, self.ts, self.valid = xy, ts, valid
-        self.mask, self.n_valid = mask, n_valid
-
 
 class DetectorPool:
-    """Fixed-capacity pool of detector sessions behind per-bucket K-round
-    ring-buffered executors (at most one K-block and one 1-round executable
-    per chunk-size bucket), with an async double-buffered drain runtime."""
+    """Fixed-capacity pool of detector sessions: a ``PoolRuntime`` data
+    plane driven by a placement scheduler (``policy="static"`` freezes
+    PR 4 behavior; ``policy="adaptive"`` adds rate-aware live bucket
+    migration and starved-first pump order)."""
 
     def __init__(self, cfg, capacity: int, *, seed: int = 0,
                  ring_rounds: int = 8,
                  buckets: Optional[tuple] = None,
                  on_overflow: str = "drain",
                  shard: object = "auto",
-                 drain_mode: str = "async"):
-        streaming_mod._check_streamable(cfg)
-        if capacity < 1:
-            raise ValueError("capacity must be >= 1")
-        if ring_rounds < 1:
-            raise ValueError("ring_rounds must be >= 1")
-        if on_overflow not in _OVERFLOW_POLICIES:
-            raise ValueError(
-                f"on_overflow must be one of {_OVERFLOW_POLICIES}, "
-                f"got {on_overflow!r}"
-            )
-        if drain_mode not in _DRAIN_MODES:
-            raise ValueError(
-                f"drain_mode must be one of {_DRAIN_MODES}, "
-                f"got {drain_mode!r}"
-            )
-        if buckets is None:
-            buckets = (cfg.chunk,)
-        buckets = tuple(sorted({int(b) for b in buckets}))
-        if any(b < 1 for b in buckets):
-            raise ValueError("chunk buckets must be positive")
-        self._cfg = cfg
-        self._capacity = capacity
-        self._seed = seed
-        self._ring_rounds = ring_rounds
-        self._buckets = buckets
-        self._overflow = on_overflow
-        self._drain_mode = drain_mode
-        self._online = bool(cfg.dvfs and cfg.dvfs_online)
-        self._tab = dvfs_mod.op_point_table(cfg.dvfs_cfg)
-        if not self._online:
-            r = state_mod.chunk_input_riders(
-                1, np.full((1,), cfg.vdd, np.float64), cfg
-            )
-            self._riders = tuple(np.float32(x[0]) for x in r)
+                 drain_mode: str = "async",
+                 ring_depth: int = 2,
+                 policy: str = "static",
+                 migrate_patience: int = 3,
+                 migrate_margin: float = 0.9,
+                 scheduler: Optional[scheduler_mod.StaticScheduler] = None):
+        self._rt = PoolRuntime(
+            cfg, capacity, seed=seed, ring_rounds=ring_rounds,
+            buckets=buckets, on_overflow=on_overflow, shard=shard,
+            drain_mode=drain_mode, ring_depth=ring_depth,
+        )
+        if scheduler is not None:
+            if tuple(scheduler.buckets) != self._rt.buckets:
+                raise ValueError(
+                    f"scheduler buckets {scheduler.buckets} do not match "
+                    f"pool buckets {self._rt.buckets}"
+                )
+            self._sched = scheduler
         else:
-            z = np.float32(0.0)
-            self._riders = (z, z, z)
-
-        # -- one lock for ALL pool mutable state; the condition variable
-        # shares it so waiters (spare ring, drain barrier) release it for
-        # the reader thread.  Public methods acquire it; the reader takes
-        # it only to distribute/recycle — never across a device fetch.
-        self._lock = threading.RLock()
-        self._cv = threading.Condition(self._lock)
-        self._closed = False
-
-        # -- lane sharding: a 1-D 'lanes' mesh over the local devices -------
-        n_dev = len(jax.local_devices())
-        self._mesh = None
-        if shard is True or (shard == "auto" and n_dev > 1):
-            self._mesh = sharding_mod.local_lane_mesh()
-        # Physical lane count: padded so the lane axis splits evenly; the
-        # padding lanes are permanently inactive (masked, never connectable).
-        self._phys = (
-            sharding_mod.lane_padded_capacity(capacity, self._mesh)
-            if self._mesh is not None else capacity
-        )
-
-        self._states = jax.tree.map(
-            lambda *xs: jnp.stack(xs),
-            *[state_mod.detector_init(cfg, seed=seed + i)
-              for i in range(self._phys)],
-        )
-        if self._mesh is not None:
-            self._states = sharding_mod.lane_put(self._mesh, self._states, 0)
-        self._active = np.zeros((self._phys,), bool)
-        self._lanes: list[Optional[_Lane]] = [None] * self._phys
-
-        # Donation keyed off the stacked state's actual placement (never
-        # jax.default_backend()); a no-op on CPU-resident pools.
-        self._donate = state_mod.donation_ok(self._states)
-
-        # -- per-bucket runtime: ring pair + K-round / 1-round executors ----
-        self._rings: dict[int, state_mod.RingState] = {}    # live ring
-        self._spare: dict[int, Optional[state_mod.RingState]] = {}
-        self._exec: dict[int, object] = {}      # K-block executor
-        self._exec1: dict[int, object] = {}     # 1-round fast path (K > 1)
-        self._ring_count: dict[int, int] = {}   # live-ring occupancy mirror
-        self._dropped_dev: dict[int, int] = {}  # drops confirmed by fetches
-        self._dropped_pred: dict[int, int] = {} # predicted, not yet fetched
-        self._sealed_rounds: dict[int, int] = {}  # handed to reader, undrained
-        self._inflight: dict[int, int] = {}       # sealed rings being fetched
-        for b in buckets:
-            self._rings[b] = self._make_ring(b)
-            self._spare[b] = (
-                self._make_ring(b) if drain_mode == "async" else None
+            self._sched = scheduler_mod.make_scheduler(
+                policy, self._rt.buckets, patience=migrate_patience,
+                down_margin=migrate_margin,
             )
-            self._exec[b] = self._build_executor(b)
-            if ring_rounds > 1:
-                self._exec1[b] = self._build_single_executor(b)
-            self._ring_count[b] = 0
-            self._dropped_dev[b] = 0
-            self._dropped_pred[b] = 0
-            self._sealed_rounds[b] = 0
-            self._inflight[b] = 0
+        self._cfg = cfg
+        # Migration targets decided during non-blocking polls: staging
+        # seals+drains (it may wait on the reader), which poll(wait=False)
+        # must never do — so the decision parks here and is staged at the
+        # next blocking fold point (pump/flush).  Guarded by the runtime
+        # lock.
+        self._deferred: dict[int, int] = {}
 
-        self._host_fetches = 0     # blocking result transfers (ring drains)
-        self._rounds_executed = 0
-        self._pump_drain_wait = 0.0  # s the pump spent on drains/seals
-        self._pump_forced_drains = 0  # mid-pump makes-room events
-        # One pump at a time: _seal_ring can wait on the cv (releasing the
-        # lock) AFTER chunks were popped into a pending block, so a second
-        # concurrent pump could otherwise collect and execute LATER chunks
-        # first — folding a lane's stream out of order.  The token
-        # serializes whole pump passes; poll/feed/stats still interleave.
-        self._pump_busy = False
-
-        # -- async drain: dedicated reader thread + sealed-ring queue -------
-        self._reader_exc: Optional[BaseException] = None
-        self._sealed_q: Optional[queue.Queue] = None
-        self._reader: Optional[threading.Thread] = None
-        if drain_mode == "async":
-            self._sealed_q = queue.Queue()
-            self._reader = threading.Thread(
-                target=self._reader_loop, daemon=True,
-                name="DetectorPool-reader",
-            )
-            self._reader.start()
-
-        def _reset(states, lane, fresh):
-            return jax.tree.map(
-                lambda arr, f: arr.at[lane].set(f), states, fresh
-            )
-
-        self._vreset = jax.jit(_reset)
-
-        half = cfg.dvfs_cfg.half_us
-
-        def _rebase(states, lane, delta):
-            one = jax.tree.map(lambda a: a[lane], states)
-            one = streaming_mod.shift_state_base(one, delta, half)
-            return jax.tree.map(
-                lambda arr, f: arr.at[lane].set(f), states, one
-            )
-
-        self._vrebase = jax.jit(_rebase)
+    # Data-plane attributes (including the ``_``-prefixed internals the
+    # test suites witness: ``_states``, ``_rings``, ``_donate``, ``_phys``,
+    # ``_reader``, ...) resolve on the runtime.
+    def __getattr__(self, name):
+        return getattr(object.__getattribute__(self, "_rt"), name)
 
     # -- lifecycle ----------------------------------------------------------
 
     def close(self) -> None:
-        """Stop the reader thread (async mode).  Rounds still sealed or
-        buffered on device are abandoned — ``flush`` the lanes first if
+        """Stop the runtime (reader thread included).  Rounds still sealed
+        or buffered on device are abandoned — ``flush`` the lanes first if
         their results matter.  Idempotent; the pool rejects further use."""
-        with self._lock:
-            if self._closed:
-                return
-            self._closed = True
-        if self._reader is not None:
-            self._sealed_q.put(_STOP)
-            self._reader.join(timeout=30)
+        self._rt.close()
 
     def __enter__(self) -> "DetectorPool":
         return self
@@ -334,227 +122,42 @@ class DetectorPool:
     def __exit__(self, *exc) -> None:
         self.close()
 
-    def __del__(self):  # best-effort: don't leak the reader thread
-        try:
-            self.close()
-        except Exception:
-            pass
-
-    def _check_open(self) -> None:
-        if self._closed:
-            raise RuntimeError("DetectorPool is closed")
-        if self._reader_exc is not None:
-            raise RuntimeError(
-                "DetectorPool reader thread failed; results since the last "
-                "successful drain are lost and the pool cannot continue"
-            ) from self._reader_exc
-
-    # -- executors ----------------------------------------------------------
-
-    def _ring_specs(self, bucket: int):
-        """(states_spec, ring_spec, out_shardings) for the sharded paths."""
-        from jax.sharding import NamedSharding
-
-        lane0 = sharding_mod.lane_spec(0)
-        lane1 = sharding_mod.lane_spec(1)
-        states_spec = jax.tree.map(lambda _: lane0, self._states)
-        ring_spec = state_mod.RingState(
-            scores=lane1, keep=lane1, n_kept=lane1, vdd_idx=lane1,
-            n_valid=lane1, mask=lane1, head=P(), count=P(), dropped=P(),
-        )
-        # Pin output shardings to the same spelling lane_put uses for the
-        # inputs: jit would otherwise canonicalize equivalent specs (e.g.
-        # P(None,'lanes') -> P('lanes') on a 1-wide mesh) and the changed
-        # cache key would recompile the second block.
-        out_shardings = (
-            jax.tree.map(
-                lambda a: NamedSharding(self._mesh, lane0), self._states
-            ),
-            jax.tree.map(
-                lambda a: NamedSharding(
-                    self._mesh, lane1 if a.ndim >= 2 else P()
-                ),
-                self._rings[bucket],
-            ),
-        )
-        return states_spec, ring_spec, out_shardings
-
-    def _build_executor(self, bucket: int):
-        """Jitted K-round block: ``lax.scan`` of (vmapped step + mask select
-        + ring push) over ``ring_rounds`` rounds.  Padded rounds are skipped
-        by a round-level ``lax.cond`` — block occupancy is data, so this
-        compiles exactly once per bucket (the compile-count witness).  When
-        a mesh is configured, the whole block runs under ``shard_map`` with
-        the lane axis split across devices (no collectives: the step has no
-        cross-lane term).  On accelerator-resident pools the stacked states
-        and the live ring are donated (in-place update; the sealed ring the
-        reader holds is a different buffer, so async drain stays safe)."""
-        tcfg = pipeline_mod._trace_cfg(self._cfg, chunk=bucket)
-        donate = ("states", "ring") if self._donate else ()
-
-        def block(states, ring, chunks, mask, n_valid, round_active):
-            def body(carry, xs):
-                states, ring = carry
-                chunk, m, nv, act = xs
-
-                def real(states, ring):
-                    new_states, outs = jax.vmap(
-                        lambda s, c: state_mod.detector_step(tcfg, s, c)
-                    )(states, chunk)
-                    states = _mask_tree(m, new_states, states)
-                    ring = state_mod.ring_push(ring, outs, m, nv, act)
-                    return states, ring
-
-                states, ring = jax.lax.cond(
-                    act, real, lambda s, r: (s, r), states, ring
-                )
-                return (states, ring), None
-
-            (states, ring), _ = jax.lax.scan(
-                body, (states, ring), (chunks, mask, n_valid, round_active)
-            )
-            return states, ring
-
-        if self._mesh is not None:
-            states_spec, ring_spec, out_shardings = self._ring_specs(bucket)
-            lane1 = sharding_mod.lane_spec(1)
-            block = compat.shard_map(
-                block,
-                mesh=self._mesh,
-                in_specs=(states_spec, ring_spec,
-                          jax.tree.map(lambda _: lane1,
-                                       self._chunk_spec_template()),
-                          lane1, lane1, P()),
-                out_specs=(states_spec, ring_spec),
-                check_vma=False,
-            )
-            return jax.jit(block, out_shardings=out_shardings,
-                           donate_argnames=donate)
-        return jax.jit(block, donate_argnames=donate)
-
-    def _build_single_executor(self, bucket: int):
-        """Jitted 1-round block: the H2D fast path for sparse arrivals.
-
-        Same math as one active row of the K-block (vmapped step + mask
-        select + ring push), but the input shapes drop the leading K axis —
-        a block with exactly one ready round uploads ``(phys, chunk)``
-        bytes instead of ``(K, phys, chunk)``, so a trickle of events no
-        longer pays K rounds of padding per dispatch.  The price is a
-        second executable per bucket (also compiled exactly once; see
-        ``compile_cache_sizes``)."""
-        tcfg = pipeline_mod._trace_cfg(self._cfg, chunk=bucket)
-        donate = ("states", "ring") if self._donate else ()
-
-        def single(states, ring, chunk, mask, n_valid):
-            new_states, outs = jax.vmap(
-                lambda s, c: state_mod.detector_step(tcfg, s, c)
-            )(states, chunk)
-            states = _mask_tree(mask, new_states, states)
-            ring = state_mod.ring_push(
-                ring, outs, mask, n_valid, jnp.bool_(True)
-            )
-            return states, ring
-
-        if self._mesh is not None:
-            states_spec, ring_spec, out_shardings = self._ring_specs(bucket)
-            lane0 = sharding_mod.lane_spec(0)
-            single = compat.shard_map(
-                single,
-                mesh=self._mesh,
-                in_specs=(states_spec, ring_spec,
-                          jax.tree.map(lambda _: lane0,
-                                       self._chunk_spec_template()),
-                          lane0, lane0),
-                out_specs=(states_spec, ring_spec),
-                check_vma=False,
-            )
-            return jax.jit(single, out_shardings=out_shardings,
-                           donate_argnames=donate)
-        return jax.jit(single, donate_argnames=donate)
-
-    @staticmethod
-    def _chunk_spec_template():
-        """A ChunkInput-shaped tree to map PartitionSpecs over."""
-        return state_mod.ChunkInput(
-            xy=0, ts=0, valid=0, ber=0, energy_coef=0, latency_coef=0
-        )
-
-    def _make_ring(self, bucket: int) -> state_mod.RingState:
-        ring = state_mod.ring_init(self._ring_rounds, self._phys, bucket)
-        if self._mesh is not None:
-            ring = sharding_mod.lane_put(self._mesh, ring, 1)
-        return ring
-
-    def _reset_ring(self, ring: state_mod.RingState) -> state_mod.RingState:
-        """Mark a drained ring empty (count/dropped -> 0) without touching
-        its data buffers.  The zeroed scalars must match the old scalars'
-        commitment: sharded rings are committed NamedSharding arrays (a bare
-        jnp scalar would flip the executor's cache key and recompile),
-        unsharded rings are uncommitted (a device_put scalar would do the
-        same flip)."""
-        zero_c = jnp.int32(0)
-        zero_d = jnp.int32(0)
-        if self._mesh is not None:
-            zero_c = jax.device_put(zero_c, ring.count.sharding)
-            zero_d = jax.device_put(zero_d, ring.dropped.sharding)
-        return ring._replace(count=zero_c, dropped=zero_d)
-
     # -- membership ---------------------------------------------------------
 
     def connect(self, *, seed: Optional[int] = None,
                 chunk: Optional[int] = None) -> int:
         """Claim a free lane for a new camera session; returns the lane id.
 
-        ``chunk`` requests a per-session chunk size: the lane lands in the
-        smallest configured bucket that fits (>= the request) and behaves
-        bit-identically to ``run_pipeline`` at that bucket's chunk size.
-        Default: the pool config's ``cfg.chunk``.
-        """
-        with self._lock:
-            self._check_open()
-            want = self._cfg.chunk if chunk is None else int(chunk)
-            bucket = next((b for b in self._buckets if b >= want), None)
-            if bucket is None:
-                raise ValueError(
-                    f"no chunk bucket fits {want} (buckets: {self._buckets})"
-                )
-            free = np.flatnonzero(~self._active[:self._capacity])
-            if not free.size:
-                raise RuntimeError(f"pool full ({self._capacity} sessions)")
-            lane = int(free[0])
-            fresh = state_mod.detector_init(
-                self._cfg, seed=self._seed + lane if seed is None else seed
+        ``chunk`` requests a per-session chunk size: the scheduler places
+        the lane in the smallest configured bucket that fits (>= the
+        request) and the lane behaves bit-identically to ``run_pipeline``
+        at that bucket's chunk size.  Default: the pool config's
+        ``cfg.chunk``.  Under ``policy="adaptive"`` the placement is only
+        the starting point — the lane follows its measured rate."""
+        want = self._cfg.chunk if chunk is None else int(chunk)
+        bucket = self._sched.place(want)
+        if bucket is None:
+            raise ValueError(
+                f"no chunk bucket fits {want} (buckets: {self._rt.buckets})"
             )
-            self._states = self._place(
-                self._vreset(self._states, jnp.int32(lane), fresh)
-            )
-            self._active[lane] = True
-            self._lanes[lane] = _Lane(bucket)
-            return lane
+        lane = self._rt.connect(bucket, seed)
+        self._sched.forget(lane)          # recycled slot: fresh streaks
+        with self._rt._lock:              # _deferred is lock-guarded
+            self._deferred.pop(lane, None)
+        return lane
 
     def disconnect(self, lane: int) -> dict:
         """Release a lane; returns its final accounting stats.  Undrained
-        ring slots referencing the lane are drained first (waiting for the
-        reader in async mode), so the stats are complete and a later
-        session reusing the slot inherits nothing."""
-        with self._lock:
-            self._check_open()
-            self._check_lane(lane)
-            # take the pump token: a pump parked on the spare-ring wait
-            # still holds collected-but-unexecuted rounds for this lane —
-            # retiring it now would silently drop them
-            self._acquire_pump()
-            try:
-                self._drain_bucket(self._lanes[lane].bucket)
-                out, dev = self._lane_stats_locked(lane)
-                self._active[lane] = False
-                self._lanes[lane] = None
-            finally:
-                self._release_pump()
-        # device fetch after release (same discipline as stats())
-        return self._finish_stats(out, dev)
+        ring slots are drained first and any staged (snapshot-taken,
+        restore-pending) migration for the lane is discarded — the slot's
+        next tenant inherits nothing."""
+        out = self._rt.disconnect(lane)
+        self._sched.forget(lane)
+        with self._rt._lock:              # _deferred is lock-guarded
+            self._deferred.pop(lane, None)
+        return out
 
-    def warmup(self, xy: np.ndarray, ts_us: np.ndarray) -> None:
+    def warmup(self, xy, ts_us) -> None:
         """Compile every executor shape for the default bucket outside any
         timed region: a scratch lane pumps a multi-round block (the K-block
         executor) and then a lone round (the 1-round fast path), then
@@ -564,8 +167,10 @@ class DetectorPool:
         recompiles, so one warmup covers the pool's lifetime (per bucket:
         re-call with ``connect(chunk=...)``-sized data if you time other
         buckets)."""
+        import numpy as np
+
         lane = self.connect()
-        b = self._lanes[lane].bucket
+        b = self._rt._lanes[lane].bucket
         xy = np.asarray(xy)
         ts = np.asarray(ts_us)
         self.feed(lane, xy[:3 * b], ts[:3 * b])
@@ -574,588 +179,118 @@ class DetectorPool:
         self.pump()
         self.disconnect(lane)
 
-    @property
-    def capacity(self) -> int:
-        return self._capacity
+    # -- serving ------------------------------------------------------------
 
-    @property
-    def drain_mode(self) -> str:
-        return self._drain_mode
-
-    @property
-    def active_lanes(self) -> list[int]:
-        return [int(i) for i in np.flatnonzero(self._active)]
-
-    @property
-    def buckets(self) -> tuple:
-        return self._buckets
-
-    @property
-    def host_fetches(self) -> int:
-        """Blocking result transfers so far (one per ring drain; counted on
-        the reader thread in async mode)."""
-        return self._host_fetches
-
-    @property
-    def rounds_executed(self) -> int:
-        return self._rounds_executed
-
-    def compile_cache_size(self) -> int:
-        """Total executor executables across buckets and shapes (grows only
-        when a new bucket or block shape is first exercised; membership
-        churn must not grow it)."""
-        return sum(n for d in self.compile_cache_sizes().values()
-                   for n in d.values())
-
-    def compile_cache_sizes(self) -> dict:
-        """Per-bucket executable counts, per block shape:
-        ``{bucket: {"block": n, "single": n}}``.  Each entry must stay <= 1
-        — occupancy and membership are data, so nothing recompiles; the
-        ``"single"`` entry (the 1-round H2D fast path, built when
-        ``ring_rounds > 1``) is simply absent until first used."""
-        out: dict = {}
-        for b in self._buckets:
-            d = {"block": self._exec[b]._cache_size()}
-            if b in self._exec1:
-                d["single"] = self._exec1[b]._cache_size()
-            out[b] = d
-        return out
-
-    def executors_compiled_once(self) -> bool:
-        """The churn witness: every executor (per bucket, per block shape)
-        has compiled at most one executable."""
-        return all(n <= 1 for d in self.compile_cache_sizes().values()
-                   for n in d.values())
-
-    # -- feeding ------------------------------------------------------------
-
-    def feed(self, lane: int, xy: np.ndarray, ts_us: np.ndarray) -> None:
+    def feed(self, lane: int, xy, ts_us) -> None:
         """Buffer a slab for one session (any length, time-sorted)."""
-        with self._lock:
-            self._check_open()
-            self._check_lane(lane)
-            ln = self._lanes[lane]
-            xy = np.asarray(xy, np.int32).reshape(-1, 2)
-            ts = np.asarray(ts_us, np.int64).reshape(-1)
-            if not ts.size:
-                return
-            if ln.base is None:
-                ln.base = streaming_mod.session_base_us(
-                    int(ts[0]), self._cfg
-                )
-            ln.buf_xy = np.concatenate([ln.buf_xy, xy], 0)
-            ln.buf_ts = np.concatenate([ln.buf_ts, ts], 0)
-            ln.n_events += int(ts.size)
+        self._rt.feed(lane, xy, ts_us)
 
     def pump(self) -> int:
         """Fold every buffered full chunk through the ring executors, K
         rounds per device dispatch, until no active lane has a full chunk
-        left.  Returns the number of rounds executed.  Results stay in the
-        on-device rings until ``poll``/``flush`` (or a backpressure
-        drain/seal under the ``"drain"`` policy) hands them to a fetch."""
+        left.  Staged migrations apply first; buckets pump in the
+        scheduler's order.  Returns the number of rounds executed."""
         return self.pump_rounds(None)
 
     def pump_rounds(self, max_rounds: Optional[int] = None) -> int:
         """Like ``pump`` but stops after at most ``max_rounds`` rounds
-        (``None`` = run until dry).  K-round blocks with one fetch per drain
-        are bit-exact vs the same rounds pumped one at a time.  Concurrent
-        pumpers serialize on the pump token (round order must match the
-        sequential path even while a seal waits on the spare ring)."""
-        with self._lock:
-            self._check_open()
-            self._acquire_pump()
-            try:
-                total = 0
-                for bucket in self._buckets:
-                    left = None if max_rounds is None else max_rounds - total
-                    if left is not None and left <= 0:
-                        break
-                    total += self._pump_bucket(bucket, max_rounds=left)
-                return total
-            finally:
-                self._release_pump()
+        (``None`` = run until dry).  Under a budget the scheduler's pump
+        order matters: the adaptive policy folds the most backlogged
+        (starved) bucket first, the static policy keeps ascending bucket
+        order — with no budget every bucket pumps until dry either way, so
+        the order never changes results."""
+        self._stage_deferred()
+        return self._rt.pump_pass(self._order(), max_rounds)
 
-    def flush(self, lane: int) -> tuple[np.ndarray, np.ndarray]:
+    def flush(self, lane: int):
         """Drain the lane's full chunks, then its padded partial tail, and
-        return everything not yet polled.  A lane with an empty re-chunk
-        buffer just drains its ring (no extra round is scheduled)."""
-        with self._lock:
-            self._check_open()
-            self._check_lane(lane)
-            self._acquire_pump()
-            try:
-                for bucket in self._buckets:
-                    self._pump_bucket(bucket)          # until dry
-                ln = self._lanes[lane]
-                if ln.buf_ts.size:
-                    self._pump_bucket(ln.bucket, max_rounds=1,
-                                      flush_lane=lane)
-            finally:
-                self._release_pump()
-            return self.poll(lane)
-
-    def _acquire_pump(self) -> None:
-        """Take the pump token (caller holds the lock); waits out any pump
-        in flight so two pumpers cannot interleave their round order."""
-        while self._pump_busy:
-            self._check_open()
-            self._cv.wait()
-        self._pump_busy = True
-
-    def _release_pump(self) -> None:
-        self._pump_busy = False
-        self._cv.notify_all()
-
-    def poll(self, lane: int, *,
-             wait: bool = True) -> tuple[np.ndarray, np.ndarray]:
-        """Drain the lane's accumulated (scores, kept), in stream order.
-
-        This is the readout (and backpressure) point.  In ``"sync"`` mode
-        it fetches the lane's bucket ring inline — ONE blocking transfer
-        for everything buffered since the last drain, however many pump
-        rounds that spans.  In ``"async"`` mode it *seals* the live ring
-        (atomic swap with the empty spare; the reader thread performs the
-        fetch) and, with ``wait=True`` (default), blocks until the reader
-        has drained it — same results as sync, fetched off this thread.
-        ``wait=False`` never blocks on a transfer in either mode: async
-        seals only when the spare ring is free (never joining an in-flight
-        fetch) and returns what the reader has already drained; sync skips
-        the inline fetch entirely and returns what earlier drains (e.g.
-        backpressure pre-drains) already distributed.  The rest arrives on
-        a later poll.  Under ``on_overflow="drop_oldest"``, rounds lost to
-        overflow are simply absent here and counted in
-        ``stats()['ring_dropped_rounds']``."""
-        with self._lock:
-            self._check_open()
-            self._check_lane(lane)
-            bucket = self._lanes[lane].bucket
-            self._drain_bucket(bucket, wait=wait, block=wait)
-            ln = self._lanes[lane]
-            if not ln.results:
-                return (np.zeros((0,), np.float32), np.zeros((0,), bool))
-            scores = np.concatenate(
-                [r[0] for r in ln.results]
-            ).astype(np.float32)
-            kept = np.concatenate([r[1] for r in ln.results]).astype(bool)
-            ln.results.clear()
-            return scores, kept
-
-    def stats(self, lane: int) -> dict:
-        """Lane accounting: host float64 books plus the lane's on-device
-        accumulators (f32/i32 — aggregatable without per-chunk host sync),
-        plus ring/bucket occupancy so callers can observe backpressure.
-
-        Host books (``kept_total``/``energy_pj``/...) cover *drained*
-        rounds only.  ``ring_rounds_buffered`` says how many rounds sit in
-        the live on-device ring; ``ring_sealed_rounds`` how many are sealed
-        and in the reader's hands but not yet drained (async mode — the
-        reader lag for this bucket; always 0 in sync mode).
-        ``ring_dropped_rounds`` is drops confirmed by fetches plus drops
-        predicted for rounds still on device (the host mirror is audited
-        against the device counter at every fetch).  The ``device_*``
-        accumulators are always complete — including rounds dropped under
-        ``drop_oldest``."""
-        with self._lock:
-            self._check_open()
-            self._check_lane(lane)
-            out, dev = self._lane_stats_locked(lane)
-        return self._finish_stats(out, dev)
-
-    def _lane_stats_locked(self, lane: int):
-        """Host-side stats dict + *pre-indexed* device scalars (caller
-        holds the lock).  Indexing only dispatches; the blocking
-        ``device_get`` belongs in ``_finish_stats``, AFTER the lock is
-        released — the lock discipline keeps blocking transfers off the
-        pool lock, so a monitoring thread syncing on a deep pump queue
-        cannot stall the pump, the reader, or other callers (``stats`` and
-        ``disconnect`` both follow this split)."""
-        ln = self._lanes[lane]
-        n_scored = max(ln.kept_total, 1)
-        dev = (
-            self._states.kept_total[lane],
-            self._states.energy_pj[lane],
-            self._states.latency_ns[lane],
-        )
-        b = ln.bucket
-        out = {
-            "lane": lane,
-            "bucket": b,
-            "n_events": ln.n_events,
-            "n_chunks": ln.n_chunks,
-            "kept_total": ln.kept_total,
-            "energy_pj": ln.energy_pj,
-            "latency_ns_per_event": ln.latency_ns / n_scored,
-            "buffered": int(ln.buf_ts.size),
-            "ring_capacity": self._ring_rounds,
-            "ring_rounds_buffered": self._ring_count[b],
-            "ring_sealed_rounds": self._sealed_rounds[b],
-            "ring_dropped_rounds": (
-                self._dropped_dev[b] + self._dropped_pred[b]
-            ),
-        }
-        return out, dev
-
-    @staticmethod
-    def _finish_stats(out: dict, dev) -> dict:
-        dev_kept, dev_energy, dev_latency = jax.device_get(dev)
-        out["device_kept_total"] = int(dev_kept)
-        out["device_energy_pj"] = float(dev_energy)
-        out["device_latency_ns"] = float(dev_latency)
+        return everything not yet polled.  Counts as a drain observation
+        for the adaptive scheduler (like ``poll``)."""
+        self._stage_deferred()
+        out = self._rt.flush(lane, self._order())
+        self._observe(lane)
         return out
 
+    def poll(self, lane: int, *, wait: bool = True):
+        """Drain the lane's accumulated (scores, kept), in stream order —
+        the readout/backpressure point (see ``PoolRuntime.poll`` for the
+        sync/async and wait semantics).  Each poll is one drain
+        observation for the scheduler: under ``policy="adaptive"`` a lane
+        whose measured rate has outgrown (or undershot) its bucket for
+        ``migrate_patience`` consecutive rate windows gets its migration
+        staged here (or, for ``wait=False`` — which must never block —
+        parked and staged at the next pump/flush), to apply at the next
+        pump pass."""
+        out = self._rt.poll(lane, wait=wait)
+        self._observe(lane, allow_stage=wait)
+        return out
+
+    def _order(self) -> tuple:
+        """The scheduler's bucket pump order.  The backlog walk holds the
+        runtime lock over every active lane, so it only runs for policies
+        that declare they use it (static ignores its argument)."""
+        backlog = (self._rt.bucket_backlog_rounds()
+                   if self._sched.needs_backlog else {})
+        return self._sched.order(backlog)
+
+    def _observe(self, lane: int, *, allow_stage: bool = True) -> None:
+        """Feed the scheduler one rate sample for ``lane`` and act on any
+        migration it decides: stage it (blocking contexts), or park it in
+        ``_deferred`` when the caller must not block (staging seals and
+        drains the lane's bucket, which can wait on the reader thread).
+        Serialized under the runtime lock so concurrent pollers cannot
+        interleave scheduler state.  Skipped wholesale for policies that
+        never migrate (the default static path pays zero per-poll cost)."""
+        if not self._sched.needs_observation:
+            return
+        with self._rt._lock:
+            if not self._rt._active[lane]:
+                return                      # retired by a concurrent caller
+            ln = self._rt._lanes[lane]
+            target = self._sched.observe(
+                lane, ln.bucket, self._rt.lane_halfwin_rate(lane),
+                win=ln.r_win,
+            )
+            if target is None or target == ln.bucket:
+                return
+            if allow_stage:
+                self._deferred.pop(lane, None)
+                self._rt.stage_migration(lane, target)
+            else:
+                self._deferred[lane] = target
+
+    def _stage_deferred(self) -> None:
+        """Stage migration decisions parked by non-blocking polls (we are
+        now at a fold point that may block anyway)."""
+        if not self._deferred:
+            return
+        with self._rt._lock:
+            for lane, target in list(self._deferred.items()):
+                # pop, not del: a concurrent disconnect can clear the
+                # entry while a prior iteration's staging waits on the
+                # pump token (cv waits release the lock)
+                self._deferred.pop(lane, None)
+                if (self._rt._active[lane]
+                        and self._rt._lanes[lane].bucket != target):
+                    self._rt.stage_migration(lane, target)
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def policy(self) -> str:
+        return self._sched.policy
+
+    @property
+    def scheduler(self) -> scheduler_mod.StaticScheduler:
+        return self._sched
+
+    def stats(self, lane: int) -> dict:
+        """Lane accounting + rate/migration view; see ``PoolRuntime.stats``."""
+        return self._rt.stats(lane)
+
     def pool_stats(self) -> dict:
-        """Pool-level runtime counters (no device sync): fetch/round ratio,
-        per-bucket ring occupancy and drop counts, reader lag, pump drain
-        wait, sharding layout.
-
-        ``pump_drain_wait_s`` is the wall time the *pump* path spent making
-        ring room before a block (sync: the inline fetch+distribute; async:
-        the seal — usually just an enqueue, plus any wait for the spare
-        ring).  ``reader_lag_rounds`` counts rounds sealed to the reader
-        thread but not yet drained; ``dropped_rounds_confirmed`` is the
-        device-counter ground truth accumulated over fetches (equals
-        ``dropped_rounds_total`` once everything has been drained — the
-        host-mirror audit).  ``pump_forced_drains`` counts mid-pump
-        makes-room events (ring occupancy forced a drain/seal before a
-        block) — the reliable backpressure signal; in async mode
-        ``host_fetches`` deltas are NOT, since fetches are counted when the
-        reader completes them, not when the pump seals."""
-        with self._lock:
-            self._check_open()
-            exe = self.compile_cache_sizes()
-            return {
-                "capacity": self._capacity,
-                "active": len(self.active_lanes),
-                "sharded": self._mesh is not None,
-                "devices": (int(self._mesh.devices.size)
-                            if self._mesh is not None else 1),
-                "ring_rounds": self._ring_rounds,
-                "on_overflow": self._overflow,
-                "drain_mode": self._drain_mode,
-                "host_fetches": self._host_fetches,
-                "rounds_executed": self._rounds_executed,
-                "pump_drain_wait_s": self._pump_drain_wait,
-                "pump_forced_drains": self._pump_forced_drains,
-                "reader_lag_rounds": sum(self._sealed_rounds.values()),
-                "dropped_rounds_total": (
-                    sum(self._dropped_dev.values())
-                    + sum(self._dropped_pred.values())
-                ),
-                "dropped_rounds_confirmed": sum(self._dropped_dev.values()),
-                "buckets": {
-                    b: {
-                        "ring_rounds_buffered": self._ring_count[b],
-                        "ring_sealed_rounds": self._sealed_rounds[b],
-                        "ring_dropped_rounds": (
-                            self._dropped_dev[b] + self._dropped_pred[b]
-                        ),
-                        "executables": exe[b],
-                    }
-                    for b in self._buckets
-                },
-            }
-
-    # -- internals ----------------------------------------------------------
-
-    def _check_lane(self, lane: int) -> None:
-        if not (0 <= lane < self._capacity) or not self._active[lane]:
-            raise KeyError(f"lane {lane} is not an active session")
-
-    def _place(self, states):
-        """Pin the lane sharding after a per-lane host update (`_vreset` /
-        `_vrebase` infer their own output sharding, which on a 1-wide mesh
-        can canonicalize away the NamedSharding and flip the executor's
-        cache key).  No-op (no copy) when already placed, or unsharded."""
-        if self._mesh is None:
-            return states
-        return sharding_mod.lane_put(self._mesh, states, 0)
-
-    def _pump_bucket(self, bucket: int, max_rounds: Optional[int] = None,
-                     flush_lane: Optional[int] = None) -> int:
-        """Run this bucket's ready rounds through its K-round executor,
-        cutting a block early when a lane needs a timebase rebase (the hop
-        applies between blocks; rebases are ~hourly per session)."""
-        executed = 0
-        while True:
-            pending: list[_Round] = []
-            stop = False
-            while len(pending) < self._ring_rounds:
-                if max_rounds is not None and \
-                        executed + len(pending) >= max_rounds:
-                    stop = True
-                    break
-                rnd = self._collect_round(
-                    bucket, flush_lane, allow_rebase=not pending
-                )
-                if rnd == "rebase":
-                    break          # cut the block; rebase opens the next one
-                if rnd is None:
-                    stop = True
-                    break
-                pending.append(rnd)
-            if pending:
-                self._execute_block(bucket, pending)
-                executed += len(pending)
-            if stop or not pending:
-                break
-        return executed
-
-    def _collect_round(self, bucket: int, flush_lane: Optional[int],
-                       allow_rebase: bool):
-        """Pop one round's worth of chunks from this bucket's lane buffers.
-
-        Returns a ``_Round``, ``None`` (nothing ready), or ``"rebase"``
-        (a lane needs a timebase hop first but the current block already
-        holds rounds — the caller must execute them before the hop so the
-        round order matches the sequential path bit-for-bit)."""
-        ready: list[tuple[int, int]] = []
-        for lane in self.active_lanes:
-            ln = self._lanes[lane]
-            if ln.bucket != bucket:
-                continue
-            if ln.buf_ts.size >= bucket:
-                ready.append((lane, bucket))
-            elif lane == flush_lane and ln.buf_ts.size:
-                ready.append((lane, int(ln.buf_ts.size)))
-        if not ready:
-            return None
-
-        hops_needed = []
-        for lane, n in ready:
-            ln = self._lanes[lane]
-            new_base, hops = streaming_mod.plan_rebase(
-                ln.base, ln.buf_ts[:n], self._cfg
-            )
-            if hops:
-                hops_needed.append((lane, new_base, hops))
-        if hops_needed and not allow_rebase:
-            return "rebase"
-        for lane, new_base, hops in hops_needed:
-            self._lanes[lane].base = new_base
-            for hop in hops:
-                self._states = self._place(self._vrebase(
-                    self._states, jnp.int32(lane), np.int32(hop)
-                ))
-
-        xy = np.zeros((self._phys, bucket, 2), np.int32)
-        ts = np.zeros((self._phys, bucket), np.int32)
-        valid = np.zeros((self._phys, bucket), bool)
-        mask = np.zeros((self._phys,), bool)
-        n_valid = np.zeros((self._phys,), np.int32)
-        for lane, n in ready:
-            ln = self._lanes[lane]
-            xy[lane, :n] = ln.buf_xy[:n]
-            ts64 = np.full((bucket,), ln.buf_ts[min(n, ln.buf_ts.size) - 1],
-                           np.int64)
-            ts64[:n] = ln.buf_ts[:n]
-            ts[lane] = (ts64 - ln.base).astype(np.int32)
-            valid[lane, :n] = True
-            mask[lane] = True
-            n_valid[lane] = n
-            ln.buf_xy = ln.buf_xy[n:]
-            ln.buf_ts = ln.buf_ts[n:]
-        return _Round(xy, ts, valid, mask, n_valid)
-
-    def _execute_block(self, bucket: int, rounds: list) -> None:
-        """Launch one executor block.  Shapes never depend on occupancy:
-        a block with 2..K ready rounds runs the fixed (K, ...) executor
-        (padding skipped by the round-level cond); a block with exactly ONE
-        round runs the 1-round executor, whose inputs drop the K axis — so
-        sparse arrivals upload (phys, chunk) H2D bytes, not (K, phys,
-        chunk).  Under the ``"drain"`` policy a block that would overflow
-        the live ring first drains it (sync: inline fetch; async: seal to
-        the reader and keep pumping — the wait, if any, is for the spare
-        ring, not for PCIe)."""
-        k = self._ring_rounds
-        n = len(rounds)
-        if self._overflow == "drain" and self._ring_count[bucket] + n > k:
-            t0 = time.perf_counter()
-            self._drain_bucket(bucket, wait=False)
-            self._pump_drain_wait += time.perf_counter() - t0
-            self._pump_forced_drains += 1
-
-        if n == 1 and bucket in self._exec1:
-            rnd = rounds[0]
-            chunks = state_mod.ChunkInput(
-                xy=jnp.asarray(rnd.xy),
-                ts=jnp.asarray(rnd.ts),
-                valid=jnp.asarray(rnd.valid),
-                ber=jnp.full((self._phys,), self._riders[0], jnp.float32),
-                energy_coef=jnp.full(
-                    (self._phys,), self._riders[1], jnp.float32
-                ),
-                latency_coef=jnp.full(
-                    (self._phys,), self._riders[2], jnp.float32
-                ),
-            )
-            self._states, self._rings[bucket] = self._exec1[bucket](
-                self._states, self._rings[bucket], chunks,
-                jnp.asarray(rnd.mask), jnp.asarray(rnd.n_valid),
-            )
-        else:
-            xy = np.zeros((k, self._phys, bucket, 2), np.int32)
-            ts = np.zeros((k, self._phys, bucket), np.int32)
-            valid = np.zeros((k, self._phys, bucket), bool)
-            mask = np.zeros((k, self._phys), bool)
-            n_valid = np.zeros((k, self._phys), np.int32)
-            for i, rnd in enumerate(rounds):
-                xy[i], ts[i], valid[i] = rnd.xy, rnd.ts, rnd.valid
-                mask[i], n_valid[i] = rnd.mask, rnd.n_valid
-            round_active = np.arange(k) < n
-
-            chunks = state_mod.ChunkInput(
-                xy=jnp.asarray(xy),
-                ts=jnp.asarray(ts),
-                valid=jnp.asarray(valid),
-                ber=jnp.full((k, self._phys), self._riders[0], jnp.float32),
-                energy_coef=jnp.full(
-                    (k, self._phys), self._riders[1], jnp.float32
-                ),
-                latency_coef=jnp.full(
-                    (k, self._phys), self._riders[2], jnp.float32
-                ),
-            )
-            self._states, self._rings[bucket] = self._exec[bucket](
-                self._states, self._rings[bucket], chunks,
-                jnp.asarray(mask), jnp.asarray(n_valid),
-                jnp.asarray(round_active),
-            )
-        c = self._ring_count[bucket]
-        self._ring_count[bucket] = min(c + n, k)
-        self._dropped_pred[bucket] += max(0, c + n - k)
-        self._rounds_executed += n
-
-    # -- draining: sync (inline fetch) and async (seal to the reader) -------
-
-    def _drain_bucket(self, bucket: int, *, wait: bool = True,
-                      block: bool = True) -> None:
-        """Get this bucket's buffered rounds on their way to the host.  In
-        sync mode that is the inline blocking fetch; in async mode it seals
-        the live ring to the reader and, with ``wait=True``, blocks until
-        the reader has drained everything sealed for this bucket.
-        ``block=False`` is the non-blocking poll path: sync skips the
-        inline fetch entirely, async skips the seal when the spare ring is
-        unavailable."""
-        if self._drain_mode == "sync":
-            if block:
-                self._drain_ring(bucket)
-        else:
-            self._seal_ring(bucket, block=block)
-            if wait:
-                self._wait_bucket_drained(bucket)
-
-    def _drain_ring(self, bucket: int) -> None:
-        """Sync mode: ONE blocking fetch of the live ring on the calling
-        thread, then distribute and mark the ring empty."""
-        if self._ring_count[bucket] == 0:
-            return
-        ring = jax.device_get(self._rings[bucket])
-        self._host_fetches += 1
-        self._distribute(bucket, ring)
-        self._ring_count[bucket] = 0
-        self._rings[bucket] = self._reset_ring(self._rings[bucket])
-
-    def _seal_ring(self, bucket: int, *, block: bool = True) -> None:
-        """Async mode's atomic swap point (caller holds the lock): install
-        the empty spare as the live ring and hand the sealed one to the
-        reader thread.  If the spare is still in the reader's hands (it is
-        double, not N, buffered) this waits on the condition variable —
-        releasing the lock so the reader can distribute and recycle — or,
-        with ``block=False``, simply returns (the live ring keeps
-        accumulating; a later poll seals it)."""
-        if self._ring_count[bucket] == 0:
-            return
-        while self._spare[bucket] is None:
-            if not block:
-                return
-            self._check_open()
-            self._cv.wait()
-            # re-validate after the wakeup: another thread (a concurrent
-            # poll, or the pump making room) may have sealed meanwhile —
-            # sealing an empty ring would cost a pointless blocking fetch
-            # and inflate the rounds-per-fetch witness
-            if self._ring_count[bucket] == 0:
-                return
-        sealed = self._rings[bucket]
-        self._rings[bucket] = self._spare[bucket]
-        self._spare[bucket] = None
-        self._sealed_rounds[bucket] += self._ring_count[bucket]
-        self._inflight[bucket] += 1
-        self._ring_count[bucket] = 0
-        self._sealed_q.put((bucket, sealed))
-
-    def _wait_bucket_drained(self, bucket: int) -> None:
-        """Block (releasing the lock) until the reader has fetched and
-        distributed every ring sealed for this bucket."""
-        while self._inflight[bucket] > 0:
-            self._check_open()
-            self._cv.wait()
-
-    def _fetch_ring(self, ring: state_mod.RingState):
-        """The blocking device transfer (reader thread, no lock held).
-        Split out so tests can inject fetch failures."""
-        return jax.device_get(ring)
-
-    def _reader_loop(self) -> None:
-        """Async drain: fetch sealed rings FIFO (order preserves the
-        sequential result order bit-for-bit), distribute under the lock,
-        recycle the buffer as the bucket's spare.  Any exception is stored
-        and re-raised to the next public API caller."""
-        while True:
-            item = self._sealed_q.get()
-            if item is _STOP:
-                return
-            bucket, sealed = item
-            try:
-                host = self._fetch_ring(sealed)
-            except BaseException as e:
-                with self._cv:
-                    self._reader_exc = e
-                    self._cv.notify_all()
-                return
-            with self._cv:
-                try:
-                    self._host_fetches += 1
-                    self._distribute(bucket, host)
-                    self._spare[bucket] = self._reset_ring(sealed)
-                    self._sealed_rounds[bucket] = max(
-                        0, self._sealed_rounds[bucket] - int(host.count)
-                    )
-                    self._inflight[bucket] -= 1
-                except BaseException as e:
-                    self._reader_exc = e
-                    self._cv.notify_all()
-                    return
-                self._cv.notify_all()
-
-    def _distribute(self, bucket: int, ring) -> None:
-        """Walk a fetched ring's undrained slots (oldest first), hand each
-        lane its results, fold the float64 accounting, and audit the drop
-        mirror against the device counter (caller holds the lock; ``ring``
-        is host data)."""
-        n_slots = ring.scores.shape[0]
-        for slot in state_mod.ring_slot_order(ring.head, ring.count, n_slots):
-            for lane in np.flatnonzero(ring.mask[slot]):
-                ln = self._lanes[int(lane)]
-                if ln is None:
-                    continue
-                n = int(ring.n_valid[slot, lane])
-                streaming_mod.account_chunk(
-                    ln, ring.n_kept[slot, lane], ring.vdd_idx[slot, lane],
-                    online=self._online, tab=self._tab,
-                    fixed_vdd=self._cfg.vdd,
-                )
-                # copy: a view would pin the whole fetched (R, lanes,
-                # chunk) buffer in the lane queue until the lane polls
-                ln.results.append((
-                    ring.scores[slot, lane, :n].astype(np.float32,
-                                                       copy=True),
-                    ring.keep[slot, lane, :n].astype(bool, copy=True),
-                ))
-        # The device counter is ground truth: drops confirmed by this fetch
-        # move from the predicted mirror to the confirmed tally.  (Each ring
-        # resets its dropped counter when recycled, so per-fetch counts are
-        # disjoint and the two host tallies always sum to the truth.)
-        d = int(ring.dropped)
-        self._dropped_dev[bucket] += d
-        self._dropped_pred[bucket] -= d
+        """Pool-level runtime counters plus the active policy; see
+        ``PoolRuntime.pool_stats`` for the field glossary."""
+        out = self._rt.pool_stats()
+        out["policy"] = self._sched.policy
+        return out

@@ -1,0 +1,1359 @@
+"""Data plane of the multi-camera pool: the device-resident runtime.
+
+``PoolRuntime`` owns every *mechanism* the serving layer needs — compiled
+per-bucket executors, the on-device result rings and their reader thread,
+lane state/donation bookkeeping, host re-chunk buffers, and the migration
+machinery — and exposes them as verbs (``connect`` a lane into a bucket,
+``pump_pass`` an ordered list of buckets, ``stage_migration`` /
+apply-on-next-pump).  It never decides *which* bucket a lane belongs in or
+*when* to migrate: those are policy, owned by ``repro.serve.scheduler``
+and wired to this runtime by the ``DetectorPool`` façade.  The split is
+the serving-layer analogue of the paper's controller/datapath separation —
+the DVFS controller picks the operating point, the macro just runs it —
+and is what lets multi-host sharding and new placement policies land
+without touching the executor/ring/thread machinery below.
+
+Mechanisms (PR 3 + PR 4, generalized here):
+
+**Ring-buffered multi-round pump.**  Rounds execute in jitted K-round
+``lax.scan`` blocks whose per-round outputs (scores, keep masks, kept
+counts, chunk metadata) land in a fixed-capacity on-device result ring
+(``repro.core.state.RingState``).  The host performs ONE blocking fetch
+per drain — K back-to-back rounds cost one sync, not K.  Padded no-op
+rounds inside a block are skipped by a round-level ``lax.cond`` (data, not
+shape); a block with exactly ONE ready round takes a second, 1-round
+executor whose input shapes drop the K axis entirely.  Each bucket
+therefore compiles at most two executables (K-block + 1-round), each
+exactly once — membership churn and live migration must not grow either
+(asserted in CI).  Overflow policy:
+
+  * ``on_overflow="drain"`` (default): the host drains the ring before a
+    block that would not fit — lossless backpressure.
+  * ``on_overflow="drop_oldest"``: a full ring overwrites its oldest slot
+    and counts the loss; the in-state device accumulators stay complete.
+
+**N-deep ring-of-rings** (``ring_depth``, default 2).  In async drain mode
+each bucket owns ``ring_depth`` device rings: one live, the rest a spare
+pool.  Draining *seals* the live ring — an atomic swap that installs a
+spare as the new live ring and hands the sealed one to a dedicated reader
+thread, which performs the blocking ``device_get`` off the pump thread.
+Depth 2 is PR 4's double buffer (the pump waits only when the reader still
+holds the one spare); deeper rings absorb longer fetch stalls — up to
+``ring_depth - 1`` seals can be in flight before a pump blocks — at the
+cost of one more ring's device memory per extra slot.  All depths are
+bit-exact vs each other and vs sync mode (property-tested for depth 2 and
+3); ``drain_mode="sync"`` keeps the single-ring PR 3 inline fetch.
+
+**Live bucket migration mechanics.**  ``stage_migration(lane, bucket)``
+seals+drains the lane's current bucket (so every pumped round is
+distributed in order), then takes a donation-proof host snapshot of the
+lane's ``DetectorState`` (owned deep copies — the same discipline as
+``StreamingDetector.snapshot``).  The staged move applies at the start of
+the next pump pass, under the pump token, before any round is collected:
+the snapshot is ``device_put`` back into the stacked lane state (an owned
+copy, re-placed on the lane mesh) and the lane's bucket flips — its
+re-chunk buffer simply re-chunks at the new size from the next collect.
+Nothing recompiles (both buckets' executors already exist; the restore
+rides the same jitted per-lane reset ``connect`` uses) and no round is
+lost or duplicated (the drain barrier plus the no-pump window between
+stage and apply guarantee the snapshot can never go stale).
+``disconnect`` of a lane mid-migration discards the staged snapshot — a
+reused slot must inherit nothing.
+
+**Rate observation.**  The runtime measures, policy consumes: ``feed``
+folds each slab's timestamps into a per-lane host twin of the paper's
+3-counter DVFS rate estimator (same half-window binning, same saturating
+read, same float32 divide — ``repro.core.state.rate_estimate_eps``), so
+``lane_halfwin_rate`` is available for any config without a device sync;
+in online-DVFS mode the device estimator carried in ``DetectorState`` is
+surfaced through ``stats()`` as ``device_events_per_s_est`` and equals the
+host twin (property-tested).  ``h2d_event_slots``/``h2d_valid_events``
+count uploaded vs useful chunk slots — the padding-bytes witness the
+migration benchmarks gate.
+
+Sharded lanes, donation, thread safety, and the active-mask membership
+system are unchanged from PR 3/4 — see the class docstrings below and
+``repro.serve.pool`` for the façade-level contracts.
+"""
+from __future__ import annotations
+
+import collections
+import queue
+import threading
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core import dvfs as dvfs_mod
+from repro.core import pipeline as pipeline_mod
+from repro.core import state as state_mod
+from repro.launch import sharding as sharding_mod
+from repro.serve import streaming as streaming_mod
+
+__all__ = ["PoolRuntime"]
+
+_OVERFLOW_POLICIES = ("drain", "drop_oldest")
+_DRAIN_MODES = ("sync", "async")
+_STOP = object()          # reader-thread shutdown sentinel
+
+# H2D bytes per uploaded chunk slot: xy int32 pair + ts int32 + valid bool.
+EVENT_SLOT_BYTES = 13
+
+
+def _mask_tree(active, new_tree, old_tree):
+    """Per-leaf select: lane i takes ``new`` iff ``active[i]``."""
+    def sel(new, old):
+        m = active.reshape((-1,) + (1,) * (new.ndim - 1))
+        return jnp.where(m, new, old)
+
+    return jax.tree.map(sel, new_tree, old_tree)
+
+
+class _Lane:
+    """Host-side bookkeeping for one pool slot."""
+
+    __slots__ = ("bucket", "buf_xy", "buf_ts", "base", "results", "n_events",
+                 "n_chunks", "kept_total", "energy_pj", "latency_ns",
+                 "vdd_trace", "events_folded", "migrations", "migration_log",
+                 "r_win", "r_cur", "r_p1", "r_p2")
+
+    def __init__(self, bucket: int):
+        self.bucket = bucket
+        self.buf_xy = np.zeros((0, 2), np.int32)
+        self.buf_ts = np.zeros((0,), np.int64)
+        self.base: Optional[int] = None
+        self.results: list[tuple[np.ndarray, np.ndarray]] = []
+        self.n_events = 0
+        self.n_chunks = 0
+        self.kept_total = 0
+        self.energy_pj = 0.0
+        self.latency_ns = 0.0
+        self.vdd_trace: list[float] = []
+        self.events_folded = 0          # events consumed by executed rounds
+        self.migrations = 0             # bucket moves applied to this lane
+        # (events_folded, from_bucket, to_bucket) per applied migration —
+        # the replay oracle: a StreamingDetector fed the same stream and
+        # rebucket()ed at each logged boundary reproduces this lane's
+        # outputs bit-for-bit.
+        self.migration_log: list[tuple[int, int, int]] = []
+        # Host twin of the 3-counter DVFS rate estimator (half-window
+        # binning of *fed* timestamps; same rotation the device step does).
+        self.r_win = 0
+        self.r_cur = 0
+        self.r_p1 = 0
+        self.r_p2 = 0
+
+    def rate_update(self, ts: np.ndarray, half: int) -> None:
+        """Fold one time-sorted slab into the rate twin (vectorized; only
+        the last three half-windows can ever be read again, exactly like
+        ``dvfs.online_vdd_from_chunk_ts``)."""
+        w = ts // half
+        wl = int(w[-1])
+        n0 = int(np.count_nonzero(w == wl))
+        n1 = int(np.count_nonzero(w == wl - 1))
+        n2 = int(np.count_nonzero(w == wl - 2))
+        d = wl - self.r_win
+        if d == 0:
+            cur, p1, p2 = self.r_cur + n0, self.r_p1 + n1, self.r_p2 + n2
+        elif d == 1:
+            cur, p1, p2 = n0, self.r_cur + n1, self.r_p1 + n2
+        elif d == 2:
+            cur, p1, p2 = n0, n1, self.r_cur + n2
+        else:
+            cur, p1, p2 = n0, n1, n2
+        self.r_win, self.r_cur, self.r_p1, self.r_p2 = wl, cur, p1, p2
+
+
+class _Round:
+    """One collected pump round (host arrays, lane-stacked) for a bucket."""
+
+    __slots__ = ("xy", "ts", "valid", "mask", "n_valid")
+
+    def __init__(self, xy, ts, valid, mask, n_valid):
+        self.xy, self.ts, self.valid = xy, ts, valid
+        self.mask, self.n_valid = mask, n_valid
+
+
+class PoolRuntime:
+    """Mechanics of a fixed-capacity camera pool: per-bucket K-round
+    ring-buffered executors (at most one K-block and one 1-round
+    executable per chunk-size bucket), an async N-deep ring-of-rings drain
+    runtime, and staged lane migration.  Placement decisions come from
+    outside (``DetectorPool`` + a scheduler); this class only refuses the
+    physically impossible.
+
+    **Thread safety.**  One re-entrant lock guards ALL mutable state (host
+    mirrors, lane buffers, result queues, ring bindings, staged
+    migrations); every public method acquires it, and the reader thread
+    acquires it only to distribute fetched results and recycle sealed
+    rings — the blocking ``device_get`` itself runs unlocked, so it
+    overlaps with the pump.  Waits use a condition variable on the same
+    lock.  A pump token serializes whole pump passes (a seal waiting on a
+    spare ring releases the lock mid-block; two pumpers must not
+    interleave their round order).
+
+    **Membership** is an active-mask lane system: a ``(capacity,)`` bool
+    mask plus per-lane dummy chunks — data, never a shape — so session
+    churn and bucket migration NEVER trigger a recompile.  Per lane the
+    runtime keeps exactly what a ``StreamingDetector`` keeps (host
+    re-chunk buffer, int64 timebase, float64 energy books, result queue),
+    so a lane's outputs are bit-identical to a standalone session and to
+    ``run_pipeline`` on its full stream (property-tested).
+
+    **Sharded lanes.**  With more than one local device (or
+    ``shard=True``) the lane axis of the stacked state, chunk inputs, and
+    rings splits across a 1-D ``('lanes',)`` mesh (zero collectives;
+    placement is data).  **Donation**: on accelerator-resident pools the
+    executors donate the stacked states and the live ring, keyed off the
+    actual placement (``repro.core.state.donation_ok``), never the default
+    backend; sealed rings in the reader's hands are never the donated
+    buffer.
+    """
+
+    def __init__(self, cfg, capacity: int, *, seed: int = 0,
+                 ring_rounds: int = 8,
+                 buckets: Optional[tuple] = None,
+                 on_overflow: str = "drain",
+                 shard: object = "auto",
+                 drain_mode: str = "async",
+                 ring_depth: int = 2):
+        streaming_mod._check_streamable(cfg)
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        if ring_rounds < 1:
+            raise ValueError("ring_rounds must be >= 1")
+        if on_overflow not in _OVERFLOW_POLICIES:
+            raise ValueError(
+                f"on_overflow must be one of {_OVERFLOW_POLICIES}, "
+                f"got {on_overflow!r}"
+            )
+        if drain_mode not in _DRAIN_MODES:
+            raise ValueError(
+                f"drain_mode must be one of {_DRAIN_MODES}, "
+                f"got {drain_mode!r}"
+            )
+        if ring_depth < 2:
+            raise ValueError(
+                "ring_depth must be >= 2 (one live ring plus at least one "
+                "spare for the reader)"
+            )
+        if buckets is None:
+            buckets = (cfg.chunk,)
+        buckets = tuple(sorted({int(b) for b in buckets}))
+        if any(b < 1 for b in buckets):
+            raise ValueError("chunk buckets must be positive")
+        self._cfg = cfg
+        self._capacity = capacity
+        self._seed = seed
+        self._ring_rounds = ring_rounds
+        self._buckets = buckets
+        self._overflow = on_overflow
+        self._drain_mode = drain_mode
+        self._ring_depth = ring_depth
+        self._half_us = int(cfg.dvfs_cfg.half_us)
+        self._online = bool(cfg.dvfs and cfg.dvfs_online)
+        self._tab = dvfs_mod.op_point_table(cfg.dvfs_cfg)
+        if not self._online:
+            r = state_mod.chunk_input_riders(
+                1, np.full((1,), cfg.vdd, np.float64), cfg
+            )
+            self._riders = tuple(np.float32(x[0]) for x in r)
+        else:
+            z = np.float32(0.0)
+            self._riders = (z, z, z)
+
+        # -- one lock for ALL pool mutable state; the condition variable
+        # shares it so waiters (spare ring, drain barrier) release it for
+        # the reader thread.  Public methods acquire it; the reader takes
+        # it only to distribute/recycle — never across a device fetch.
+        self._lock = threading.RLock()
+        self._cv = threading.Condition(self._lock)
+        self._closed = False
+
+        # -- lane sharding: a 1-D 'lanes' mesh over the local devices -------
+        n_dev = len(jax.local_devices())
+        self._mesh = None
+        if shard is True or (shard == "auto" and n_dev > 1):
+            self._mesh = sharding_mod.local_lane_mesh()
+        # Physical lane count: padded so the lane axis splits evenly; the
+        # padding lanes are permanently inactive (masked, never connectable).
+        self._phys = (
+            sharding_mod.lane_padded_capacity(capacity, self._mesh)
+            if self._mesh is not None else capacity
+        )
+
+        self._states = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[state_mod.detector_init(cfg, seed=seed + i)
+              for i in range(self._phys)],
+        )
+        if self._mesh is not None:
+            self._states = sharding_mod.lane_put(self._mesh, self._states, 0)
+        self._active = np.zeros((self._phys,), bool)
+        self._lanes: list[Optional[_Lane]] = [None] * self._phys
+
+        # Staged migrations: lane -> (host state snapshot, target bucket).
+        # Applied at the start of the next pump pass; discarded by
+        # disconnect (a reused slot must inherit nothing).
+        self._staged: dict[int, tuple[dict, int]] = {}
+        self._migrations = 0
+
+        # Donation keyed off the stacked state's actual placement (never
+        # jax.default_backend()); a no-op on CPU-resident pools.
+        self._donate = state_mod.donation_ok(self._states)
+
+        # -- per-bucket runtime: ring-of-rings + K-round/1-round executors --
+        self._rings: dict[int, state_mod.RingState] = {}    # live ring
+        self._spares: dict[int, collections.deque] = {}
+        self._exec: dict[int, object] = {}      # K-block executor
+        self._exec1: dict[int, object] = {}     # 1-round fast path (K > 1)
+        self._ring_count: dict[int, int] = {}   # live-ring occupancy mirror
+        self._dropped_dev: dict[int, int] = {}  # drops confirmed by fetches
+        self._dropped_pred: dict[int, int] = {} # predicted, not yet fetched
+        self._sealed_rounds: dict[int, int] = {}  # handed to reader, undrained
+        self._inflight: dict[int, int] = {}       # sealed rings being fetched
+        for b in buckets:
+            self._rings[b] = self._make_ring(b)
+            self._spares[b] = collections.deque(
+                self._make_ring(b) for _ in
+                range(ring_depth - 1 if drain_mode == "async" else 0)
+            )
+            self._exec[b] = self._build_executor(b)
+            if ring_rounds > 1:
+                self._exec1[b] = self._build_single_executor(b)
+            self._ring_count[b] = 0
+            self._dropped_dev[b] = 0
+            self._dropped_pred[b] = 0
+            self._sealed_rounds[b] = 0
+            self._inflight[b] = 0
+
+        self._host_fetches = 0     # blocking result transfers (ring drains)
+        self._rounds_executed = 0
+        self._pump_drain_wait = 0.0  # s the pump spent on drains/seals
+        self._pump_forced_drains = 0  # mid-pump makes-room events
+        self._h2d_slots = 0        # chunk slots uploaded (incl. padding)
+        self._h2d_valid = 0        # valid events among them
+        # One pump at a time: _seal_ring can wait on the cv (releasing the
+        # lock) AFTER chunks were popped into a pending block, so a second
+        # concurrent pump could otherwise collect and execute LATER chunks
+        # first — folding a lane's stream out of order.  The token
+        # serializes whole pump passes; poll/feed/stats still interleave.
+        self._pump_busy = False
+
+        # -- async drain: dedicated reader thread + sealed-ring queue -------
+        self._reader_exc: Optional[BaseException] = None
+        self._sealed_q: Optional[queue.Queue] = None
+        self._reader: Optional[threading.Thread] = None
+        if drain_mode == "async":
+            self._sealed_q = queue.Queue()
+            self._reader = threading.Thread(
+                target=self._reader_loop, daemon=True,
+                name="PoolRuntime-reader",
+            )
+            self._reader.start()
+
+        def _reset(states, lane, fresh):
+            return jax.tree.map(
+                lambda arr, f: arr.at[lane].set(f), states, fresh
+            )
+
+        self._vreset = jax.jit(_reset)
+
+        half = cfg.dvfs_cfg.half_us
+
+        def _rebase(states, lane, delta):
+            one = jax.tree.map(lambda a: a[lane], states)
+            one = streaming_mod.shift_state_base(one, delta, half)
+            return jax.tree.map(
+                lambda arr, f: arr.at[lane].set(f), states, one
+            )
+
+        self._vrebase = jax.jit(_rebase)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def close(self) -> None:
+        """Stop the reader thread (async mode).  Rounds still sealed or
+        buffered on device are abandoned — ``flush`` the lanes first if
+        their results matter.  Idempotent; the runtime rejects further use.
+        """
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+        if self._reader is not None:
+            self._sealed_q.put(_STOP)
+            self._reader.join(timeout=30)
+
+    def __del__(self):  # best-effort: don't leak the reader thread
+        try:
+            self.close()
+        except Exception:
+            pass
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("DetectorPool is closed")
+        if self._reader_exc is not None:
+            raise RuntimeError(
+                "DetectorPool reader thread failed; results since the last "
+                "successful drain are lost and the pool cannot continue"
+            ) from self._reader_exc
+
+    # -- executors ----------------------------------------------------------
+
+    def _ring_specs(self, bucket: int):
+        """(states_spec, ring_spec, out_shardings) for the sharded paths."""
+        from jax.sharding import NamedSharding
+
+        lane0 = sharding_mod.lane_spec(0)
+        lane1 = sharding_mod.lane_spec(1)
+        states_spec = jax.tree.map(lambda _: lane0, self._states)
+        ring_spec = state_mod.RingState(
+            scores=lane1, keep=lane1, n_kept=lane1, vdd_idx=lane1,
+            n_valid=lane1, mask=lane1, head=P(), count=P(), dropped=P(),
+        )
+        # Pin output shardings to the same spelling lane_put uses for the
+        # inputs: jit would otherwise canonicalize equivalent specs (e.g.
+        # P(None,'lanes') -> P('lanes') on a 1-wide mesh) and the changed
+        # cache key would recompile the second block.
+        out_shardings = (
+            jax.tree.map(
+                lambda a: NamedSharding(self._mesh, lane0), self._states
+            ),
+            jax.tree.map(
+                lambda a: NamedSharding(
+                    self._mesh, lane1 if a.ndim >= 2 else P()
+                ),
+                self._rings[bucket],
+            ),
+        )
+        return states_spec, ring_spec, out_shardings
+
+    def _build_executor(self, bucket: int):
+        """Jitted K-round block: ``lax.scan`` of (vmapped step + mask select
+        + ring push) over ``ring_rounds`` rounds.  Padded rounds are skipped
+        by a round-level ``lax.cond`` — block occupancy is data, so this
+        compiles exactly once per bucket (the compile-count witness).  When
+        a mesh is configured, the whole block runs under ``shard_map`` with
+        the lane axis split across devices (no collectives: the step has no
+        cross-lane term).  On accelerator-resident pools the stacked states
+        and the live ring are donated (in-place update; the sealed rings the
+        reader holds are different buffers, so async drain stays safe)."""
+        tcfg = pipeline_mod._trace_cfg(self._cfg, chunk=bucket)
+        donate = ("states", "ring") if self._donate else ()
+
+        def block(states, ring, chunks, mask, n_valid, round_active):
+            def body(carry, xs):
+                states, ring = carry
+                chunk, m, nv, act = xs
+
+                def real(states, ring):
+                    new_states, outs = jax.vmap(
+                        lambda s, c: state_mod.detector_step(tcfg, s, c)
+                    )(states, chunk)
+                    states = _mask_tree(m, new_states, states)
+                    ring = state_mod.ring_push(ring, outs, m, nv, act)
+                    return states, ring
+
+                states, ring = jax.lax.cond(
+                    act, real, lambda s, r: (s, r), states, ring
+                )
+                return (states, ring), None
+
+            (states, ring), _ = jax.lax.scan(
+                body, (states, ring), (chunks, mask, n_valid, round_active)
+            )
+            return states, ring
+
+        if self._mesh is not None:
+            states_spec, ring_spec, out_shardings = self._ring_specs(bucket)
+            lane1 = sharding_mod.lane_spec(1)
+            block = compat.shard_map(
+                block,
+                mesh=self._mesh,
+                in_specs=(states_spec, ring_spec,
+                          jax.tree.map(lambda _: lane1,
+                                       self._chunk_spec_template()),
+                          lane1, lane1, P()),
+                out_specs=(states_spec, ring_spec),
+                check_vma=False,
+            )
+            return jax.jit(block, out_shardings=out_shardings,
+                           donate_argnames=donate)
+        return jax.jit(block, donate_argnames=donate)
+
+    def _build_single_executor(self, bucket: int):
+        """Jitted 1-round block: the H2D fast path for sparse arrivals.
+
+        Same math as one active row of the K-block (vmapped step + mask
+        select + ring push), but the input shapes drop the leading K axis —
+        a block with exactly one ready round uploads ``(phys, chunk)``
+        bytes instead of ``(K, phys, chunk)``, so a trickle of events no
+        longer pays K rounds of padding per dispatch.  The price is a
+        second executable per bucket (also compiled exactly once; see
+        ``compile_cache_sizes``)."""
+        tcfg = pipeline_mod._trace_cfg(self._cfg, chunk=bucket)
+        donate = ("states", "ring") if self._donate else ()
+
+        def single(states, ring, chunk, mask, n_valid):
+            new_states, outs = jax.vmap(
+                lambda s, c: state_mod.detector_step(tcfg, s, c)
+            )(states, chunk)
+            states = _mask_tree(mask, new_states, states)
+            ring = state_mod.ring_push(
+                ring, outs, mask, n_valid, jnp.bool_(True)
+            )
+            return states, ring
+
+        if self._mesh is not None:
+            states_spec, ring_spec, out_shardings = self._ring_specs(bucket)
+            lane0 = sharding_mod.lane_spec(0)
+            single = compat.shard_map(
+                single,
+                mesh=self._mesh,
+                in_specs=(states_spec, ring_spec,
+                          jax.tree.map(lambda _: lane0,
+                                       self._chunk_spec_template()),
+                          lane0, lane0),
+                out_specs=(states_spec, ring_spec),
+                check_vma=False,
+            )
+            return jax.jit(single, out_shardings=out_shardings,
+                           donate_argnames=donate)
+        return jax.jit(single, donate_argnames=donate)
+
+    @staticmethod
+    def _chunk_spec_template():
+        """A ChunkInput-shaped tree to map PartitionSpecs over."""
+        return state_mod.ChunkInput(
+            xy=0, ts=0, valid=0, ber=0, energy_coef=0, latency_coef=0
+        )
+
+    def _make_ring(self, bucket: int) -> state_mod.RingState:
+        ring = state_mod.ring_init(self._ring_rounds, self._phys, bucket)
+        if self._mesh is not None:
+            ring = sharding_mod.lane_put(self._mesh, ring, 1)
+        return ring
+
+    def _reset_ring(self, ring: state_mod.RingState) -> state_mod.RingState:
+        """Mark a drained ring empty (count/dropped -> 0) without touching
+        its data buffers.  The zeroed scalars must match the old scalars'
+        commitment: sharded rings are committed NamedSharding arrays (a bare
+        jnp scalar would flip the executor's cache key and recompile),
+        unsharded rings are uncommitted (a device_put scalar would do the
+        same flip)."""
+        zero_c = jnp.int32(0)
+        zero_d = jnp.int32(0)
+        if self._mesh is not None:
+            zero_c = jax.device_put(zero_c, ring.count.sharding)
+            zero_d = jax.device_put(zero_d, ring.dropped.sharding)
+        return ring._replace(count=zero_c, dropped=zero_d)
+
+    # -- membership ---------------------------------------------------------
+
+    def connect(self, bucket: int, seed: Optional[int] = None) -> int:
+        """Claim a free lane in ``bucket`` (a configured chunk-size bucket)
+        for a new camera session; returns the lane id.  Bucket choice is
+        the caller's (the façade asks its scheduler)."""
+        with self._lock:
+            self._check_open()
+            if bucket not in self._buckets:
+                raise ValueError(
+                    f"{bucket} is not a configured bucket ({self._buckets})"
+                )
+            free = np.flatnonzero(~self._active[:self._capacity])
+            if not free.size:
+                raise RuntimeError(f"pool full ({self._capacity} sessions)")
+            lane = int(free[0])
+            fresh = state_mod.detector_init(
+                self._cfg, seed=self._seed + lane if seed is None else seed
+            )
+            self._states = self._place(
+                self._vreset(self._states, jnp.int32(lane), fresh)
+            )
+            self._active[lane] = True
+            self._lanes[lane] = _Lane(bucket)
+            return lane
+
+    def disconnect(self, lane: int) -> dict:
+        """Release a lane; returns its final accounting stats.  Undrained
+        ring slots referencing the lane are drained first (waiting for the
+        reader in async mode), so the stats are complete and a later
+        session reusing the slot inherits nothing — including a staged
+        migration snapshot, which is discarded here (the mid-migration
+        disconnect fix: a snapshot taken for a retired session must never
+        be restored into the slot's next tenant)."""
+        with self._lock:
+            self._check_open()
+            self._check_lane(lane)
+            # take the pump token: a pump parked on the spare-ring wait
+            # still holds collected-but-unexecuted rounds for this lane —
+            # retiring it now would silently drop them
+            self._acquire_pump()
+            try:
+                # re-validate: the token wait released the lock, so a
+                # concurrent disconnect may have retired the lane already
+                self._check_lane(lane)
+                self._staged.pop(lane, None)
+                self._drain_bucket(self._lanes[lane].bucket)
+                out, dev = self._lane_stats_locked(lane)
+                self._active[lane] = False
+                self._lanes[lane] = None
+            finally:
+                self._release_pump()
+        # device fetch after release (same discipline as stats())
+        return self._finish_stats(out, dev)
+
+    @property
+    def capacity(self) -> int:
+        return self._capacity
+
+    @property
+    def drain_mode(self) -> str:
+        return self._drain_mode
+
+    @property
+    def ring_depth(self) -> int:
+        return self._ring_depth
+
+    @property
+    def active_lanes(self) -> list[int]:
+        return [int(i) for i in np.flatnonzero(self._active)]
+
+    @property
+    def buckets(self) -> tuple:
+        return self._buckets
+
+    @property
+    def host_fetches(self) -> int:
+        """Blocking result transfers so far (one per ring drain; counted on
+        the reader thread in async mode)."""
+        return self._host_fetches
+
+    @property
+    def rounds_executed(self) -> int:
+        return self._rounds_executed
+
+    def compile_cache_size(self) -> int:
+        """Total executor executables across buckets and shapes (grows only
+        when a new bucket or block shape is first exercised; membership
+        churn and migration must not grow it)."""
+        return sum(n for d in self.compile_cache_sizes().values()
+                   for n in d.values())
+
+    def compile_cache_sizes(self) -> dict:
+        """Per-bucket executable counts, per block shape:
+        ``{bucket: {"block": n, "single": n}}``.  Each entry must stay <= 1
+        — occupancy, membership, and lane placement are data, so nothing
+        recompiles; the ``"single"`` entry (the 1-round H2D fast path,
+        built when ``ring_rounds > 1``) is simply absent until first used.
+        """
+        out: dict = {}
+        for b in self._buckets:
+            d = {"block": self._exec[b]._cache_size()}
+            if b in self._exec1:
+                d["single"] = self._exec1[b]._cache_size()
+            out[b] = d
+        return out
+
+    def executors_compiled_once(self) -> bool:
+        """The churn witness: every executor (per bucket, per block shape)
+        has compiled at most one executable."""
+        return all(n <= 1 for d in self.compile_cache_sizes().values()
+                   for n in d.values())
+
+    # -- feeding ------------------------------------------------------------
+
+    def feed(self, lane: int, xy: np.ndarray, ts_us: np.ndarray) -> None:
+        """Buffer a slab for one session (any length, time-sorted) and fold
+        its timestamps into the lane's host rate-estimator twin."""
+        with self._lock:
+            self._check_open()
+            self._check_lane(lane)
+            ln = self._lanes[lane]
+            xy = np.asarray(xy, np.int32).reshape(-1, 2)
+            ts = np.asarray(ts_us, np.int64).reshape(-1)
+            if not ts.size:
+                return
+            if ln.base is None:
+                ln.base = streaming_mod.session_base_us(
+                    int(ts[0]), self._cfg
+                )
+            ln.buf_xy = np.concatenate([ln.buf_xy, xy], 0)
+            ln.buf_ts = np.concatenate([ln.buf_ts, ts], 0)
+            ln.n_events += int(ts.size)
+            ln.rate_update(ts, self._half_us)
+
+    def pump_pass(self, order: tuple,
+                  max_rounds: Optional[int] = None) -> int:
+        """One serialized pump pass: apply staged migrations, then fold
+        every buffered full chunk through the ring executors, visiting
+        buckets in ``order`` (the scheduler's choice; each bucket pumps
+        until dry or the round budget runs out).  Returns rounds executed.
+        Results stay in the on-device rings until ``poll``/``flush`` (or a
+        backpressure drain/seal under the ``"drain"`` policy).  K-round
+        blocks with one fetch per drain are bit-exact vs the same rounds
+        pumped one at a time; concurrent pumpers serialize on the pump
+        token (round order must match the sequential path even while a
+        seal waits on a spare ring)."""
+        with self._lock:
+            self._check_open()
+            self._acquire_pump()
+            try:
+                self._apply_staged_locked()
+                total = 0
+                for bucket in order:
+                    left = None if max_rounds is None else max_rounds - total
+                    if left is not None and left <= 0:
+                        break
+                    total += self._pump_bucket(bucket, max_rounds=left)
+                return total
+            finally:
+                self._release_pump()
+
+    def flush(self, lane: int, order: tuple) -> tuple[np.ndarray, np.ndarray]:
+        """Drain the lane's full chunks, then its padded partial tail, and
+        return everything not yet polled.  A lane with an empty re-chunk
+        buffer just drains its ring (no extra round is scheduled)."""
+        with self._lock:
+            self._check_open()
+            self._check_lane(lane)
+            self._acquire_pump()
+            try:
+                # re-validate after the token wait (see disconnect)
+                self._check_lane(lane)
+                self._apply_staged_locked()
+                for bucket in order:
+                    self._pump_bucket(bucket)          # until dry
+                ln = self._lanes[lane]
+                if ln.buf_ts.size:
+                    self._pump_bucket(ln.bucket, max_rounds=1,
+                                      flush_lane=lane)
+            finally:
+                self._release_pump()
+            return self.poll(lane)
+
+    def _acquire_pump(self) -> None:
+        """Take the pump token (caller holds the lock); waits out any pump
+        in flight so two pumpers cannot interleave their round order."""
+        while self._pump_busy:
+            self._check_open()
+            self._cv.wait()
+        self._pump_busy = True
+
+    def _release_pump(self) -> None:
+        self._pump_busy = False
+        self._cv.notify_all()
+
+    def poll(self, lane: int, *,
+             wait: bool = True) -> tuple[np.ndarray, np.ndarray]:
+        """Drain the lane's accumulated (scores, kept), in stream order.
+
+        This is the readout (and backpressure) point.  In ``"sync"`` mode
+        it fetches the lane's bucket ring inline — ONE blocking transfer
+        for everything buffered since the last drain, however many pump
+        rounds that spans.  In ``"async"`` mode it *seals* the live ring
+        (atomic swap with a spare; the reader thread performs the fetch)
+        and, with ``wait=True`` (default), blocks until the reader has
+        drained it — same results as sync, fetched off this thread.
+        ``wait=False`` never blocks on a transfer in either mode: async
+        seals only when a spare ring is free (never joining an in-flight
+        fetch) and returns what the reader has already drained; sync skips
+        the inline fetch entirely and returns what earlier drains (e.g.
+        backpressure pre-drains) already distributed.  The rest arrives on
+        a later poll.  Under ``on_overflow="drop_oldest"``, rounds lost to
+        overflow are simply absent here and counted in
+        ``stats()['ring_dropped_rounds']``."""
+        with self._lock:
+            self._check_open()
+            self._check_lane(lane)
+            bucket = self._lanes[lane].bucket
+            self._drain_bucket(bucket, wait=wait, block=wait)
+            # re-validate: an async drain waits on the reader with the
+            # lock released, so a concurrent disconnect may have retired
+            # the lane — surface the documented KeyError, not a crash on
+            # the None slot
+            self._check_lane(lane)
+            ln = self._lanes[lane]
+            if not ln.results:
+                return (np.zeros((0,), np.float32), np.zeros((0,), bool))
+            scores = np.concatenate(
+                [r[0] for r in ln.results]
+            ).astype(np.float32)
+            kept = np.concatenate([r[1] for r in ln.results]).astype(bool)
+            ln.results.clear()
+            return scores, kept
+
+    # -- migration mechanics -------------------------------------------------
+
+    def stage_migration(self, lane: int, new_bucket: int) -> None:
+        """Stage a live-lane bucket move: seal+drain the lane's current
+        bucket (every executed round reaches its result queue, in order),
+        then snapshot the lane's device state to a donation-proof host
+        checkpoint (owned deep copies, like ``StreamingDetector.snapshot``).
+        The restore half applies at the start of the next pump pass —
+        rounds cannot execute between stage and apply (both pump entry
+        points apply first, under the pump token), so the snapshot can
+        never go stale.  Re-staging a lane replaces its pending move;
+        staging its current bucket cancels it."""
+        with self._lock:
+            self._check_open()
+            self._check_lane(lane)
+            if new_bucket not in self._buckets:
+                raise ValueError(
+                    f"{new_bucket} is not a configured bucket "
+                    f"({self._buckets})"
+                )
+            ln = self._lanes[lane]
+            if new_bucket == ln.bucket:
+                self._staged.pop(lane, None)
+                return
+            self._acquire_pump()
+            try:
+                # Re-validate after the token wait: the lane may have been
+                # retired (and its slot even re-connected) by a concurrent
+                # disconnect while we waited — the decision belonged to
+                # the dead session, so drop it rather than migrate the new
+                # tenant on the old tenant's rate history.  A pump pass
+                # that ran meanwhile may also have applied an earlier
+                # staged move; if the lane already sits in the target
+                # bucket, cancel.  (While we HOLD the token no disconnect
+                # can complete — it needs the token too — so one re-check
+                # here covers the drain's cv waits below.)
+                if self._lanes[lane] is not ln or not self._active[lane]:
+                    return
+                if new_bucket == ln.bucket:
+                    self._staged.pop(lane, None)
+                    return
+                self._drain_bucket(ln.bucket)
+                snap = jax.tree.map(
+                    lambda a: np.array(a),
+                    jax.device_get(
+                        jax.tree.map(lambda a: a[lane], self._states)
+                    ),
+                )
+                self._staged[lane] = (snap, new_bucket)
+            finally:
+                self._release_pump()
+
+    def staged_migrations(self) -> dict:
+        """Pending (staged, not yet applied) moves: ``{lane: bucket}``."""
+        with self._lock:
+            return {ln: b for ln, (_, b) in self._staged.items()}
+
+    def _apply_staged_locked(self) -> None:
+        """Restore every staged lane into its target bucket (caller holds
+        the lock AND the pump token, before any round collection).  The
+        snapshot is ``device_put`` back as an owned copy and written into
+        the stacked lane state through the same jitted per-lane reset
+        ``connect`` uses — nothing recompiles, placement is re-pinned on
+        the lane mesh, and the lane's re-chunk buffer simply re-chunks at
+        the new size from the next collect."""
+        for lane in sorted(self._staged):
+            snap, new_bucket = self._staged.pop(lane)
+            ln = self._lanes[lane]
+            if ln is None or not self._active[lane]:
+                continue                      # retired between stage and apply
+            old = ln.bucket
+            self._drain_bucket(old)           # belt & braces: stream order
+            restored = jax.device_put(jax.tree.map(np.array, snap))
+            self._states = self._place(
+                self._vreset(self._states, jnp.int32(lane), restored)
+            )
+            ln.bucket = new_bucket
+            ln.migrations += 1
+            ln.migration_log.append((ln.events_folded, old, new_bucket))
+            self._migrations += 1
+
+    # -- observability -------------------------------------------------------
+
+    def lane_halfwin_rate(self, lane: int) -> float:
+        """Observed events per DVFS half-window for one lane, read off the
+        host rate twin (no device sync).  The scheduler's migration metric:
+        a lane is well-bucketed when this sits at or below its bucket's
+        chunk size."""
+        with self._lock:
+            self._check_lane(lane)
+            ln = self._lanes[lane]
+            eps = state_mod.rate_estimate_eps(
+                ln.r_p1, ln.r_p2, self._cfg.dvfs_cfg
+            )
+            return eps * self._half_us * 1e-6
+
+    def bucket_backlog_rounds(self) -> dict:
+        """Ready-but-unpumped rounds per bucket (full chunks waiting in
+        lane re-chunk buffers) — the starvation signal the adaptive pump
+        order consumes."""
+        with self._lock:
+            out = {b: 0 for b in self._buckets}
+            for lane in self.active_lanes:
+                ln = self._lanes[lane]
+                out[ln.bucket] += int(ln.buf_ts.size) // ln.bucket
+            return out
+
+    def stats(self, lane: int) -> dict:
+        """Lane accounting: host float64 books plus the lane's on-device
+        accumulators (f32/i32 — aggregatable without per-chunk host sync),
+        plus ring/bucket occupancy so callers can observe backpressure,
+        plus the lane's rate/migration view (``events_per_s_est`` is the
+        host rate twin — live for every config; ``device_events_per_s_est``
+        reads the in-state estimator, which only integrates in online-DVFS
+        mode and reports 0 otherwise).
+
+        Host books (``kept_total``/``energy_pj``/...) cover *drained*
+        rounds only.  ``ring_rounds_buffered`` says how many rounds sit in
+        the live on-device ring; ``ring_sealed_rounds`` how many are sealed
+        and in the reader's hands but not yet drained (async mode — the
+        reader lag for this bucket; always 0 in sync mode).
+        ``ring_dropped_rounds`` is drops confirmed by fetches plus drops
+        predicted for rounds still on device (the host mirror is audited
+        against the device counter at every fetch).  The ``device_*``
+        accumulators are always complete — including rounds dropped under
+        ``drop_oldest``."""
+        with self._lock:
+            self._check_open()
+            self._check_lane(lane)
+            out, dev = self._lane_stats_locked(lane)
+        return self._finish_stats(out, dev)
+
+    def _lane_stats_locked(self, lane: int):
+        """Host-side stats dict + *pre-indexed* device scalars (caller
+        holds the lock).  Indexing only dispatches; the blocking
+        ``device_get`` belongs in ``_finish_stats``, AFTER the lock is
+        released — the lock discipline keeps blocking transfers off the
+        pool lock, so a monitoring thread syncing on a deep pump queue
+        cannot stall the pump, the reader, or other callers (``stats`` and
+        ``disconnect`` both follow this split)."""
+        ln = self._lanes[lane]
+        n_scored = max(ln.kept_total, 1)
+        dev = (
+            self._states.kept_total[lane],
+            self._states.energy_pj[lane],
+            self._states.latency_ns[lane],
+            self._states.rate.prev1[lane],
+            self._states.rate.prev2[lane],
+        )
+        b = ln.bucket
+        out = {
+            "lane": lane,
+            "bucket": b,
+            "n_events": ln.n_events,
+            "n_chunks": ln.n_chunks,
+            "kept_total": ln.kept_total,
+            "energy_pj": ln.energy_pj,
+            "latency_ns_per_event": ln.latency_ns / n_scored,
+            "buffered": int(ln.buf_ts.size),
+            "events_per_s_est": state_mod.rate_estimate_eps(
+                ln.r_p1, ln.r_p2, self._cfg.dvfs_cfg
+            ),
+            "migrations": ln.migrations,
+            "migration_log": list(ln.migration_log),
+            "migration_staged": lane in self._staged,
+            "ring_capacity": self._ring_rounds,
+            "ring_rounds_buffered": self._ring_count[b],
+            "ring_sealed_rounds": self._sealed_rounds[b],
+            "ring_dropped_rounds": (
+                self._dropped_dev[b] + self._dropped_pred[b]
+            ),
+        }
+        return out, dev
+
+    def _finish_stats(self, out: dict, dev) -> dict:
+        dev_kept, dev_energy, dev_latency, dev_p1, dev_p2 = \
+            jax.device_get(dev)
+        out["device_kept_total"] = int(dev_kept)
+        out["device_energy_pj"] = float(dev_energy)
+        out["device_latency_ns"] = float(dev_latency)
+        out["device_events_per_s_est"] = state_mod.rate_estimate_eps(
+            dev_p1, dev_p2, self._cfg.dvfs_cfg
+        )
+        return out
+
+    def pool_stats(self) -> dict:
+        """Pool-level runtime counters (no device sync): fetch/round ratio,
+        per-bucket ring occupancy and drop counts, reader lag, pump drain
+        wait, sharding layout, migration and H2D-padding tallies.
+
+        ``pump_drain_wait_s`` is the wall time the *pump* path spent making
+        ring room before a block (sync: the inline fetch+distribute; async:
+        the seal — usually just an enqueue, plus any wait for a spare
+        ring).  ``reader_lag_rounds`` counts rounds sealed to the reader
+        thread but not yet drained; ``dropped_rounds_confirmed`` is the
+        device-counter ground truth accumulated over fetches (equals
+        ``dropped_rounds_total`` once everything has been drained — the
+        host-mirror audit).  ``pump_forced_drains`` counts mid-pump
+        makes-room events (ring occupancy forced a drain/seal before a
+        block) — the reliable backpressure signal; in async mode
+        ``host_fetches`` deltas are NOT, since fetches are counted when the
+        reader completes them, not when the pump seals.
+        ``h2d_event_slots`` vs ``h2d_valid_events`` is the upload-padding
+        audit (``h2d_padding_bytes`` = the gap times the 13-byte event
+        slot): the quantity adaptive bucket migration exists to shrink."""
+        with self._lock:
+            self._check_open()
+            exe = self.compile_cache_sizes()
+            return {
+                "capacity": self._capacity,
+                "active": len(self.active_lanes),
+                "sharded": self._mesh is not None,
+                "devices": (int(self._mesh.devices.size)
+                            if self._mesh is not None else 1),
+                "ring_rounds": self._ring_rounds,
+                "ring_depth": self._ring_depth,
+                "on_overflow": self._overflow,
+                "drain_mode": self._drain_mode,
+                "host_fetches": self._host_fetches,
+                "rounds_executed": self._rounds_executed,
+                "pump_drain_wait_s": self._pump_drain_wait,
+                "pump_forced_drains": self._pump_forced_drains,
+                "reader_lag_rounds": sum(self._sealed_rounds.values()),
+                "migrations_total": self._migrations,
+                "migrations_staged": len(self._staged),
+                "h2d_event_slots": self._h2d_slots,
+                "h2d_valid_events": self._h2d_valid,
+                "h2d_padding_bytes": (
+                    (self._h2d_slots - self._h2d_valid) * EVENT_SLOT_BYTES
+                ),
+                "dropped_rounds_total": (
+                    sum(self._dropped_dev.values())
+                    + sum(self._dropped_pred.values())
+                ),
+                "dropped_rounds_confirmed": sum(self._dropped_dev.values()),
+                "buckets": {
+                    b: {
+                        "lanes": sum(
+                            1 for ln in self._lanes
+                            if ln is not None and ln.bucket == b
+                        ),
+                        "events_per_s_est": sum(
+                            state_mod.rate_estimate_eps(
+                                ln.r_p1, ln.r_p2, self._cfg.dvfs_cfg
+                            )
+                            for ln in self._lanes
+                            if ln is not None and ln.bucket == b
+                        ),
+                        "ring_rounds_buffered": self._ring_count[b],
+                        "ring_sealed_rounds": self._sealed_rounds[b],
+                        "ring_dropped_rounds": (
+                            self._dropped_dev[b] + self._dropped_pred[b]
+                        ),
+                        "executables": exe[b],
+                    }
+                    for b in self._buckets
+                },
+            }
+
+    # -- internals ----------------------------------------------------------
+
+    def _check_lane(self, lane: int) -> None:
+        if not (0 <= lane < self._capacity) or not self._active[lane]:
+            raise KeyError(f"lane {lane} is not an active session")
+
+    def _place(self, states):
+        """Pin the lane sharding after a per-lane host update (`_vreset` /
+        `_vrebase` infer their own output sharding, which on a 1-wide mesh
+        can canonicalize away the NamedSharding and flip the executor's
+        cache key).  No-op (no copy) when already placed, or unsharded."""
+        if self._mesh is None:
+            return states
+        return sharding_mod.lane_put(self._mesh, states, 0)
+
+    def _pump_bucket(self, bucket: int, max_rounds: Optional[int] = None,
+                     flush_lane: Optional[int] = None) -> int:
+        """Run this bucket's ready rounds through its K-round executor,
+        cutting a block early when a lane needs a timebase rebase (the hop
+        applies between blocks; rebases are ~hourly per session)."""
+        executed = 0
+        while True:
+            pending: list[_Round] = []
+            stop = False
+            while len(pending) < self._ring_rounds:
+                if max_rounds is not None and \
+                        executed + len(pending) >= max_rounds:
+                    stop = True
+                    break
+                rnd = self._collect_round(
+                    bucket, flush_lane, allow_rebase=not pending
+                )
+                if rnd == "rebase":
+                    break          # cut the block; rebase opens the next one
+                if rnd is None:
+                    stop = True
+                    break
+                pending.append(rnd)
+            if pending:
+                self._execute_block(bucket, pending)
+                executed += len(pending)
+            if stop or not pending:
+                break
+        return executed
+
+    def _collect_round(self, bucket: int, flush_lane: Optional[int],
+                       allow_rebase: bool):
+        """Pop one round's worth of chunks from this bucket's lane buffers.
+
+        Returns a ``_Round``, ``None`` (nothing ready), or ``"rebase"``
+        (a lane needs a timebase hop first but the current block already
+        holds rounds — the caller must execute them before the hop so the
+        round order matches the sequential path bit-for-bit)."""
+        ready: list[tuple[int, int]] = []
+        for lane in self.active_lanes:
+            ln = self._lanes[lane]
+            if ln.bucket != bucket:
+                continue
+            if ln.buf_ts.size >= bucket:
+                ready.append((lane, bucket))
+            elif lane == flush_lane and ln.buf_ts.size:
+                ready.append((lane, int(ln.buf_ts.size)))
+        if not ready:
+            return None
+
+        hops_needed = []
+        for lane, n in ready:
+            ln = self._lanes[lane]
+            new_base, hops = streaming_mod.plan_rebase(
+                ln.base, ln.buf_ts[:n], self._cfg
+            )
+            if hops:
+                hops_needed.append((lane, new_base, hops))
+        if hops_needed and not allow_rebase:
+            return "rebase"
+        for lane, new_base, hops in hops_needed:
+            self._lanes[lane].base = new_base
+            for hop in hops:
+                self._states = self._place(self._vrebase(
+                    self._states, jnp.int32(lane), np.int32(hop)
+                ))
+
+        xy = np.zeros((self._phys, bucket, 2), np.int32)
+        ts = np.zeros((self._phys, bucket), np.int32)
+        valid = np.zeros((self._phys, bucket), bool)
+        mask = np.zeros((self._phys,), bool)
+        n_valid = np.zeros((self._phys,), np.int32)
+        for lane, n in ready:
+            ln = self._lanes[lane]
+            xy[lane, :n] = ln.buf_xy[:n]
+            ts64 = np.full((bucket,), ln.buf_ts[min(n, ln.buf_ts.size) - 1],
+                           np.int64)
+            ts64[:n] = ln.buf_ts[:n]
+            ts[lane] = (ts64 - ln.base).astype(np.int32)
+            valid[lane, :n] = True
+            mask[lane] = True
+            n_valid[lane] = n
+            ln.buf_xy = ln.buf_xy[n:]
+            ln.buf_ts = ln.buf_ts[n:]
+            ln.events_folded += n
+        return _Round(xy, ts, valid, mask, n_valid)
+
+    def _execute_block(self, bucket: int, rounds: list) -> None:
+        """Launch one executor block.  Shapes never depend on occupancy:
+        a block with 2..K ready rounds runs the fixed (K, ...) executor
+        (padding skipped by the round-level cond); a block with exactly ONE
+        round runs the 1-round executor, whose inputs drop the K axis — so
+        sparse arrivals upload (phys, chunk) H2D bytes, not (K, phys,
+        chunk).  Under the ``"drain"`` policy a block that would overflow
+        the live ring first drains it (sync: inline fetch; async: seal to
+        the reader and keep pumping — the wait, if any, is for a spare
+        ring, not for PCIe)."""
+        k = self._ring_rounds
+        n = len(rounds)
+        if self._overflow == "drain" and self._ring_count[bucket] + n > k:
+            t0 = time.perf_counter()
+            self._drain_bucket(bucket, wait=False)
+            self._pump_drain_wait += time.perf_counter() - t0
+            self._pump_forced_drains += 1
+
+        if n == 1 and bucket in self._exec1:
+            rnd = rounds[0]
+            chunks = state_mod.ChunkInput(
+                xy=jnp.asarray(rnd.xy),
+                ts=jnp.asarray(rnd.ts),
+                valid=jnp.asarray(rnd.valid),
+                ber=jnp.full((self._phys,), self._riders[0], jnp.float32),
+                energy_coef=jnp.full(
+                    (self._phys,), self._riders[1], jnp.float32
+                ),
+                latency_coef=jnp.full(
+                    (self._phys,), self._riders[2], jnp.float32
+                ),
+            )
+            self._states, self._rings[bucket] = self._exec1[bucket](
+                self._states, self._rings[bucket], chunks,
+                jnp.asarray(rnd.mask), jnp.asarray(rnd.n_valid),
+            )
+            self._h2d_slots += self._phys * bucket
+            self._h2d_valid += int(rnd.n_valid.sum())
+        else:
+            xy = np.zeros((k, self._phys, bucket, 2), np.int32)
+            ts = np.zeros((k, self._phys, bucket), np.int32)
+            valid = np.zeros((k, self._phys, bucket), bool)
+            mask = np.zeros((k, self._phys), bool)
+            n_valid = np.zeros((k, self._phys), np.int32)
+            for i, rnd in enumerate(rounds):
+                xy[i], ts[i], valid[i] = rnd.xy, rnd.ts, rnd.valid
+                mask[i], n_valid[i] = rnd.mask, rnd.n_valid
+            round_active = np.arange(k) < n
+
+            chunks = state_mod.ChunkInput(
+                xy=jnp.asarray(xy),
+                ts=jnp.asarray(ts),
+                valid=jnp.asarray(valid),
+                ber=jnp.full((k, self._phys), self._riders[0], jnp.float32),
+                energy_coef=jnp.full(
+                    (k, self._phys), self._riders[1], jnp.float32
+                ),
+                latency_coef=jnp.full(
+                    (k, self._phys), self._riders[2], jnp.float32
+                ),
+            )
+            self._states, self._rings[bucket] = self._exec[bucket](
+                self._states, self._rings[bucket], chunks,
+                jnp.asarray(mask), jnp.asarray(n_valid),
+                jnp.asarray(round_active),
+            )
+            self._h2d_slots += k * self._phys * bucket
+            self._h2d_valid += int(n_valid.sum())
+        c = self._ring_count[bucket]
+        self._ring_count[bucket] = min(c + n, k)
+        self._dropped_pred[bucket] += max(0, c + n - k)
+        self._rounds_executed += n
+
+    # -- draining: sync (inline fetch) and async (seal to the reader) -------
+
+    def _drain_bucket(self, bucket: int, *, wait: bool = True,
+                      block: bool = True) -> None:
+        """Get this bucket's buffered rounds on their way to the host.  In
+        sync mode that is the inline blocking fetch; in async mode it seals
+        the live ring to the reader and, with ``wait=True``, blocks until
+        the reader has drained everything sealed for this bucket.
+        ``block=False`` is the non-blocking poll path: sync skips the
+        inline fetch entirely, async skips the seal when no spare ring is
+        available."""
+        if self._drain_mode == "sync":
+            if block:
+                self._drain_ring(bucket)
+        else:
+            self._seal_ring(bucket, block=block)
+            if wait:
+                self._wait_bucket_drained(bucket)
+
+    def _drain_ring(self, bucket: int) -> None:
+        """Sync mode: ONE blocking fetch of the live ring on the calling
+        thread, then distribute and mark the ring empty."""
+        if self._ring_count[bucket] == 0:
+            return
+        ring = jax.device_get(self._rings[bucket])
+        self._host_fetches += 1
+        self._distribute(bucket, ring)
+        self._ring_count[bucket] = 0
+        self._rings[bucket] = self._reset_ring(self._rings[bucket])
+
+    def _seal_ring(self, bucket: int, *, block: bool = True) -> None:
+        """Async mode's atomic swap point (caller holds the lock): install
+        a spare as the live ring and hand the sealed one to the reader
+        thread.  If every spare is still in the reader's hands (the ring of
+        rings is ``ring_depth`` deep, not infinite) this waits on the
+        condition variable — releasing the lock so the reader can
+        distribute and recycle — or, with ``block=False``, simply returns
+        (the live ring keeps accumulating; a later poll seals it)."""
+        if self._ring_count[bucket] == 0:
+            return
+        while not self._spares[bucket]:
+            if not block:
+                return
+            self._check_open()
+            self._cv.wait()
+            # re-validate after the wakeup: another thread (a concurrent
+            # poll, or the pump making room) may have sealed meanwhile —
+            # sealing an empty ring would cost a pointless blocking fetch
+            # and inflate the rounds-per-fetch witness
+            if self._ring_count[bucket] == 0:
+                return
+        sealed = self._rings[bucket]
+        self._rings[bucket] = self._spares[bucket].popleft()
+        self._sealed_rounds[bucket] += self._ring_count[bucket]
+        self._inflight[bucket] += 1
+        self._ring_count[bucket] = 0
+        self._sealed_q.put((bucket, sealed))
+
+    def _wait_bucket_drained(self, bucket: int) -> None:
+        """Block (releasing the lock) until the reader has fetched and
+        distributed every ring sealed for this bucket."""
+        while self._inflight[bucket] > 0:
+            self._check_open()
+            self._cv.wait()
+
+    def _fetch_ring(self, ring: state_mod.RingState):
+        """The blocking device transfer (reader thread, no lock held).
+        Split out so tests can inject fetch failures."""
+        return jax.device_get(ring)
+
+    def _reader_loop(self) -> None:
+        """Async drain: fetch sealed rings FIFO (order preserves the
+        sequential result order bit-for-bit), distribute under the lock,
+        recycle the buffer into the bucket's spare pool.  Any exception is
+        stored and re-raised to the next public API caller."""
+        while True:
+            item = self._sealed_q.get()
+            if item is _STOP:
+                return
+            bucket, sealed = item
+            try:
+                host = self._fetch_ring(sealed)
+            except BaseException as e:
+                with self._cv:
+                    self._reader_exc = e
+                    self._cv.notify_all()
+                return
+            with self._cv:
+                try:
+                    self._host_fetches += 1
+                    self._distribute(bucket, host)
+                    self._spares[bucket].append(self._reset_ring(sealed))
+                    self._sealed_rounds[bucket] = max(
+                        0, self._sealed_rounds[bucket] - int(host.count)
+                    )
+                    self._inflight[bucket] -= 1
+                except BaseException as e:
+                    self._reader_exc = e
+                    self._cv.notify_all()
+                    return
+                self._cv.notify_all()
+
+    def _distribute(self, bucket: int, ring) -> None:
+        """Walk a fetched ring's undrained slots (oldest first), hand each
+        lane its results, fold the float64 accounting, and audit the drop
+        mirror against the device counter (caller holds the lock; ``ring``
+        is host data)."""
+        n_slots = ring.scores.shape[0]
+        for slot in state_mod.ring_slot_order(ring.head, ring.count, n_slots):
+            for lane in np.flatnonzero(ring.mask[slot]):
+                ln = self._lanes[int(lane)]
+                if ln is None:
+                    continue
+                n = int(ring.n_valid[slot, lane])
+                streaming_mod.account_chunk(
+                    ln, ring.n_kept[slot, lane], ring.vdd_idx[slot, lane],
+                    online=self._online, tab=self._tab,
+                    fixed_vdd=self._cfg.vdd,
+                )
+                # copy: a view would pin the whole fetched (R, lanes,
+                # chunk) buffer in the lane queue until the lane polls
+                ln.results.append((
+                    ring.scores[slot, lane, :n].astype(np.float32,
+                                                       copy=True),
+                    ring.keep[slot, lane, :n].astype(bool, copy=True),
+                ))
+        # The device counter is ground truth: drops confirmed by this fetch
+        # move from the predicted mirror to the confirmed tally.  (Each ring
+        # resets its dropped counter when recycled, so per-fetch counts are
+        # disjoint and the two host tallies always sum to the truth.)
+        d = int(ring.dropped)
+        self._dropped_dev[bucket] += d
+        self._dropped_pred[bucket] -= d

@@ -1,0 +1,190 @@
+"""Control plane for the multi-camera pool: placement as *policy*.
+
+The data plane (``repro.serve.runtime.PoolRuntime``) owns compiled
+executors, device rings, the reader thread, and donation bookkeeping — it
+can run any lane in any chunk-size bucket, but it never decides *which*.
+Deciding is this module's job:
+
+  ``StaticScheduler``   — PR 4 behavior, frozen: a lane lands in the
+                          smallest bucket that fits its ``connect(chunk=)``
+                          request and stays there for life; buckets pump in
+                          ascending size order.  Zero observation overhead.
+  ``AdaptiveScheduler`` — the paper's DVFS insight applied to the serving
+                          layer: the detector re-budgets itself from the
+                          *measured* event rate.  Each drain observation
+                          compares a lane's events-per-half-window estimate
+                          (the same 3-counter estimator the in-step DVFS
+                          controller runs; see ``core.state.rate_estimate_
+                          eps``) against its current bucket, and after
+                          ``patience`` consecutive drains beyond the
+                          hysteresis thresholds asks the runtime to migrate
+                          the lane (seal + drain + snapshot/restore — zero
+                          recompiles, no lost or duplicated rounds).  It
+                          also orders the pump across buckets by re-chunk
+                          backlog, so the most starved bucket's lanes fold
+                          first when a round budget is in force.
+
+Schedulers are pure host-side policy objects: no locks, no device handles,
+no threads.  The façade (``DetectorPool``) serializes calls under the
+runtime lock, so implementations may keep plain dict state.  Lane ids are
+pool slots and get reused — the façade calls ``forget(lane)`` on connect
+and disconnect so a recycled slot never inherits a predecessor's streak.
+
+Hysteresis is asymmetric by design: a lane migrates *up* as soon as its
+observed rate no longer fits the current bucket (``up_margin``, default
+1.0 — running over budget starves the lane behind re-chunk backpressure
+immediately), but migrates *down* only when the rate fits the smaller
+bucket with ``down_margin`` to spare (default 0.9), so a lane oscillating
+near a bucket boundary does not flap.  Both directions additionally wait
+``patience`` consecutive drains (M in the issue) agreeing on the same
+target before committing — one bursty window never triggers a move.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+__all__ = ["StaticScheduler", "AdaptiveScheduler", "make_scheduler"]
+
+
+class StaticScheduler:
+    """PR 4's frozen placement: buckets are chosen at connect and pumped in
+    ascending size order.  ``observe`` never migrates."""
+
+    policy = "static"
+    # static ignores its order() argument and never migrates, so the
+    # façade can skip both the lock-held backlog walk and the per-poll
+    # rate observation entirely on the default (PR 4-compat) path
+    needs_backlog = False
+    needs_observation = False
+
+    def __init__(self, buckets: tuple):
+        self._buckets = tuple(sorted(int(b) for b in buckets))
+
+    @property
+    def buckets(self) -> tuple:
+        return self._buckets
+
+    def place(self, want: int) -> Optional[int]:
+        """Smallest bucket that fits a ``connect(chunk=want)`` request, or
+        ``None`` when nothing does (the façade raises)."""
+        return next((b for b in self._buckets if b >= int(want)), None)
+
+    def order(self, backlog_rounds: dict) -> tuple:
+        """Bucket pump order; static keeps the deterministic ascending
+        order PR 3/4 used (``backlog_rounds`` is ignored)."""
+        return self._buckets
+
+    def observe(self, lane: int, bucket: int, events_per_halfwin: float,
+                win: Optional[int] = None) -> Optional[int]:
+        """One drain observation for ``lane``; returns a migration target
+        bucket or ``None``.  Static never migrates."""
+        return None
+
+    def forget(self, lane: int) -> None:
+        """Drop any per-lane observation state (slot recycled)."""
+
+
+class AdaptiveScheduler(StaticScheduler):
+    """Rate-aware placement: hysteresis + patience around the fit rule.
+
+    ``observe`` consumes the lane's events-per-half-window estimate (one
+    half-window is the natural chunk cadence: the DVFS controller's
+    re-budgeting period).  A lane whose estimate exceeds
+    ``bucket * up_margin`` wants the smallest bucket that fits; one whose
+    estimate fits a smaller bucket times ``down_margin`` wants that.  The
+    want must repeat for ``patience`` consecutive observations before it is
+    returned — the M-consecutive-drains gate of the issue.
+    """
+
+    policy = "adaptive"
+    needs_backlog = True
+    needs_observation = True
+
+    def __init__(self, buckets: tuple, *, patience: int = 3,
+                 down_margin: float = 0.9, up_margin: float = 1.0):
+        super().__init__(buckets)
+        if patience < 1:
+            raise ValueError("patience must be >= 1")
+        if not (0.0 < down_margin <= 1.0):
+            raise ValueError("down_margin must be in (0, 1]")
+        if up_margin <= 0.0:
+            raise ValueError("up_margin must be > 0")
+        self.patience = int(patience)
+        self.down_margin = float(down_margin)
+        self.up_margin = float(up_margin)
+        # lane -> (wanted bucket, windows wanting it, last counted window)
+        self._streaks: dict[int, tuple[int, int, Optional[int]]] = {}
+
+    def _fit(self, w: float) -> int:
+        """Smallest bucket >= w; the largest when nothing fits (the rate
+        exceeds every tier — the best the pool can do)."""
+        return next((b for b in self._buckets if b >= w), self._buckets[-1])
+
+    def desired(self, bucket: int, events_per_halfwin: float) -> int:
+        """Hysteresis target for a lane currently in ``bucket``: move up
+        the moment the rate outgrows the bucket, move down only with
+        ``down_margin`` headroom — to the deepest tier that *has* that
+        headroom, so a lane parked several tiers above its rate still
+        descends partway when the bottom tier lacks margin (no dead
+        zone) — otherwise stay."""
+        w = float(events_per_halfwin)
+        if w > bucket * self.up_margin:
+            return max(self._fit(w), bucket)
+        target = self._fit(w)
+        if target < bucket:
+            for b in self._buckets:           # ascending: deepest first
+                if b >= bucket:
+                    break
+                if b >= target and w <= b * self.down_margin:
+                    return b
+        return bucket
+
+    def order(self, backlog_rounds: dict) -> tuple:
+        """Starved-first pump order: buckets with the deepest re-chunk
+        backlog (ready rounds waiting in lane buffers) fold first, so a
+        round budget (``pump_rounds(n)``) reaches the lanes that need it;
+        ties break ascending for determinism.  With no budget every bucket
+        pumps until dry, so order never changes results — only latency."""
+        return tuple(sorted(
+            self._buckets,
+            key=lambda b: (-int(backlog_rounds.get(b, 0)), b),
+        ))
+
+    def observe(self, lane: int, bucket: int, events_per_halfwin: float,
+                win: Optional[int] = None) -> Optional[int]:
+        """One drain observation.  ``win`` is the lane's rate-estimator
+        rotation cursor (the half-window index of its latest event):
+        observations repeating the same window collapse to one, so
+        patience counts *windows*, not polls — a caller polling many
+        times per DVFS half-window cannot burn the anti-flap gate inside
+        one bursty window.  ``win=None`` counts every call."""
+        want = self.desired(bucket, events_per_halfwin)
+        if want == bucket:
+            self._streaks.pop(lane, None)
+            return None
+        prev_want, n, last_win = self._streaks.get(lane, (want, 0, None))
+        if prev_want == want and win is not None and last_win == win:
+            return None                     # same window: already counted
+        n = n + 1 if prev_want == want else 1
+        if n >= self.patience:
+            self._streaks.pop(lane, None)
+            return want
+        self._streaks[lane] = (want, n, win)
+        return None
+
+    def forget(self, lane: int) -> None:
+        self._streaks.pop(lane, None)
+
+
+def make_scheduler(policy: str, buckets: tuple, *, patience: int = 3,
+                   down_margin: float = 0.9,
+                   up_margin: float = 1.0) -> StaticScheduler:
+    if policy == "static":
+        return StaticScheduler(buckets)
+    if policy == "adaptive":
+        return AdaptiveScheduler(buckets, patience=patience,
+                                 down_margin=down_margin,
+                                 up_margin=up_margin)
+    raise ValueError(
+        f"policy must be 'static' or 'adaptive', got {policy!r}"
+    )

@@ -6,7 +6,9 @@ across arrivals, accepts event slabs of *any* length (an internal host
 buffer re-chunks them to the detector's fixed chunk size), and returns
 per-event corner scores as chunks complete.  ``flush()`` drains the partial
 tail, ``snapshot()``/``restore()`` checkpoint the whole session (state +
-buffer + accounting) for migration or resume.
+buffer + accounting) for migration or resume, and ``rebucket()`` hops a
+live session to a new chunk size through the same snapshot/restore path
+(the standalone spelling of the pool's live bucket migration).
 
 Fed the same stream in any slab partition, a session produces bit-identical
 scores, final state, and float64 energy accounting to one ``run_pipeline``
@@ -216,6 +218,7 @@ class StreamingDetector:
         self.energy_pj = 0.0
         self.latency_ns = 0.0
         self.vdd_trace: list[float] = []
+        self.rebuckets = 0            # chunk-size moves (see rebucket())
 
     # -- feeding ------------------------------------------------------------
 
@@ -367,29 +370,64 @@ class StreamingDetector:
             },
         }
 
+    def _load(self, snap: dict) -> None:
+        """Adopt a snapshot's state/buffer/accounting (shared by
+        ``restore`` and ``rebucket``).
+
+        device_put an owned copy (on CPU, device_put of a host array is
+        zero-copy — the restored state must own its memory so a donating
+        step cannot reach back into the checkpoint, and restoring the
+        same snapshot twice cannot couple the two sessions), then re-key
+        the step's donation off where the restored state actually landed.
+        """
+        self._state = jax.device_put(
+            jax.tree.map(np.array, snap["state"])
+        )
+        self._refresh_step()
+        self._buf_xy = np.asarray(snap["buf_xy"], np.int32).copy()
+        self._buf_ts = np.asarray(snap["buf_ts"], np.int64).copy()
+        self._base = snap["base"]
+        acc = snap["accounting"]
+        self.n_events = acc["n_events"]
+        self.n_chunks = acc["n_chunks"]
+        self.kept_total = acc["kept_total"]
+        self.energy_pj = acc["energy_pj"]
+        self.latency_ns = acc["latency_ns"]
+        self.vdd_trace = list(acc["vdd_trace"])
+
     @classmethod
     def restore(cls, snap: dict) -> "StreamingDetector":
         det = cls(snap["cfg"], base_ts=snap["base"])
-        # device_put an owned copy (on CPU, device_put of a host array is
-        # zero-copy — the restored state must own its memory so a donating
-        # step cannot reach back into the checkpoint, and restoring the
-        # same snapshot twice cannot couple the two sessions), then re-key
-        # the step's donation off where the restored state actually landed.
-        det._state = jax.device_put(
-            jax.tree.map(np.array, snap["state"])
-        )
-        det._refresh_step()
-        det._buf_xy = np.asarray(snap["buf_xy"], np.int32).copy()
-        det._buf_ts = np.asarray(snap["buf_ts"], np.int64).copy()
-        det._base = snap["base"]
-        acc = snap["accounting"]
-        det.n_events = acc["n_events"]
-        det.n_chunks = acc["n_chunks"]
-        det.kept_total = acc["kept_total"]
-        det.energy_pj = acc["energy_pj"]
-        det.latency_ns = acc["latency_ns"]
-        det.vdd_trace = list(acc["vdd_trace"])
+        det._load(snap)
         return det
+
+    def rebucket(self, chunk: int) -> "StreamingDetector":
+        """Move this live session to a new chunk-size bucket, in place,
+        through the snapshot/restore path (the same donation-proof hop
+        ``DetectorPool``'s adaptive scheduler uses for live bucket
+        migration — ``rebucket`` is its standalone-session spelling).
+
+        The detector state is chunk-size independent (surface/SAE/LUT
+        carry no chunk axis), so the hop is exact: buffered events simply
+        re-chunk at the new size from the next ``feed``/``flush``, and the
+        session continues bit-identically to a fold that switched step
+        sizes at this point in the stream (property-tested against a
+        manual ``detector_step`` fold).  The new (cfg, chunk) bucket's
+        jitted step comes from the same lru cache every session shares —
+        sessions already in that bucket cost zero new compiles.  Returns
+        ``self`` for chaining.
+        """
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        if int(chunk) == self._cfg.chunk:
+            return self
+        snap = self.snapshot()
+        snap["cfg"] = dataclasses.replace(self._cfg, chunk=int(chunk))
+        self._cfg = snap["cfg"]
+        self._tcfg = pipeline_mod._trace_cfg(self._cfg)
+        self._load(snap)
+        self.rebuckets += 1
+        return self
 
     # -- introspection ------------------------------------------------------
 
@@ -406,19 +444,28 @@ class StreamingDetector:
         the host float64 books (bit-exact vs ``run_pipeline``); the
         ``device_*`` entries read the state's on-device float32/int32
         accumulators — the numbers a sharded deployment can aggregate
-        without any per-chunk host traffic (they agree to f32 precision)."""
+        without any per-chunk host traffic (they agree to f32 precision).
+        ``events_per_s_est`` reads the in-state streaming rate estimator
+        (``core.state.rate_estimate_eps``) — it only integrates in
+        online-DVFS mode and reports 0 otherwise."""
         n_scored = max(self.kept_total, 1)
-        dev_kept, dev_energy, dev_latency = jax.device_get(
+        dev_kept, dev_energy, dev_latency, dev_p1, dev_p2 = jax.device_get(
             (self._state.kept_total, self._state.energy_pj,
-             self._state.latency_ns)
+             self._state.latency_ns, self._state.rate.prev1,
+             self._state.rate.prev2)
         )
         return {
             "n_events": self.n_events,
             "n_chunks": self.n_chunks,
+            "chunk": self._cfg.chunk,
+            "rebuckets": self.rebuckets,
             "kept_total": self.kept_total,
             "energy_pj": self.energy_pj,
             "latency_ns_per_event": self.latency_ns / n_scored,
             "buffered": int(self._buf_ts.size),
+            "events_per_s_est": state_mod.rate_estimate_eps(
+                dev_p1, dev_p2, self._cfg.dvfs_cfg
+            ),
             "device_kept_total": int(dev_kept),
             "device_energy_pj": float(dev_energy),
             "device_latency_ns": float(dev_latency),

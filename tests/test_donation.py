@@ -14,6 +14,8 @@ no-op plus fake-device unit coverage of the decision function; the
 buffer-deletion (``is_deleted``) witnesses run when an accelerator is
 present.
 """
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
@@ -97,6 +99,63 @@ def test_real_state_donation_decision_matches_backend():
     assert state_mod.donation_ok(det.state) is (not _ON_CPU)
     pool = DetectorPool(CFG, capacity=2)
     assert pool._donate is (not _ON_CPU)
+    pool.close()
+
+
+def test_disconnect_mid_migration_discards_staged_state():
+    """Regression (ISSUE 5 satellite): ``disconnect()`` of a lane whose
+    migration is staged (snapshot taken, restore pending) must discard the
+    staged snapshot.  Leaking it would restore the retired session's state
+    into the slot's next tenant at the next pump — the migration-era twin
+    of the use-after-donate bug class this file guards."""
+    st = synthetic.shapes_stream(duration_us=20_000, seed=0)
+    pool = DetectorPool(CFG, capacity=1, buckets=(128, 512),
+                        policy="adaptive", ring_rounds=2)
+    lane = pool.connect(seed=CFG.seed, chunk=128)
+    pool.feed(lane, st.xy[:512], st.ts[:512])
+    pool.pump()
+    pool.poll(lane)
+    # stage the move directly (deterministic mid-migration window: the
+    # scheduler would do the same after enough drain observations)
+    pool._rt.stage_migration(lane, 512)
+    assert pool._rt.staged_migrations() == {lane: 512}
+    assert pool.stats(lane)["migration_staged"]
+    stats = pool.disconnect(lane)               # snapshot taken, restore pending
+    assert stats["migrations"] == 0             # the move never applied
+    assert pool._rt.staged_migrations() == {}   # nothing leaked
+    # the recycled slot starts clean: same seed, fresh state, no restore
+    lane2 = pool.connect(seed=CFG.seed, chunk=128)
+    assert lane2 == lane
+    pool.feed(lane2, st.xy[:512], st.ts[:512])
+    pool.pump()                                 # apply-staged runs: no-op
+    s, _ = pool.flush(lane2)
+    ref = pipeline.run_pipeline(
+        st.xy[:512], st.ts[:512], dataclasses.replace(CFG, chunk=128)
+    )
+    np.testing.assert_array_equal(s, ref.scores)
+    st2 = pool.stats(lane2)
+    assert st2["bucket"] == 128 and st2["migrations"] == 0
+    assert pool.executors_compiled_once()
+    pool.close()
+
+
+def test_restage_and_cancel_migration():
+    """Re-staging a lane replaces its pending move; staging its current
+    bucket cancels the pending move (the scheduler's change of mind
+    between drains must not leave a stale snapshot behind)."""
+    st = synthetic.shapes_stream(duration_us=20_000, seed=0)
+    pool = DetectorPool(CFG, capacity=1, buckets=(128, 256, 512),
+                        policy="adaptive")
+    lane = pool.connect(seed=CFG.seed, chunk=128)
+    pool.feed(lane, st.xy[:256], st.ts[:256])
+    pool.pump()
+    pool._rt.stage_migration(lane, 512)
+    pool._rt.stage_migration(lane, 256)         # replace
+    assert pool._rt.staged_migrations() == {lane: 256}
+    pool._rt.stage_migration(lane, 128)         # cancel (current bucket)
+    assert pool._rt.staged_migrations() == {}
+    pool.pump()
+    assert pool.stats(lane)["migrations"] == 0
     pool.close()
 
 

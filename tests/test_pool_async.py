@@ -186,14 +186,14 @@ def test_poll_nowait_never_blocks_on_inflight_fetch(stream):
     lane = pool.connect(seed=CFG.seed)
     fetch_started = threading.Event()
     fetch_release = threading.Event()
-    real_fetch = pool._fetch_ring
+    real_fetch = pool._rt._fetch_ring
 
     def slow_fetch(ring):
         fetch_started.set()
         assert fetch_release.wait(timeout=30)
         return real_fetch(ring)
 
-    pool._fetch_ring = slow_fetch
+    pool._rt._fetch_ring = slow_fetch
     try:
         pool.feed(lane, xy[:1024], ts[:1024])   # 4 rounds through 2 slots
         pool.pump()                             # seals; reader now stalled
@@ -211,6 +211,51 @@ def test_poll_nowait_never_blocks_on_inflight_fetch(stream):
     pool.close()
 
 
+def test_ring_depth3_absorbs_fetch_stalls(stream):
+    """A 3-deep ring-of-rings lets TWO seals ride out a stalled fetch
+    before any pump blocks on a spare (the PR 4 pair allowed one): with
+    the reader wedged mid-transfer, the pump seals twice without waiting,
+    and everything drains bit-exactly once the reader resumes."""
+    xy, ts = stream
+    pool = DetectorPool(CFG, capacity=1, ring_rounds=2, drain_mode="async",
+                        ring_depth=3)
+    lane = pool.connect(seed=CFG.seed)
+    fetch_started = threading.Event()
+    fetch_release = threading.Event()
+    real_fetch = pool._rt._fetch_ring
+
+    def slow_fetch(ring):
+        fetch_started.set()
+        assert fetch_release.wait(timeout=30)
+        return real_fetch(ring)
+
+    pool._rt._fetch_ring = slow_fetch
+    try:
+        pool.feed(lane, xy[:1024], ts[:1024])   # 4 rounds through 2 slots
+        t0 = time.monotonic()
+        pool.pump()                             # seal #1 (reader stalls on it)
+        assert fetch_started.wait(timeout=30)
+        pool.feed(lane, xy[1024:1536], ts[1024:1536])
+        pool.pump()                             # fills the second live ring
+        pool.poll(lane, wait=False)             # seal #2: second spare, no wait
+        ps = pool.pool_stats()
+        assert ps["ring_depth"] == 3
+        assert ps["reader_lag_rounds"] >= 3     # two sealed rings in flight
+        assert time.monotonic() - t0 < 10.0     # nobody joined the fetch
+    finally:
+        fetch_release.set()
+    s, k = pool.flush(lane)
+    ref = pipeline.run_pipeline(xy[:1536], ts[:1536], CFG)
+    # flush barriers on the reader: everything sealed arrives, in order
+    np.testing.assert_array_equal(s, ref.scores)
+    pool.close()
+
+
+def test_ring_depth_validation():
+    with pytest.raises(ValueError, match="ring_depth"):
+        DetectorPool(CFG, capacity=1, ring_depth=1)
+
+
 def test_reader_exception_propagates_to_next_caller(stream):
     """A fetch failure on the reader thread surfaces as a RuntimeError on
     the next public call (the PrefetchingLoader contract) and the pool
@@ -225,7 +270,7 @@ def test_reader_exception_propagates_to_next_caller(stream):
     def bad_fetch(ring):
         raise boom
 
-    pool._fetch_ring = bad_fetch
+    pool._rt._fetch_ring = bad_fetch
     with pytest.raises(RuntimeError, match="reader thread failed") as ei:
         pool.poll(lane)
     assert ei.value.__cause__ is boom
@@ -274,6 +319,62 @@ def test_close_stops_reader_and_rejects_use(stream):
     with pytest.raises(RuntimeError, match="closed"):
         pool.connect()
     pool.close()                     # idempotent
+
+
+def test_poll_revalidates_lane_after_drain_wait(stream):
+    """A lane retired while poll() waits on the reader (the cv wait
+    releases the lock) must surface the documented KeyError, not crash on
+    the emptied slot.  The retire is simulated at the exact wait point."""
+    xy, ts = stream
+    pool = DetectorPool(CFG, capacity=1, drain_mode="async")
+    lane = pool.connect(seed=CFG.seed)
+    pool.feed(lane, xy[:512], ts[:512])
+    pool.pump()
+    rt = pool._rt
+    orig = rt._drain_bucket
+
+    def drain_then_retire(bucket, **kw):
+        orig(bucket, **kw)
+        # what a concurrent disconnect that won the lock during the
+        # drain's cv wait leaves behind
+        rt._active[lane] = False
+        rt._lanes[lane] = None
+
+    rt._drain_bucket = drain_then_retire
+    with pytest.raises(KeyError, match="not an active session"):
+        rt.poll(lane)
+    pool.close()
+
+
+def test_stage_migration_drops_decision_for_recycled_slot(stream):
+    """A migration decision that waited out a pump pass while its session
+    was retired (and the slot re-connected) must be dropped, not applied
+    to the new tenant on the old tenant's rate history."""
+    from repro.serve import runtime as runtime_mod
+
+    xy, ts = stream
+    pool = DetectorPool(CFG, capacity=1, buckets=(128, 512),
+                        policy="adaptive")
+    lane = pool.connect(seed=CFG.seed, chunk=128)
+    pool.feed(lane, xy[:256], ts[:256])
+    pool.pump()
+    rt = pool._rt
+    ln_before = rt._lanes[lane]
+    orig_acquire = rt._acquire_pump
+
+    def acquire_then_swap_tenant():
+        orig_acquire()
+        if rt._lanes[lane] is ln_before:      # first acquisition only
+            rt._lanes[lane] = runtime_mod._Lane(128)  # recycled slot
+
+    rt._acquire_pump = acquire_then_swap_tenant
+    rt.stage_migration(lane, 512)             # decision for the OLD tenant
+    rt._acquire_pump = orig_acquire
+    assert rt.staged_migrations() == {}       # dropped, not staged
+    pool.pump()                               # apply pass: nothing to do
+    assert pool.stats(lane)["migrations"] == 0
+    assert pool.stats(lane)["bucket"] == 128
+    pool.close()
 
 
 def test_sync_mode_has_no_reader_thread():

@@ -1,7 +1,8 @@
 """Device-resident pool runtime: ring-buffered K-round execution, async
-double-buffered drain, chunk-size buckets, and sharded lanes.
+N-deep ring-of-rings drain, chunk-size buckets, sharded lanes, and live
+bucket migration.
 
-Acceptance contracts (ISSUE 3 + ISSUE 4):
+Acceptance contracts (ISSUE 3 + ISSUE 4 + ISSUE 5):
 
   * K-round ring-buffered ``pump_rounds(K)`` is bit-exact (scores, kept,
     final TOS, float64 energy books) vs K sequential single-round pumps,
@@ -18,6 +19,15 @@ Acceptance contracts (ISSUE 3 + ISSUE 4):
     with undrained ring slots, ragged slabs crossing bucket boundaries,
     ``poll()`` under ring overflow (both policies x both drain modes, with
     the drop host-mirror audited against the device counter).
+  * The async ring *pair* generalizes to an N-deep ring-of-rings
+    (``ring_depth``), bit-exact for depth in {2, 3} through the staggered
+    churn harness.
+  * ``policy="adaptive"`` live bucket migration: a rate-ramp stream is
+    bit-exact (scores/kept/TOS/LUT/float64 energy books) vs a
+    ``StreamingDetector.rebucket`` replay at the logged boundaries — no
+    round lost, duplicated, or reordered; nothing recompiles through
+    migrations — across both drain modes x both overflow policies with
+    join/leave churn.  ``policy="static"`` (the default) never migrates.
 """
 import dataclasses
 import subprocess
@@ -312,6 +322,195 @@ def test_bucket_selection_and_errors(streams):
     assert pool.stats(lane2)["bucket"] == 256
     with pytest.raises(ValueError, match="buckets must be positive"):
         DetectorPool(cfg, capacity=1, buckets=(0, 128))
+
+
+# ---------------------------------------------------------------------------
+# N-deep ring-of-rings (ISSUE 5 satellite: generalize the PR 4 pair)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("depth", [2, 3])
+def test_ring_of_rings_depth_bitexact(streams, ring_refs, seq_served, depth):
+    """The async drain's ring count is a knob, not a behavior: depth 2 (the
+    PR 4 double buffer) and depth 3 both reproduce the sequential
+    single-round sync baseline bit for bit through the staggered
+    join/leave churn harness."""
+    pool = DetectorPool(_RING_CFG, capacity=3, ring_rounds=3,
+                        drain_mode="async", ring_depth=depth)
+    assert pool.pool_stats()["ring_depth"] == depth
+    a = _serve_staggered_k(pool, streams, _RING_CFG, 3)
+    for i in range(len(streams)):
+        np.testing.assert_array_equal(a[i][0], ring_refs[i].scores,
+                                      err_msg=f"depth {depth} lane {i}")
+        np.testing.assert_array_equal(a[i][0], seq_served[i][0])
+        np.testing.assert_array_equal(a[i][1], seq_served[i][1])
+        assert a[i][2]["energy_pj"] == seq_served[i][2]["energy_pj"]
+    _assert_compiled_once(pool)
+    pool.close()
+
+
+# ---------------------------------------------------------------------------
+# Live bucket migration (ISSUE 5 tentpole)
+# ---------------------------------------------------------------------------
+
+
+def _ramp_stream(rates, half_us, seed):
+    """(xy, ts) of a deterministic rate-ramp: window j carries exactly
+    ``rates[j]`` events (shared generator — the bench witnesses use it)."""
+    st = synthetic.ramp_stream(rates, half_us, seed=seed)
+    return st.xy, st.ts
+
+
+def _replay_with_rebucket(cfg, xy, ts, start_bucket, migration_log):
+    """The migration oracle: a standalone session fed the same stream,
+    rebucketed at each logged (events_folded, from, to) boundary."""
+    from repro.serve import StreamingDetector
+
+    det = StreamingDetector(cfg, chunk=start_bucket, seed=cfg.seed)
+    ss, kk = [], []
+    cur = 0
+    for m, _frm, to in migration_log:
+        s, k = det.feed(xy[cur:m], ts[cur:m])
+        ss.append(s)
+        kk.append(k)
+        det.rebucket(to)
+        cur = m
+    s, k = det.feed(xy[cur:], ts[cur:])
+    ss.append(s)
+    kk.append(k)
+    s, k = det.flush()
+    ss.append(s)
+    kk.append(k)
+    return np.concatenate(ss), np.concatenate(kk), det
+
+
+@pytest.mark.parametrize("drain_mode", ["sync", "async"])
+@pytest.mark.parametrize("overflow", ["drain", "drop_oldest"])
+def test_adaptive_migration_bitexact_vs_rebucket_replay(drain_mode,
+                                                        overflow):
+    """Rate-ramp lanes under ``policy="adaptive"``: each lane migrates up
+    when its measured rate outgrows its bucket, and its full readout
+    (scores, kept, final TOS/LUT state, float64 energy books) equals a
+    ``StreamingDetector.rebucket`` replay at the logged boundaries — under
+    both drain modes and both overflow policies (ring sized so nothing
+    drops: the policies must not perturb a lossless run), with a third
+    lane joining and leaving mid-ramp (churn must not recompile or
+    perturb the migrating lanes)."""
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    half = cfg.dvfs_cfg.half_us
+    rates = [100] * 5 + [512] * 8                 # ~100 -> 512 ev/half-win
+    ramps = [_ramp_stream(rates, half, seed=11 + i) for i in range(2)]
+    churn_xy, churn_ts = _ramp_stream([300] * 4, half, seed=40)
+
+    pool = DetectorPool(cfg, capacity=3, ring_rounds=4,
+                        buckets=(128, 512), policy="adaptive",
+                        migrate_patience=2, drain_mode=drain_mode,
+                        on_overflow=overflow)
+    lanes = [pool.connect(seed=cfg.seed, chunk=128) for _ in range(2)]
+    out = {i: ([], []) for i in range(2)}
+    churn_lane = None
+    n_win = len(rates)
+    for j in range(n_win):
+        if j == 3:                                # churn: join mid-ramp
+            churn_lane = pool.connect(seed=cfg.seed, chunk=512)
+            pool.feed(churn_lane, churn_xy, churn_ts)
+        for i, lane in enumerate(lanes):
+            xy, ts = ramps[i]
+            m = (ts // half) == j
+            pool.feed(lane, xy[m], ts[m])
+        pool.pump()
+        for i, lane in enumerate(lanes):
+            s, k = pool.poll(lane)
+            out[i][0].append(s)
+            out[i][1].append(k)
+        if j == 7:                                # churn: leave mid-ramp
+            s, k = pool.flush(churn_lane)
+            ref = pipeline.run_pipeline(
+                churn_xy, churn_ts,
+                dataclasses.replace(cfg, chunk=512),
+            )
+            np.testing.assert_array_equal(s, ref.scores)
+            assert pool.disconnect(churn_lane)["migrations"] == 0
+            churn_lane = None
+    final_states = {}
+    logs = {}
+    for i, lane in enumerate(lanes):
+        s, k = pool.flush(lane)
+        out[i][0].append(s)
+        out[i][1].append(k)
+        final_states[i] = _lane_state(pool, lane)
+        st = pool.disconnect(lane)
+        logs[i] = (st["migration_log"], st)
+        assert st["migrations"] >= 1, f"lane {i} never migrated"
+        assert st["bucket"] == 512                # ended in the big bucket
+    assert pool.pool_stats()["migrations_total"] >= 2
+    _assert_compiled_once(pool)                   # migrations: 0 recompiles
+    pool.close()
+
+    for i in range(2):
+        xy, ts = ramps[i]
+        # poll-drained segments concatenate in stream order
+        got_s = np.concatenate([np.zeros((0,), np.float32)] + out[i][0])
+        got_k = np.concatenate([np.zeros((0,), bool)] + out[i][1])
+        log, st = logs[i]
+        rep_s, rep_k, det = _replay_with_rebucket(cfg, xy, ts, 128, log)
+        np.testing.assert_array_equal(got_s, rep_s, err_msg=f"lane {i}")
+        np.testing.assert_array_equal(got_k, rep_k)
+        assert st["energy_pj"] == det.energy_pj   # float64 books identical
+        assert st["kept_total"] == det.kept_total
+        # carried device state identical too (TOS/SAE/LUT/key/accums)
+        _assert_states_equal(final_states[i], jax.device_get(det.state))
+
+
+def test_adaptive_migration_poll_cadence_collects_everything():
+    """The migration path loses nothing even when polls are sparse: one
+    lane polled only at the end still reads its full stream (migration
+    seal+drain delivered the pre-move rounds to the queue in order)."""
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    half = cfg.dvfs_cfg.half_us
+    xy, ts = _ramp_stream([100] * 4 + [512] * 6, half, seed=5)
+    pool = DetectorPool(cfg, capacity=1, ring_rounds=8, buckets=(128, 512),
+                        policy="adaptive", migrate_patience=2)
+    lane = pool.connect(chunk=128, seed=cfg.seed)
+    wins = ts // half
+    scored = 0
+    for j in range(int(wins[-1]) + 1):
+        m = wins == j
+        pool.feed(lane, xy[m], ts[m])
+        pool.pump()
+        # a drain observation without a full readout: non-blocking poll
+        s, _ = pool.poll(lane, wait=False)
+        scored += s.size
+    s, _ = pool.flush(lane)
+    scored += s.size
+    st = pool.stats(lane)
+    assert st["migrations"] >= 1
+    # every event scored exactly once across all readouts
+    assert scored == len(ts)
+    pool.close()
+
+
+def test_static_policy_never_migrates_on_ramp():
+    """The default policy is frozen placement: the same ramp that moves an
+    adaptive lane leaves a static lane in its connect-time bucket, and its
+    readout equals run_pipeline at that bucket (PR 4 behavior exactly)."""
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    half = cfg.dvfs_cfg.half_us
+    xy, ts = _ramp_stream([100] * 4 + [512] * 6, half, seed=5)
+    pool = DetectorPool(cfg, capacity=1, ring_rounds=4, buckets=(128, 512))
+    assert pool.policy == "static"
+    lane = pool.connect(chunk=128, seed=cfg.seed)
+    wins = ts // half
+    for j in range(int(wins[-1]) + 1):
+        m = wins == j
+        pool.feed(lane, xy[m], ts[m])
+        pool.pump()
+        pool.poll(lane)
+    s, k = pool.flush(lane)
+    st = pool.stats(lane)
+    assert st["migrations"] == 0 and st["bucket"] == 128
+    assert pool.pool_stats()["migrations_total"] == 0
+    pool.close()
 
 
 # ---------------------------------------------------------------------------

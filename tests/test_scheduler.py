@@ -1,0 +1,321 @@
+"""Control plane (ISSUE 5): scheduler policy units, the rate-estimator
+surfacing contract, and ``StreamingDetector.rebucket``.
+
+Contracts:
+
+  * ``AdaptiveScheduler`` hysteresis: migrate up the moment the observed
+    events-per-half-window outgrows the bucket, migrate down only with
+    ``down_margin`` headroom, and only after ``patience`` consecutive
+    drains agreeing on the same target (one bursty window never moves a
+    lane).  ``StaticScheduler`` never migrates and keeps ascending pump
+    order.
+  * The per-lane rate estimate surfaced into ``stats()`` comes from ONE
+    formula (``core.state.rate_estimate_eps``): the host twin binning fed
+    timestamps equals the in-state estimator the online-DVFS step carries
+    (property: ``events_per_s_est == device_events_per_s_est`` on an
+    online config once both have integrated the same events).
+  * ``StreamingDetector.rebucket`` is exact: a session that hops chunk
+    size mid-stream reproduces a manual ``detector_step`` fold that
+    switches step sizes at the same event boundary, bit for bit, books
+    included.
+"""
+import numpy as np
+import pytest
+
+from repro.core import pipeline
+from repro.core import state as state_mod
+from repro.events import synthetic
+from repro.serve import (
+    AdaptiveScheduler,
+    DetectorPool,
+    StaticScheduler,
+    StreamingDetector,
+)
+from repro.serve import streaming as streaming_mod
+from repro.serve.scheduler import make_scheduler
+
+BUCKETS = (128, 256, 512)
+
+
+# ---------------------------------------------------------------------------
+# Policy units
+# ---------------------------------------------------------------------------
+
+
+def test_static_scheduler_places_and_never_migrates():
+    s = StaticScheduler(BUCKETS)
+    assert s.place(64) == 128
+    assert s.place(128) == 128
+    assert s.place(129) == 256
+    assert s.place(513) is None
+    assert s.order({128: 0, 256: 9, 512: 3}) == BUCKETS   # ascending, always
+    for _ in range(10):
+        assert s.observe(0, 128, 1e9) is None
+
+
+def test_adaptive_desired_hysteresis():
+    s = AdaptiveScheduler(BUCKETS, patience=1, down_margin=0.9)
+    # up: the moment the rate no longer fits the bucket
+    assert s.desired(128, 128.0) == 128
+    assert s.desired(128, 129.0) == 256
+    assert s.desired(128, 600.0) == 512          # straight to the fit
+    assert s.desired(512, 9999.0) == 512         # nothing bigger: stay
+    # down: needs margin headroom under the smaller bucket
+    assert s.desired(512, 300.0) == 512          # fits 512 only
+    assert s.desired(512, 250.0) == 512          # fits 256 but > 256*0.9
+    assert s.desired(512, 230.0) == 256          # <= 230.4: move down
+    assert s.desired(256, 100.0) == 128
+    assert s.desired(128, 0.0) == 128            # already smallest
+    # no dead zone: a rate too close to the BOTTOM tier's margin still
+    # descends partway to the deepest tier that has margin headroom
+    assert s.desired(512, 120.0) == 256          # 120 > 128*0.9, but << 256
+
+
+def test_adaptive_patience_gates_consecutive_observations():
+    s = AdaptiveScheduler(BUCKETS, patience=3)
+    # two agreeing observations (want 256): not yet
+    assert s.observe(0, 128, 200.0) is None
+    assert s.observe(0, 128, 210.0) is None
+    # a disagreeing one (fits 128) resets the streak
+    assert s.observe(0, 128, 100.0) is None
+    assert s.observe(0, 128, 200.0) is None
+    assert s.observe(0, 128, 200.0) is None
+    assert s.observe(0, 128, 200.0) == 256       # third in a row fires
+    # streak consumed: the next cycle starts over
+    assert s.observe(0, 128, 200.0) is None
+    # a streak switching wanted buckets restarts the count
+    assert s.observe(1, 128, 200.0) is None
+    assert s.observe(1, 128, 600.0) is None
+    assert s.observe(1, 128, 600.0) is None
+    assert s.observe(1, 128, 600.0) == 512
+    # forget clears per-lane state (slot reuse)
+    assert s.observe(2, 128, 200.0) is None
+    s.forget(2)
+    assert s.observe(2, 128, 200.0) is None      # streak restarted at 1
+
+
+def test_patience_counts_rate_windows_not_polls():
+    """Observations repeating the same estimator window collapse to one:
+    a caller polling many times per DVFS half-window cannot burn the
+    anti-flap patience gate inside a single bursty window."""
+    s = AdaptiveScheduler(BUCKETS, patience=2)
+    assert s.observe(0, 128, 200.0, win=7) is None
+    assert s.observe(0, 128, 200.0, win=7) is None    # same window
+    assert s.observe(0, 128, 200.0, win=7) is None    # still one window
+    assert s.observe(0, 128, 200.0, win=8) == 256     # second window fires
+
+
+def test_nonblocking_poll_defers_migration_staging():
+    """poll(wait=False) must never block — a migration decision made there
+    is parked and staged at the next pump (a fold point that may block),
+    not staged inline (staging seals+drains the bucket)."""
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    half = cfg.dvfs_cfg.half_us
+    st = synthetic.ramp_stream([512] * 4, half, seed=1)
+    pool = DetectorPool(cfg, capacity=1, buckets=(128, 512),
+                        policy="adaptive", migrate_patience=1)
+    lane = pool.connect(chunk=128, seed=cfg.seed)
+    for j in range(4):
+        m = (st.ts // half) == j
+        pool.feed(lane, st.xy[m], st.ts[m])
+        pool.pump()
+        pool.poll(lane, wait=False)
+        if pool._deferred:
+            break
+    assert pool._deferred == {lane: 512}
+    assert pool._rt.staged_migrations() == {}     # nothing staged inline
+    pool.pump()                                   # fold point: stage+apply
+    assert pool._deferred == {}
+    s_ = pool.stats(lane)
+    assert s_["bucket"] == 512 and s_["migrations"] == 1
+    pool.close()
+
+
+def test_adaptive_pump_order_is_starved_first():
+    s = AdaptiveScheduler(BUCKETS)
+    assert s.order({128: 0, 256: 4, 512: 1}) == (256, 512, 128)
+    # ties break ascending for determinism
+    assert s.order({128: 2, 256: 2, 512: 2}) == BUCKETS
+    assert s.order({}) == BUCKETS
+
+
+def test_make_scheduler_validation():
+    assert make_scheduler("static", BUCKETS).policy == "static"
+    assert make_scheduler("adaptive", BUCKETS).policy == "adaptive"
+    with pytest.raises(ValueError, match="policy"):
+        make_scheduler("greedy", BUCKETS)
+    with pytest.raises(ValueError, match="patience"):
+        AdaptiveScheduler(BUCKETS, patience=0)
+    with pytest.raises(ValueError, match="down_margin"):
+        AdaptiveScheduler(BUCKETS, down_margin=1.5)
+
+
+def test_pool_rejects_mismatched_scheduler_and_bad_policy():
+    cfg = pipeline.PipelineConfig(chunk=128)
+    with pytest.raises(ValueError, match="policy"):
+        DetectorPool(cfg, capacity=1, policy="greedy")
+    with pytest.raises(ValueError, match="do not match"):
+        DetectorPool(cfg, capacity=1, buckets=(128, 256),
+                     scheduler=StaticScheduler((128,)))
+    # a matching external scheduler instance is accepted
+    pool = DetectorPool(cfg, capacity=1, buckets=(128, 256),
+                        scheduler=AdaptiveScheduler((128, 256), patience=1))
+    assert pool.policy == "adaptive"
+    pool.close()
+
+
+# ---------------------------------------------------------------------------
+# Rate estimator surfacing: one formula, two sources
+# ---------------------------------------------------------------------------
+
+
+def test_rate_estimate_eps_saturating_f32_read():
+    dcfg = pipeline.PipelineConfig().dvfs_cfg
+    assert state_mod.rate_estimate_eps(0, 0, dcfg) == 0.0
+    # pair/tw_us scaled to events/s: 100+100 over 10ms -> 20k ev/s
+    assert state_mod.rate_estimate_eps(100, 100, dcfg) == pytest.approx(
+        200 / dcfg.tw_us * 1e6
+    )
+    # both counters saturate at 2^bits - 1, like the device read
+    sat = (1 << dcfg.counter_bits) - 1
+    assert state_mod.rate_estimate_eps(10 * sat, sat, dcfg) == \
+        state_mod.rate_estimate_eps(sat, sat, dcfg)
+
+
+def test_host_rate_twin_matches_device_estimator_online():
+    """The pool's host twin (binning fed timestamps) and the in-state
+    estimator the online-DVFS step integrates read the same formula and
+    must agree exactly once both have seen the same events (chunk-aligned
+    slabs, fully pumped)."""
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2,
+                                  dvfs=True, dvfs_online=True)
+    st = synthetic.shapes_stream(duration_us=40_000, seed=3)
+    pool = DetectorPool(cfg, capacity=1, ring_rounds=4)
+    lane = pool.connect(seed=cfg.seed)
+    for i in range(0, 1792, 256):                # chunk-aligned slabs
+        pool.feed(lane, st.xy[i:i + 256], st.ts[i:i + 256])
+        pool.pump()
+        pool.poll(lane)
+        s = pool.stats(lane)
+        assert s["events_per_s_est"] == s["device_events_per_s_est"], i
+    assert pool.stats(lane)["events_per_s_est"] > 0
+    pool.close()
+
+
+def test_rate_estimator_is_zero_without_online_dvfs_on_device_only():
+    """Without online DVFS the step never integrates the in-state
+    estimator (device est = 0) but the host twin still observes — the
+    adaptive scheduler works for every servable config."""
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    st = synthetic.shapes_stream(duration_us=20_000, seed=0)
+    pool = DetectorPool(cfg, capacity=1)
+    lane = pool.connect(seed=cfg.seed)
+    # the whole stream spans 4 half-windows, so the closed pair is non-empty
+    pool.feed(lane, st.xy, st.ts)
+    pool.pump()
+    pool.poll(lane)
+    s = pool.stats(lane)
+    assert s["device_events_per_s_est"] == 0.0
+    assert s["events_per_s_est"] > 0.0
+    pool.close()
+
+
+# ---------------------------------------------------------------------------
+# StreamingDetector.rebucket
+# ---------------------------------------------------------------------------
+
+
+def _manual_switched_fold(cfg, xy, ts, m, chunk_a, chunk_b):
+    """Oracle: fold ``xy/ts`` with the shared jitted detector step, chunked
+    at ``chunk_a`` up to event ``m`` (a multiple of ``chunk_a``) and at
+    ``chunk_b`` beyond, flushing the padded tail at ``chunk_b``.  This is
+    the fold a rebucketed session must reproduce bit-for-bit."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    base = streaming_mod.session_base_us(int(ts[0]), cfg)
+    riders = state_mod.chunk_input_riders(
+        1, np.full((1,), cfg.vdd, np.float64), cfg
+    )
+    r = tuple(np.float32(x[0]) for x in riders)
+    state = state_mod.detector_init(cfg, seed=cfg.seed)
+    scores, kept = [], []
+
+    def fold(lo, hi, chunk, state, flush):
+        tcfg = pipeline._trace_cfg(dataclasses.replace(cfg, chunk=chunk))
+        step = streaming_mod._step_fn(tcfg, False)
+        i = lo
+        while hi - i >= chunk or (flush and i < hi):
+            n = min(chunk, hi - i)
+            xyc = np.zeros((chunk, 2), np.int32)
+            xyc[:n] = xy[i:i + n]
+            tsc = np.full((chunk,), ts[i + n - 1], np.int64)
+            tsc[:n] = ts[i:i + n]
+            ci = state_mod.ChunkInput(
+                xy=jnp.asarray(xyc),
+                ts=jnp.asarray((tsc - base).astype(np.int32)),
+                valid=jnp.asarray(np.arange(chunk) < n),
+                ber=jnp.asarray(r[0]),
+                energy_coef=jnp.asarray(r[1]),
+                latency_coef=jnp.asarray(r[2]),
+            )
+            state, out = step(state, ci)
+            scores.append(np.asarray(out.scores)[:n])
+            kept.append(np.asarray(out.keep)[:n])
+            i += n
+        return state
+
+    state = fold(0, m, chunk_a, state, flush=False)
+    fold(m, len(ts), chunk_b, state, flush=True)
+    return np.concatenate(scores), np.concatenate(kept)
+
+
+@pytest.mark.parametrize("chunk_a,chunk_b", [(256, 128), (128, 512)])
+def test_rebucket_matches_switched_fold(chunk_a, chunk_b):
+    st = synthetic.shapes_stream(duration_us=40_000, seed=1)
+    xy, ts = st.xy[:2600], st.ts[:2600]
+    cfg = pipeline.PipelineConfig(chunk=64, lut_every_chunks=2)
+    m = 4 * chunk_a                               # hop at a chunk boundary
+    ref_s, ref_k = _manual_switched_fold(cfg, xy, ts, m, chunk_a, chunk_b)
+
+    det = StreamingDetector(cfg, chunk=chunk_a)
+    s1, k1 = det.feed(xy[:m], ts[:m])
+    assert det.stats()["chunk"] == chunk_a
+    assert det.rebucket(chunk_b) is det
+    assert det.stats()["chunk"] == chunk_b
+    assert det.stats()["rebuckets"] == 1
+    s2, k2 = det.feed(xy[m:], ts[m:])
+    s3, k3 = det.flush()
+    got_s = np.concatenate([s1, s2, s3])
+    got_k = np.concatenate([k1, k2, k3])
+    np.testing.assert_array_equal(got_s, ref_s)
+    np.testing.assert_array_equal(got_k, ref_k)
+    assert det.n_events == len(ts)                # nothing lost or duplicated
+
+
+def test_rebucket_with_buffered_partial_rechunks_exactly():
+    """A rebucket with events still in the re-chunk buffer re-chunks them
+    at the new size — equivalent to having fed the whole stream to a
+    session that hopped at the same fold boundary."""
+    st = synthetic.shapes_stream(duration_us=40_000, seed=2)
+    xy, ts = st.xy[:1500], st.ts[:1500]
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    # 1100 events fed at 256: folds 4 chunks (1024), buffers 76
+    det = StreamingDetector(cfg)
+    s1, _ = det.feed(xy[:1100], ts[:1100])
+    assert s1.size == 1024 and det.stats()["buffered"] == 76
+    det.rebucket(128)
+    s2, _ = det.feed(xy[1100:], ts[1100:])        # buffer + rest at 128
+    s3, _ = det.flush()
+    ref_s, _ = _manual_switched_fold(cfg, xy, ts, 1024, 256, 128)
+    np.testing.assert_array_equal(np.concatenate([s1, s2, s3]), ref_s)
+
+
+def test_rebucket_noop_and_validation():
+    cfg = pipeline.PipelineConfig(chunk=256)
+    det = StreamingDetector(cfg)
+    assert det.rebucket(256) is det               # same size: no-op
+    assert det.rebuckets == 0
+    with pytest.raises(ValueError, match="chunk"):
+        det.rebucket(0)
