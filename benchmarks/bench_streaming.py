@@ -47,6 +47,15 @@ Rows per pool size K in {1, 4, 16}:
     structural witnesses gated by ``run.py --check-regression``;
     ``..._padding_saved_mb`` and ``..._rounds_per_fetch`` ride along as
     context.
+  * ``poolK_overload_p99_{none,ladder}_ms`` /
+    ``poolK_overload_ladder_transitions`` — the overload ladder (ISSUE 6)
+    under a 2x flash crowd (``burst_stream``): p99 wall latency of a
+    serving round with no degradation vs with ``policy="ladder"`` (lower
+    QoS classes stretch LUT refresh, lower the DVFS ceiling, then shed to
+    one ring of rounds; the premium lane's full refresh cadence is
+    asserted every round).  The transition count is the structural
+    witness that the ladder actually actuated; both p99 rows are
+    wall-time gated.
 
 plus the batch-path reference (``batchK_events_per_s`` via the vmapped
 ``run_pipeline_batched`` scan) so the cost of *online* serving is visible
@@ -173,6 +182,68 @@ def _run_ramp(cfg, k, *, policy, rates):
     return out
 
 
+def _run_overload(cfg, k, *, use_ladder, n_windows):
+    """2x flash-crowd overload (``burst_stream``): each half-window every
+    lane receives one ring of rounds at baseline and twice that during the
+    burst, then the round is pumped and polled.  Without the ladder the
+    pump must fold every arrived round; with it, lanes degrade tier by
+    tier until standard lanes shed to one ring of rounds while the premium
+    lane (lane 0, pools > 1) keeps full quality — its LUT refresh cadence
+    is asserted every round.  Returns per-round latencies plus the
+    ladder's transition and shed counters (the structural witnesses)."""
+    from repro.serve.scheduler import LadderConfig
+
+    half = cfg.dvfs_cfg.half_us
+    ring = 4
+    bucket = cfg.chunk                  # stay in the warmed default bucket
+    base = ring * bucket                # 1x load: one ring per half-window
+    streams = [
+        synthetic.burst_stream(
+            base, n_windows, half, burst_start=4,
+            burst_len=n_windows - 8, burst_factor=2.0, seed=SEED + s,
+        )
+        for s in range(k)
+    ]
+    pool = DetectorPool(
+        cfg, capacity=k, ring_rounds=ring, buckets=(bucket,),
+        policy="ladder" if use_ladder else "static",
+        ladder=LadderConfig(patience=1, recover_patience=2)
+        if use_ladder else None,
+    )
+    pool.warmup(streams[0].xy, streams[0].ts)
+    lanes = {
+        i: pool.connect(
+            seed=SEED + i,
+            qos="premium" if (i == 0 and k > 1) else "standard",
+        )
+        for i in range(k)
+    }
+    lat = []
+    for j in range(n_windows):
+        t1 = time.perf_counter()
+        for i, lane in lanes.items():
+            st = streams[i]
+            m = (st.ts // half) == j
+            pool.feed(lane, st.xy[m], st.ts[m])
+        pool.pump()
+        for lane in lanes.values():
+            pool.poll(lane)
+        lat.append(time.perf_counter() - t1)
+        if use_ladder and k > 1:
+            # premium holds full LUT refresh cadence through the overload
+            s0 = pool.stats(lanes[0])
+            assert s0["ctrl_lut_every"] == cfg.lut_every_chunks, s0
+            assert s0["ladder_tier"] == 0, s0
+    ps = pool.pool_stats()
+    trans = ps.get("ladder_transitions", 0)
+    shed = ps["shed_events_total"]
+    assert pool.executors_compiled_once(), pool.compile_cache_sizes()
+    if use_ladder:
+        assert trans > 0 and shed > 0, (trans, shed)
+    pool.close()
+    return np.asarray(lat), trans, shed
+
+
 def _run_batch(cfg, streams):
     k = len(streams)
     e = min(len(s) for s in streams)
@@ -265,6 +336,23 @@ def rows(smoke: bool = False):
                     (pad_s - pad_a) / 1e6))
         out.append((f"pool{k}_migration_rounds_per_fetch", 0.0,
                     rounds / max(fetches, 1)))
+
+        # overload ladder SLO: p99 of a serving round under a 2x flash
+        # crowd, with and without graceful degradation (ISSUE 6); the
+        # full run needs a long sustained burst — with few windows the
+        # p99 is the max of a handful of samples and host jitter
+        # swamps the ladder's effect at mid pool sizes
+        n_win = 12 if smoke else 24
+        lat_n, _, _ = _run_overload(cfg, k, use_ladder=False,
+                                    n_windows=n_win)
+        lat_l, trans, _ = _run_overload(cfg, k, use_ladder=True,
+                                        n_windows=n_win)
+        out.append((f"pool{k}_overload_p99_none_ms", 0.0,
+                    float(np.percentile(lat_n, 99) * 1e3)))
+        out.append((f"pool{k}_overload_p99_ladder_ms", 0.0,
+                    float(np.percentile(lat_l, 99) * 1e3)))
+        out.append((f"pool{k}_overload_ladder_transitions", 0.0,
+                    float(trans)))
 
         bdt, bn = _run_batch(cfg, streams)
         out.append((f"batch{k}_events_per_s", bdt * 1e6 / max(bn, 1),

@@ -18,14 +18,16 @@ modules finish, key serving rows are compared against the committed
 baseline JSON and the process exits non-zero on a regression.
 
   * structural rows (``*_burst_rounds_per_fetch`` higher-is-better,
-    ``*_fetches_per_round`` lower-is-better, and the ISSUE 5 migration
+    ``*_fetches_per_round`` lower-is-better, the ISSUE 5 migration
     witnesses ``*_migration_count`` / ``*_migration_padding_saved_ratio``,
-    both higher-is-better) count blocking transfers per executed round and
-    the adaptive scheduler's work — machine-independent and deterministic
+    and the ISSUE 6 overload witness ``*_overload_ladder_transitions``,
+    all higher-is-better) count blocking transfers per executed round and
+    the control plane's work — machine-independent and deterministic
     at fixed sizes, so they get the tight ``--tol`` (default 0.35 = 35%).
     These catch "the ring quietly started fetching every round" and "the
-    scheduler quietly stopped migrating" class bugs.
-  * wall-time rows (``*_slab_p99_ms`` lower-is-better) get the loose
+    scheduler quietly stopped migrating/degrading" class bugs.
+  * wall-time rows (``*_slab_p99_ms`` and the overload SLO rows
+    ``*_overload_p99_{none,ladder}_ms``, lower-is-better) get the loose
     ``--tol-time`` (default 3.0 = 4x baseline) so the gate survives CI
     machine variance, and are skipped entirely when the run's ``--smoke``
     flag differs from the baseline's (different sizes, incomparable).
@@ -53,9 +55,18 @@ _GATE_STRUCTURAL = (
     # static policy (ratio) — both machine-independent at fixed sizes
     ("_migration_count", "higher"),
     ("_migration_padding_saved_ratio", "higher"),
+    # overload ladder (ISSUE 6): the 2x flash-crowd scenario must keep
+    # actuating tier transitions — zero means the ladder stopped observing,
+    # deciding, or actuating
+    ("_overload_ladder_transitions", "higher"),
 )
 _GATE_TIME = (
     ("_slab_p99_ms", "lower"),
+    # overload SLO: p99 of a serving round under 2x overload, with and
+    # without graceful degradation — the ladder's latency win must not
+    # quietly erode (and the no-ladder reference must not quietly explode)
+    ("_overload_p99_none_ms", "lower"),
+    ("_overload_p99_ladder_ms", "lower"),
 )
 
 

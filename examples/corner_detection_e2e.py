@@ -14,9 +14,11 @@ reference being the property-tested oracle, with O(n_chunks) fewer blocking
 host transfers) and a tour of the *serving* layers: a ``StreamingDetector``
 session fed in uneven slabs with online DVFS, a ``PrefetchingLoader``
 device-slab feed, a two-camera ``DetectorPool`` on the ring-buffered
-K-round executor (rounds back-to-back on device, one fetch per drain), and
-a chunk-size-bucketed pool serving heterogeneous sensors — each bit-exact
-against the batch scan.  Set ``backend`` in ``PipelineConfig`` to
+K-round executor (rounds back-to-back on device, one fetch per drain), a
+chunk-size-bucketed pool serving heterogeneous sensors, an adaptive
+live-migration lane, and an overload-ladder lane pair (a 2x flash crowd
+degrades the standard session tier by tier while the premium session holds
+full quality) — each bit-exact against the batch scan.  Set ``backend`` in ``PipelineConfig`` to
 ``"pallas_nmc"`` / ``"pallas_batched"`` to route the TOS update through the
 Pallas kernels instead of the jnp closed form.
 """
@@ -175,6 +177,43 @@ def demo_streaming(stream):
           f" rate est {st['events_per_s_est'] / 1e3:.0f} kev/s,"
           f" executables: {pool3.compile_cache_sizes()})")
     pool3.close()
+
+    # 6) Overload ladder: a flash crowd doubles both lanes' arrival rate;
+    #    the ladder observes the backlog pressure every pump pass and
+    #    degrades the standard lane tier by tier (stretch LUT refresh ->
+    #    lower the DVFS ceiling -> shed stale events), while the premium
+    #    lane holds full quality throughout — degrade quality, never
+    #    latency, and never a recompile (the knobs are DetectorState.ctrl
+    #    data, not compile-time config).
+    from repro.serve import LadderConfig
+    n_win = 12
+    burst = [synthetic.burst_stream(2 * 128, n_win, half, burst_factor=2.0,
+                                    seed=11 + s, height=cfg.height,
+                                    width=cfg.width) for s in range(2)]
+    pool4 = DetectorPool(cfg, capacity=2, ring_rounds=2, buckets=(128,),
+                         policy="ladder",
+                         ladder=LadderConfig(patience=1, recover_patience=2))
+    std = pool4.connect(seed=cfg.seed, chunk=128, qos="standard")
+    prm = pool4.connect(seed=cfg.seed, chunk=128, qos="premium")
+    peak = 0
+    for j in range(n_win):
+        for lane, st4 in ((std, burst[0]), (prm, burst[1])):
+            m = (st4.ts // half) == j
+            pool4.feed(lane, st4.xy[m], st4.ts[m])
+        pool4.pump()
+        pool4.poll(std), pool4.poll(prm)
+        peak = max(peak, pool4.pool_stats()["ladder_level"])
+    ps4 = pool4.pool_stats()
+    s_std, s_prm = pool4.stats(std), pool4.stats(prm)
+    print("  overload ladder (2x burst):      premium held full cadence:",
+          s_prm["ctrl_lut_every"] == cfg.lut_every_chunks
+          and s_prm["ladder_tier"] == 0,
+          f" (peak level {peak}/{ps4['ladder_max_level']},"
+          f" standard tier {s_std['ladder_tier']},"
+          f" {ps4['ladder_transitions']} transitions,"
+          f" {ps4['shed_events_total']} shed,"
+          f" executables: {pool4.compile_cache_sizes()})")
+    pool4.close()
 
 
 def main():

@@ -41,10 +41,30 @@ class DvfsConfig:
     counter_bits: int = 20
     headroom: float = 1.25       # pick a Vdd whose capacity >= rate * headroom
     vdd_floor: float = 0.6       # most aggressive operating point allowed
+    # Highest operating point selectable (None = full LUT).  Truncating the
+    # table at a ceiling is bit-identical to clamping the chosen index at
+    # that entry (the picker takes the lowest index whose capacity fits,
+    # else the highest entry) — this field is the config-respecialized
+    # oracle the serving layer's in-state ``vdd_cap`` knob is tested
+    # against.
+    vdd_ceiling: float | None = None
 
     @property
     def half_us(self) -> int:
         return self.tw_us // 2   # each counter spans TW/2; stride = 50%
+
+
+def _lut_points(cfg: DvfsConfig) -> list:
+    """Floor/ceiling-filtered operating points, ascending Vdd."""
+    lut = [p for p in hwmodel.dvfs_lut() if p["vdd"] >= cfg.vdd_floor - 1e-9]
+    if cfg.vdd_ceiling is not None:
+        lut = [p for p in lut if p["vdd"] <= cfg.vdd_ceiling + 1e-9]
+        if not lut:
+            raise ValueError(
+                f"vdd_ceiling={cfg.vdd_ceiling} excludes every operating "
+                f"point above vdd_floor={cfg.vdd_floor}"
+            )
+    return lut
 
 
 @dataclasses.dataclass
@@ -124,7 +144,7 @@ def simulate_dvfs(
         _count_windows(jnp.asarray(ts), n_win, cfg.tw_us, cfg.counter_bits)
     )
 
-    lut = [p for p in hwmodel.dvfs_lut() if p["vdd"] >= cfg.vdd_floor - 1e-9]
+    lut = _lut_points(cfg)
     caps = jnp.asarray([p["max_meps"] for p in lut])
     vdds = np.asarray([p["vdd"] for p in lut])
     es = np.asarray([p["energy_pj"] for p in lut])
@@ -186,7 +206,7 @@ class OpPointTable(NamedTuple):
 @functools.lru_cache(maxsize=None)
 def op_point_table(cfg: DvfsConfig = DvfsConfig()) -> OpPointTable:
     """Host-side table of the controller's selectable operating points."""
-    lut = [p for p in hwmodel.dvfs_lut() if p["vdd"] >= cfg.vdd_floor - 1e-9]
+    lut = _lut_points(cfg)
     return OpPointTable(
         vdd64=np.asarray([p["vdd"] for p in lut], np.float64),
         caps=np.asarray([p["max_meps"] for p in lut], np.float32),

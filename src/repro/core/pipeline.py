@@ -237,6 +237,12 @@ def _trace_cfg(cfg: PipelineConfig, *,
 
     ``chunk`` overrides the chunk size — the serving layer's bucket tier
     traces one program per chunk-size bucket from a single base config.
+
+    ``lut_every_chunks`` is canonicalized too: the traced step reads the
+    refresh interval from ``DetectorState.ctrl`` (runtime data seeded by
+    ``detector_init`` from the *raw* config), so configs differing only in
+    refresh cadence — and ladder tiers moving it live — share one
+    executable.
     """
     online = _is_online(cfg)
     return dataclasses.replace(
@@ -247,6 +253,7 @@ def _trace_cfg(cfg: PipelineConfig, *,
         dvfs_online=online,
         dvfs_cfg=cfg.dvfs_cfg if online else dvfs_mod.DvfsConfig(),
         seed=0,
+        lut_every_chunks=1,
     )
 
 

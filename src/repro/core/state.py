@@ -61,10 +61,12 @@ from repro.core import stcf as stcf_mod
 from repro.core import tos as tos_mod
 
 __all__ = [
+    "ControlState",
     "DetectorState",
     "ChunkInput",
     "ChunkOutput",
     "RingState",
+    "control_init",
     "detector_init",
     "detector_step",
     "detector_scan",
@@ -123,6 +125,35 @@ def rate_estimate_eps(prev1, prev2, dvfs_cfg) -> float:
     return float(est_mpus) * 1e6
 
 
+class ControlState(NamedTuple):
+    """Per-stream degradation knobs carried as *runtime data*, not config.
+
+    Everything the serving layer's overload ladder can move lives here, so
+    turning a knob is an ``at[lane].set`` on state leaves — the compiled
+    executors never respecialize (the knobs are traced values, never
+    constants baked into an executable).  Each knob has a pure-config
+    oracle it is property-tested bit-exact against:
+
+      ``lut_every`` — Harris LUT refresh interval in chunks; oracle is a
+                      config with that ``lut_every_chunks``.
+      ``vdd_cap``   — highest selectable DVFS operating-point index;
+                      oracle is ``DvfsConfig(vdd_ceiling=...)`` (clamping
+                      the chosen index == truncating the table, because
+                      the picker takes the lowest index that fits else the
+                      highest entry).  Inert in fixed-Vdd mode — there is
+                      no in-step controller to re-point, matching the
+                      paper's fixed-voltage baseline.
+      ``shed``      — suspend LUT refresh entirely (the ladder's deepest
+                      in-state rung; refresh resumes the chunk after the
+                      flag clears); oracle is a refresh interval longer
+                      than the stream.
+    """
+
+    lut_every: jax.Array    # int32 scalar — LUT refresh interval (>= 1)
+    vdd_cap: jax.Array      # int32 scalar — max operating-point index
+    shed: jax.Array         # bool scalar  — suspend LUT refresh
+
+
 class DetectorState(NamedTuple):
     """Everything the detector carries between chunks — a single pytree.
 
@@ -140,6 +171,7 @@ class DetectorState(NamedTuple):
     kept_total: jax.Array   # int32 scalar   — events surviving STCF so far
     energy_pj: jax.Array    # float32 scalar — on-device energy accumulator
     latency_ns: jax.Array   # float32 scalar — on-device latency accumulator
+    ctrl: ControlState      # per-stream degradation knobs (runtime data)
 
 
 class ChunkInput(NamedTuple):
@@ -295,6 +327,21 @@ def _online(cfg) -> bool:
     return bool(cfg.dvfs and getattr(cfg, "dvfs_online", False))
 
 
+def control_init(cfg) -> ControlState:
+    """Neutral knobs for ``cfg``: the config's own refresh cadence, the full
+    operating-point table, no shedding — folding with these is bit-identical
+    to the pre-knob detector."""
+    if _online(cfg):
+        top = len(dvfs_mod.op_point_table(cfg.dvfs_cfg).caps) - 1
+    else:
+        top = 0                 # inert: fixed-Vdd mode never reads the cap
+    return ControlState(
+        lut_every=jnp.int32(cfg.lut_every_chunks),
+        vdd_cap=jnp.int32(top),
+        shed=jnp.asarray(False),
+    )
+
+
 def detector_init(cfg, *, seed: Optional[int] = None) -> DetectorState:
     """Fresh per-stream state (host call; arrays land on the default device)."""
     return DetectorState(
@@ -308,6 +355,7 @@ def detector_init(cfg, *, seed: Optional[int] = None) -> DetectorState:
         kept_total=jnp.int32(0),
         energy_pj=jnp.float32(0.0),
         latency_ns=jnp.float32(0.0),
+        ctrl=control_init(cfg),
     )
 
 
@@ -337,6 +385,11 @@ def detector_step(
             state.rate, chunk.ts, chunk.valid,
             cfg=cfg.dvfs_cfg, caps=jnp.asarray(tab.caps),
         )
+        # Ladder knob: clamp the chosen operating point to the per-stream
+        # ceiling.  Bit-identical to picking from a table truncated at the
+        # cap (see ControlState.vdd_cap), but as traced data it moves
+        # without respecializing the executable.
+        vdd_idx = jnp.minimum(vdd_idx, state.ctrl.vdd_cap)
         ber_c = jnp.asarray(tab.ber)[vdd_idx]
         energy_coef = jnp.asarray(tab.energy_pj)[vdd_idx]
         latency_coef = jnp.asarray(tab.latency_ns)[vdd_idx]
@@ -360,7 +413,13 @@ def detector_step(
         -jnp.inf,
     ).astype(jnp.float32)
 
-    do_refresh = ((state.chunk_idx + 1) % cfg.lut_every_chunks) == 0
+    # Refresh cadence is runtime data (ControlState), not the config
+    # constant — the ladder stretches it without a recompile.  ``shed``
+    # suspends refresh outright; scoring continues against the stale LUT
+    # (the luvHarris overload mode: degrade quality, never latency).
+    do_refresh = (
+        ((state.chunk_idx + 1) % state.ctrl.lut_every) == 0
+    ) & jnp.logical_not(state.ctrl.shed)
     lut = jax.lax.cond(
         do_refresh,
         lambda s: harris_mod.harris_response(
@@ -386,6 +445,7 @@ def detector_step(
         energy_pj=state.energy_pj + n_kept.astype(jnp.float32) * energy_coef,
         latency_ns=state.latency_ns
         + n_kept.astype(jnp.float32) * latency_coef,
+        ctrl=state.ctrl,
     )
     return new_state, ChunkOutput(
         scores=scores, keep=keep, n_kept=n_kept, vdd_idx=vdd_idx

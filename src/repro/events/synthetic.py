@@ -27,6 +27,7 @@ __all__ = [
     "dynamic_stream",
     "rate_profile_stream",
     "ramp_stream",
+    "burst_stream",
 ]
 
 
@@ -224,3 +225,36 @@ def ramp_stream(
         )
         t0 += window_us
     return _merge(parts, height, width)
+
+
+def burst_stream(
+    base_events_per_window: int,
+    n_windows: int,
+    window_us: int = 5_000,
+    *,
+    burst_start: int | None = None,
+    burst_len: int | None = None,
+    burst_factor: float = 2.0,
+    height: int = 180,
+    width: int = 240,
+    seed: int = 7,
+) -> EventStream:
+    """Flash-crowd shape for overload witnesses: a flat baseline of
+    ``base_events_per_window`` events per window with a contiguous burst of
+    ``burst_len`` windows (default: the middle half) carrying
+    ``burst_factor`` times the baseline.  Deterministic per-window counts
+    like :func:`ramp_stream` — the overload ladder's hysteresis tests need
+    exact, reproducible descent and recovery edges, not Poisson draws."""
+    if burst_start is None:
+        burst_start = n_windows // 4
+    if burst_len is None:
+        burst_len = n_windows // 2
+    counts = [
+        int(round(base_events_per_window * burst_factor))
+        if burst_start <= j < burst_start + burst_len
+        else int(base_events_per_window)
+        for j in range(n_windows)
+    ]
+    return ramp_stream(
+        counts, window_us, height=height, width=width, seed=seed
+    )

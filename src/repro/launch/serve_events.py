@@ -36,6 +36,13 @@ buffered/dropped rounds, pump drain wait) — the serving-side counterpart of
     snapshot/restore; zero recompiles, bit-exact), and the most backlogged
     bucket pumps first.  Connect the sessions with a deliberately small
     ``--connect-chunk`` to watch them re-budget themselves upward.
+  * ``ladder``: the overload ladder — every pump pass observes per-lane
+    backlog pressure and, when it stays high, degrades lanes tier by tier
+    (stretch LUT refresh -> lower the DVFS ceiling -> shed), lower QoS
+    classes first (``--qos standard,premium``: premium lanes hold full
+    quality throughout).  Try it with ``--burst-factor 2`` for the
+    flash-crowd shape; watch the ``[ladder]`` log lines as the level
+    climbs during the burst and recovers after it.
 
 Backpressure and migration are observable, not silent: every round the
 driver checks ``pool.pool_stats()`` and logs dropped rounds (``--overflow
@@ -76,9 +83,20 @@ def main(argv=None):
                     help="async: reader thread fetches sealed rings off the "
                          "pump thread; sync: drains block the caller")
     ap.add_argument("--policy", default="static",
-                    choices=("static", "adaptive"),
+                    choices=("static", "adaptive", "ladder"),
                     help="control plane: static=PR 4 placement for life; "
-                         "adaptive=rate-aware live bucket migration")
+                         "adaptive=rate-aware live bucket migration; "
+                         "ladder=QoS-ordered overload degradation "
+                         "(observe->decide->actuate per pump pass)")
+    ap.add_argument("--qos", default="standard",
+                    help="comma-separated QoS classes assigned to sessions "
+                         "round-robin (ladder policy: classes listed first "
+                         "in the ladder config degrade first; e.g. "
+                         "'standard,premium')")
+    ap.add_argument("--burst-factor", type=float, default=None,
+                    help="drive traffic with a flash-crowd burst_stream at "
+                         "this overload factor instead of shapes_stream "
+                         "(the ladder demo shape)")
     ap.add_argument("--buckets", default=None,
                     help="comma-separated chunk-size buckets "
                          "(e.g. 64,256,1024); default: just --chunk")
@@ -102,10 +120,22 @@ def main(argv=None):
         tuple(int(b) for b in args.buckets.split(","))
         if args.buckets else None
     )
-    streams = [
-        synthetic.shapes_stream(duration_us=args.duration_us, seed=s)
-        for s in range(args.sessions)
-    ]
+    if args.burst_factor is not None:
+        half = cfg.dvfs_cfg.half_us
+        n_win = max(4, args.duration_us // half)
+        streams = [
+            synthetic.burst_stream(
+                2 * args.chunk, n_win, half,
+                burst_factor=args.burst_factor, seed=s,
+            )
+            for s in range(args.sessions)
+        ]
+    else:
+        streams = [
+            synthetic.shapes_stream(duration_us=args.duration_us, seed=s)
+            for s in range(args.sessions)
+        ]
+    qos_cycle = [q.strip() for q in args.qos.split(",") if q.strip()]
     pool = DetectorPool(cfg, capacity=args.sessions,
                         ring_rounds=args.ring_rounds,
                         ring_depth=args.ring_depth,
@@ -132,6 +162,8 @@ def main(argv=None):
     dropped_seen = 0
     drains_seen = drains0
     migrations_seen = 0
+    ladder_level_seen = 0
+    transitions_seen = 0
     final_lane_stats = []
     n_total = sum(len(s) for s in streams)
     t0 = time.perf_counter()
@@ -139,7 +171,8 @@ def main(argv=None):
         # staggered joins: one new camera per round until all are live
         if len(cursors) < args.sessions:
             i = len(cursors)
-            lanes[i] = pool.connect(seed=i, chunk=args.connect_chunk)
+            lanes[i] = pool.connect(seed=i, chunk=args.connect_chunk,
+                                    qos=qos_cycle[i % len(qos_cycle)])
             cursors[i] = 0
         # sample counters OUTSIDE the timed window: pool_stats walks every
         # lane and executor, and that observability cost must not inflate
@@ -176,6 +209,19 @@ def main(argv=None):
                   f" lane(s) re-bucketed (total "
                   f"{ps['migrations_total']}; zero recompiles)")
             migrations_seen = ps["migrations_total"]
+        # ladder: log level moves and actuated tier transitions
+        lvl = ps.get("ladder_level", 0)
+        if lvl != ladder_level_seen:
+            word = "climbed" if lvl > ladder_level_seen else "descended"
+            print(f"  [ladder] level {word} {ladder_level_seen} -> {lvl} "
+                  f"(max {ps['ladder_max_level']}; degrade quality, "
+                  f"never latency)")
+            ladder_level_seen = lvl
+        if ps.get("ladder_transitions", 0) > transitions_seen:
+            print(f"  [ladder] {ps['ladder_transitions'] - transitions_seen}"
+                  f" lane tier transition(s) actuated (total "
+                  f"{ps['ladder_transitions']}; knob writes, no recompile)")
+            transitions_seen = ps["ladder_transitions"]
         # backpressure: log drops instead of silently losing rounds
         if ps["dropped_rounds_total"] > dropped_seen:
             print(f"  [backpressure] ring dropped "
@@ -206,8 +252,13 @@ def main(argv=None):
           f"{ps['h2d_event_slots']} uploaded slots "
           f"({ps['h2d_valid_events']} valid events) — "
           f"{ps['migrations_total']} migration(s), policy={ps['policy']}")
+    if args.policy == "ladder":
+        print(f"ladder: level {ps['ladder_level']}/{ps['ladder_max_level']} "
+              f"at exit, {ps['ladder_transitions']} tier transition(s), "
+              f"{ps['shed_events_total']} event(s) shed")
     for st in final_lane_stats:
         print(f"  lane {st['lane']}: bucket {st['bucket']}, "
+              f"qos {st['qos']} (tier {st['ladder_tier']}), "
               f"rate est {st['events_per_s_est'] / 1e3:.1f} kev/s "
               f"(device est {st['device_events_per_s_est'] / 1e3:.1f}), "
               f"{st['migrations']} migration(s) {st['migration_log']}")

@@ -1,46 +1,68 @@
-"""Serving layer: stateful streaming sessions + multi-camera multiplexing.
+"""Serving layer: stateful streaming sessions + multi-camera multiplexing,
+organized as an observe -> decide -> actuate control loop over a pure data
+plane.
 
   streaming — ``StreamingDetector``: one live camera session; feed event
               slabs of any length, scores come back as chunks complete;
               flush/snapshot/restore; automatic timebase re-basing for
               unbounded session length; per-session ``chunk=`` override
               (bucket tier) for heterogeneous sensors; ``rebucket()``
-              hops a live session to a new chunk size exactly.
-  runtime   — ``PoolRuntime``: the pool's *data plane*.  N sessions
-              through per-bucket compiled K-round executors whose rounds
-              land in an on-device result ring (one blocking fetch per
-              drain, not per round); with ``drain_mode="async"`` (default)
-              each bucket owns an N-deep ring-of-rings (``ring_depth``)
-              and a dedicated reader thread performs the fetch off the
-              pump thread; lanes shard across local devices; membership is
-              an active-mask lane system (join/leave/migrate without
-              recompilation); executors donate states+ring on accelerator
-              pools (keyed off actual placement).  Also the seal/drain/
-              snapshot/restore mechanics of live lane migration and the
-              host twin of the DVFS rate estimator (measurement, not
-              policy).
-  scheduler — the pool's *control plane*: lane->bucket placement as
+              hops a live session to a new chunk size exactly;
+              ``set_control()`` writes the per-session degradation knobs
+              (LUT refresh interval, DVFS ceiling, shed) as state data —
+              never a recompile.
+  runtime   — ``PoolRuntime``: the pool's *data plane* and the observe +
+              actuate halves of the loop.  N sessions through per-bucket
+              compiled K-round executors whose rounds land in an on-device
+              result ring (one blocking fetch per drain, not per round);
+              with ``drain_mode="async"`` (default) each bucket owns an
+              N-deep ring-of-rings and a dedicated reader thread performs
+              the fetch off the pump thread; lanes shard across local
+              devices; membership is an active-mask lane system
+              (join/leave/migrate/re-knob without recompilation).
+              **observe**: each pump pass snapshots an ``Observation``
+              (per-lane rate estimate, re-chunk backlog, reader lag, drain
+              wait, H2D padding) — host data, no device sync.
+              **actuate**: the returned ``Action``s apply under the pump
+              token — knob writes are jitted ``at[lane].set`` on the
+              ``DetectorState.ctrl`` leaves and take effect this pass;
+              migrations stage through seal/drain/snapshot and apply next
+              pass.
+  scheduler — the pool's *control plane*: the decide half, pure host-side
               policy.  ``StaticScheduler`` freezes placement at connect;
               ``AdaptiveScheduler`` re-buckets live lanes from their
               measured event rate (hysteresis + patience) and pumps the
-              most starved bucket first under round budgets.
+              most starved bucket first under round budgets;
+              ``DegradationLadder`` handles overload the luvHarris way —
+              degrade quality, never latency: under sustained backlog
+              pressure lanes descend QoS-ordered tiers (stretch LUT
+              refresh -> lower the DVFS operating-point ceiling -> shed),
+              premium classes last (by default never), with hysteretic
+              recovery.  ``LadderConfig`` tunes classes and thresholds.
   pool      — ``DetectorPool``: the façade wiring scheduler policy to
               runtime mechanics.  ``policy="static"`` (default) is PR 4
               behavior exactly; ``policy="adaptive"`` adds live bucket
-              migration and rate-aware pump order.  ``poll()`` is the
-              readout/backpressure point; overflow is either lossless
-              (``"drain"``) or counted (``"drop_oldest"``); public API is
-              thread-safe.
+              migration; ``policy="ladder"`` runs the overload ladder
+              (sessions join with ``connect(qos=...)``).  ``poll()`` is
+              the readout/backpressure point and never actuates on the
+              non-blocking path; overflow is either lossless (``"drain"``)
+              or counted (``"drop_oldest"``); public API is thread-safe.
 
 All of them fold the same pure detector core (``repro.core.state``) the
 batch pipeline folds, so a served stream is bit-identical to
 ``run_pipeline`` on the concatenated events — per lane, per bucket, per
-shard, per K-round block, and across live migrations (property-tested).
+shard, per K-round block, across live migrations, and at every ladder
+tier, where the knob settings are bit-identical to a config respecialized
+to the same operating point (property-tested).
 """
 from repro.serve.pool import DetectorPool  # noqa: F401
 from repro.serve.runtime import PoolRuntime  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
+    Action,
     AdaptiveScheduler,
+    DegradationLadder,
+    LadderConfig,
+    Observation,
     StaticScheduler,
 )
 from repro.serve.streaming import StreamingDetector, session_base_us  # noqa: F401
@@ -51,5 +73,9 @@ __all__ = [
     "PoolRuntime",
     "StaticScheduler",
     "AdaptiveScheduler",
+    "DegradationLadder",
+    "LadderConfig",
+    "Observation",
+    "Action",
     "session_base_us",
 ]

@@ -18,15 +18,23 @@ scheduler.
     3-counter estimate): lanes whose events-per-half-window drift past
     hysteresis thresholds for ``migrate_patience`` consecutive drains are
     live-migrated to the better-fitting bucket, and buckets with the
-    deepest re-chunk backlog pump first when a round budget is in force.
+    deepest re-chunk backlog pump first when a round budget is in force;
+    ``policy="ladder"`` runs the overload ladder — per-pump observations
+    of backlog pressure drive hysteretic tiered degradation (stretch LUT
+    refresh -> lower the DVFS ceiling -> shed) with QoS classes so
+    premium lanes degrade last (``connect(qos=...)``).
 
-The façade wires them together: ``connect`` asks the scheduler where a
-lane lands, ``pump``/``flush`` pass the scheduler's bucket order to the
-runtime (which first applies any staged migrations, under the pump
-token), and every drain observation (``poll``/``flush``) feeds the
-scheduler one rate sample per lane — a returned migration target is
-staged with the runtime (seal + drain + donation-proof snapshot) and
-restored into the new bucket at the start of the next pump pass.
+The façade wires them together as an observe -> decide -> actuate loop:
+``connect`` asks the scheduler where a lane lands, ``pump``/``flush``
+pass the scheduler's bucket order to the runtime (which first applies any
+staged migrations, under the pump token) along with the scheduler's
+``decide`` callback when the policy consumes per-pump observations —
+returned knob Actions actuate before the pass's rounds, migrate Actions
+stage for the next pass.  Every drain observation (``poll``/``flush``)
+additionally feeds the scheduler one rate sample per lane — a returned
+migration target is staged with the runtime (seal + drain +
+donation-proof snapshot) and restored into the new bucket at the start of
+the next pump pass.
 
 Migration is invisible to results: a lane served with ``policy=
 "adaptive"`` is bit-exact (scores, kept, final TOS/SAE/LUT, float64
@@ -76,6 +84,7 @@ class DetectorPool:
                  policy: str = "static",
                  migrate_patience: int = 3,
                  migrate_margin: float = 0.9,
+                 ladder: Optional[scheduler_mod.LadderConfig] = None,
                  scheduler: Optional[scheduler_mod.StaticScheduler] = None):
         self._rt = PoolRuntime(
             cfg, capacity, seed=seed, ring_rounds=ring_rounds,
@@ -92,7 +101,9 @@ class DetectorPool:
         else:
             self._sched = scheduler_mod.make_scheduler(
                 policy, self._rt.buckets, patience=migrate_patience,
-                down_margin=migrate_margin,
+                down_margin=migrate_margin, ladder=ladder,
+                base_lut_every=cfg.lut_every_chunks,
+                vdd_top=self._rt.vdd_top,
             )
         self._cfg = cfg
         # Migration targets decided during non-blocking polls: staging
@@ -125,7 +136,8 @@ class DetectorPool:
     # -- membership ---------------------------------------------------------
 
     def connect(self, *, seed: Optional[int] = None,
-                chunk: Optional[int] = None) -> int:
+                chunk: Optional[int] = None,
+                qos: str = "standard") -> int:
         """Claim a free lane for a new camera session; returns the lane id.
 
         ``chunk`` requests a per-session chunk size: the scheduler places
@@ -133,14 +145,25 @@ class DetectorPool:
         request) and the lane behaves bit-identically to ``run_pipeline``
         at that bucket's chunk size.  Default: the pool config's
         ``cfg.chunk``.  Under ``policy="adaptive"`` the placement is only
-        the starting point — the lane follows its measured rate."""
+        the starting point — the lane follows its measured rate.
+
+        ``qos`` names the session's QoS class for the overload ladder
+        (``policy="ladder"``: lower classes degrade first; validated
+        against the ladder's configured classes).  Other policies carry it
+        as an inert label."""
         want = self._cfg.chunk if chunk is None else int(chunk)
         bucket = self._sched.place(want)
         if bucket is None:
             raise ValueError(
                 f"no chunk bucket fits {want} (buckets: {self._rt.buckets})"
             )
-        lane = self._rt.connect(bucket, seed)
+        lad = getattr(self._sched, "ladder", None)
+        if lad is not None and qos not in lad.qos_names():
+            raise ValueError(
+                f"unknown QoS class {qos!r} (ladder classes: "
+                f"{lad.qos_names()})"
+            )
+        lane = self._rt.connect(bucket, seed, qos=qos)
         self._sched.forget(lane)          # recycled slot: fresh streaks
         with self._rt._lock:              # _deferred is lock-guarded
             self._deferred.pop(lane, None)
@@ -200,7 +223,8 @@ class DetectorPool:
         order — with no budget every bucket pumps until dry either way, so
         the order never changes results."""
         self._stage_deferred()
-        return self._rt.pump_pass(self._order(), max_rounds)
+        return self._rt.pump_pass(self._order(), max_rounds,
+                                  decide=self._decide())
 
     def flush(self, lane: int):
         """Drain the lane's full chunks, then its padded partial tail, and
@@ -232,6 +256,15 @@ class DetectorPool:
         backlog = (self._rt.bucket_backlog_rounds()
                    if self._sched.needs_backlog else {})
         return self._sched.order(backlog)
+
+    def _decide(self):
+        """The scheduler's ``decide`` callback for the runtime's per-pump
+        control loop — or ``None`` for policies that never act there, so
+        the default static/adaptive paths skip building the Observation
+        entirely (zero per-pump overhead, byte-for-byte PR 5 behavior)."""
+        if not getattr(self._sched, "needs_pump_observation", False):
+            return None
+        return self._sched.decide
 
     def _observe(self, lane: int, *, allow_stage: bool = True) -> None:
         """Feed the scheduler one rate sample for ``lane`` and act on any
@@ -289,8 +322,13 @@ class DetectorPool:
         return self._rt.stats(lane)
 
     def pool_stats(self) -> dict:
-        """Pool-level runtime counters plus the active policy; see
-        ``PoolRuntime.pool_stats`` for the field glossary."""
+        """Pool-level runtime counters plus the active policy and any
+        policy-side counters (``ladder_level`` / ``ladder_transitions``
+        under ``policy="ladder"``); see ``PoolRuntime.pool_stats`` for the
+        runtime field glossary."""
         out = self._rt.pool_stats()
         out["policy"] = self._sched.policy
+        stats_fn = getattr(self._sched, "scheduler_stats", None)
+        if callable(stats_fn):
+            out.update(stats_fn())
         return out

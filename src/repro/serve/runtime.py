@@ -93,6 +93,7 @@ from repro.core import dvfs as dvfs_mod
 from repro.core import pipeline as pipeline_mod
 from repro.core import state as state_mod
 from repro.launch import sharding as sharding_mod
+from repro.serve import scheduler as scheduler_mod
 from repro.serve import streaming as streaming_mod
 
 __all__ = ["PoolRuntime"]
@@ -120,10 +121,22 @@ class _Lane:
     __slots__ = ("bucket", "buf_xy", "buf_ts", "base", "results", "n_events",
                  "n_chunks", "kept_total", "energy_pj", "latency_ns",
                  "vdd_trace", "events_folded", "migrations", "migration_log",
-                 "r_win", "r_cur", "r_p1", "r_p2")
+                 "r_win", "r_cur", "r_p1", "r_p2",
+                 "qos", "tier", "knob_lut_every", "knob_vdd_cap",
+                 "knob_shed", "shed_events")
 
-    def __init__(self, bucket: int):
+    def __init__(self, bucket: int, *, qos: str = "standard",
+                 lut_every: int = 1, vdd_cap: int = 0):
         self.bucket = bucket
+        # -- control-plane view: QoS class, actuated-tier mirror, and host
+        # mirrors of the lane's in-state degradation knobs (the device
+        # truth lives in DetectorState.ctrl; connect resets both together)
+        self.qos = qos
+        self.tier = 0
+        self.knob_lut_every = int(lut_every)
+        self.knob_vdd_cap = int(vdd_cap)
+        self.knob_shed = False
+        self.shed_events = 0            # oldest events dropped while shedding
         self.buf_xy = np.zeros((0, 2), np.int32)
         self.buf_ts = np.zeros((0,), np.int64)
         self.base: Optional[int] = None
@@ -258,6 +271,9 @@ class PoolRuntime:
         self._half_us = int(cfg.dvfs_cfg.half_us)
         self._online = bool(cfg.dvfs and cfg.dvfs_online)
         self._tab = dvfs_mod.op_point_table(cfg.dvfs_cfg)
+        # Highest DVFS operating-point index a knob may select; the cap is
+        # inert in fixed-Vdd mode (no in-step controller reads it).
+        self._vdd_top = len(self._tab.caps) - 1 if self._online else 0
         if not self._online:
             r = state_mod.chunk_input_riders(
                 1, np.full((1,), cfg.vdd, np.float64), cfg
@@ -317,6 +333,7 @@ class PoolRuntime:
         self._dropped_pred: dict[int, int] = {} # predicted, not yet fetched
         self._sealed_rounds: dict[int, int] = {}  # handed to reader, undrained
         self._inflight: dict[int, int] = {}       # sealed rings being fetched
+        self._last_drain_wait: dict[int, float] = {}  # s, last forced drain
         for b in buckets:
             self._rings[b] = self._make_ring(b)
             self._spares[b] = collections.deque(
@@ -331,6 +348,7 @@ class PoolRuntime:
             self._dropped_pred[b] = 0
             self._sealed_rounds[b] = 0
             self._inflight[b] = 0
+            self._last_drain_wait[b] = 0.0
 
         self._host_fetches = 0     # blocking result transfers (ring drains)
         self._rounds_executed = 0
@@ -363,6 +381,19 @@ class PoolRuntime:
             )
 
         self._vreset = jax.jit(_reset)
+
+        def _ctrl(states, lane, lut_every, vdd_cap, shed):
+            c = states.ctrl
+            return states._replace(ctrl=state_mod.ControlState(
+                lut_every=c.lut_every.at[lane].set(lut_every),
+                vdd_cap=c.vdd_cap.at[lane].set(vdd_cap),
+                shed=c.shed.at[lane].set(shed),
+            ))
+
+        # Knob actuation: an ``at[lane].set`` on the ctrl leaves, same
+        # jitted-write + re-place discipline as _vreset — moving a knob is
+        # a data write, never a recompile of the executors.
+        self._vctrl = jax.jit(_ctrl)
 
         half = cfg.dvfs_cfg.half_us
 
@@ -557,10 +588,14 @@ class PoolRuntime:
 
     # -- membership ---------------------------------------------------------
 
-    def connect(self, bucket: int, seed: Optional[int] = None) -> int:
+    def connect(self, bucket: int, seed: Optional[int] = None,
+                qos: str = "standard") -> int:
         """Claim a free lane in ``bucket`` (a configured chunk-size bucket)
-        for a new camera session; returns the lane id.  Bucket choice is
-        the caller's (the façade asks its scheduler)."""
+        for a new camera session; returns the lane id.  Bucket and QoS
+        class are the caller's choices (the façade asks its scheduler).
+        The lane starts at neutral degradation knobs — ``detector_init``
+        seeds ``DetectorState.ctrl`` from the config, and the host mirrors
+        here match it."""
         with self._lock:
             self._check_open()
             if bucket not in self._buckets:
@@ -578,7 +613,11 @@ class PoolRuntime:
                 self._vreset(self._states, jnp.int32(lane), fresh)
             )
             self._active[lane] = True
-            self._lanes[lane] = _Lane(bucket)
+            self._lanes[lane] = _Lane(
+                bucket, qos=str(qos),
+                lut_every=self._cfg.lut_every_chunks,
+                vdd_cap=self._vdd_top,
+            )
             return lane
 
     def disconnect(self, lane: int) -> dict:
@@ -672,7 +711,11 @@ class PoolRuntime:
 
     def feed(self, lane: int, xy: np.ndarray, ts_us: np.ndarray) -> None:
         """Buffer a slab for one session (any length, time-sorted) and fold
-        its timestamps into the lane's host rate-estimator twin."""
+        its timestamps into the lane's host rate-estimator twin.  A lane
+        in shed mode additionally caps its re-chunk buffer at one ring of
+        rounds, dropping the *oldest* buffered events (the real-time
+        regime: stale events are worthless; the rate twin still counts
+        them, so recovery sees the true arrival rate)."""
         with self._lock:
             self._check_open()
             self._check_lane(lane)
@@ -689,24 +732,48 @@ class PoolRuntime:
             ln.buf_ts = np.concatenate([ln.buf_ts, ts], 0)
             ln.n_events += int(ts.size)
             ln.rate_update(ts, self._half_us)
+            if ln.knob_shed:
+                self._shed_buffer(ln)
+
+    def _shed_buffer(self, ln: _Lane) -> None:
+        """Drop-oldest a shedding lane's re-chunk buffer down to one ring
+        of rounds (caller holds the lock)."""
+        cap = self._ring_rounds * ln.bucket
+        excess = int(ln.buf_ts.size) - cap
+        if excess > 0:
+            ln.buf_xy = ln.buf_xy[excess:]
+            ln.buf_ts = ln.buf_ts[excess:]
+            ln.shed_events += excess
 
     def pump_pass(self, order: tuple,
-                  max_rounds: Optional[int] = None) -> int:
-        """One serialized pump pass: apply staged migrations, then fold
-        every buffered full chunk through the ring executors, visiting
-        buckets in ``order`` (the scheduler's choice; each bucket pumps
-        until dry or the round budget runs out).  Returns rounds executed.
-        Results stay in the on-device rings until ``poll``/``flush`` (or a
-        backpressure drain/seal under the ``"drain"`` policy).  K-round
-        blocks with one fetch per drain are bit-exact vs the same rounds
-        pumped one at a time; concurrent pumpers serialize on the pump
-        token (round order must match the sequential path even while a
-        seal waits on a spare ring)."""
+                  max_rounds: Optional[int] = None,
+                  decide=None) -> int:
+        """One serialized pump pass: apply staged migrations, run the
+        control loop (observe -> ``decide`` -> actuate, when a policy's
+        ``decide`` is passed), then fold every buffered full chunk through
+        the ring executors, visiting buckets in ``order`` (the scheduler's
+        choice; each bucket pumps until dry or the round budget runs out).
+        Returns rounds executed.
+
+        The control loop runs under the pump token before any round is
+        collected: knob actions apply to *this* pass's rounds, migrate
+        actions stage and apply at the *next* pass (the same deferral
+        window staged migrations already use — the no-pump gap guarantees
+        the snapshot cannot go stale).  Results stay in the on-device
+        rings until ``poll``/``flush`` (or a backpressure drain/seal under
+        the ``"drain"`` policy).  K-round blocks with one fetch per drain
+        are bit-exact vs the same rounds pumped one at a time; concurrent
+        pumpers serialize on the pump token (round order must match the
+        sequential path even while a seal waits on a spare ring)."""
         with self._lock:
             self._check_open()
             self._acquire_pump()
             try:
                 self._apply_staged_locked()
+                if decide is not None:
+                    actions = decide(self._observation_locked())
+                    if actions:
+                        self._apply_actions_locked(actions)
                 total = 0
                 for bucket in order:
                     left = None if max_rounds is None else max_rounds - total
@@ -828,19 +895,28 @@ class PoolRuntime:
                 # here covers the drain's cv waits below.)
                 if self._lanes[lane] is not ln or not self._active[lane]:
                     return
-                if new_bucket == ln.bucket:
-                    self._staged.pop(lane, None)
-                    return
-                self._drain_bucket(ln.bucket)
-                snap = jax.tree.map(
-                    lambda a: np.array(a),
-                    jax.device_get(
-                        jax.tree.map(lambda a: a[lane], self._states)
-                    ),
-                )
-                self._staged[lane] = (snap, new_bucket)
+                self._stage_locked(lane, new_bucket)
             finally:
                 self._release_pump()
+
+    def _stage_locked(self, lane: int, new_bucket: int) -> None:
+        """The stage body: seal+drain the lane's bucket and checkpoint its
+        state.  Caller holds the lock AND the pump token (either via
+        ``stage_migration`` or from inside a pump pass actuating a migrate
+        Action — the token is not re-entrant, so the in-pump path must not
+        call ``stage_migration`` itself)."""
+        ln = self._lanes[lane]
+        if new_bucket == ln.bucket:
+            self._staged.pop(lane, None)
+            return
+        self._drain_bucket(ln.bucket)
+        snap = jax.tree.map(
+            lambda a: np.array(a),
+            jax.device_get(
+                jax.tree.map(lambda a: a[lane], self._states)
+            ),
+        )
+        self._staged[lane] = (snap, new_bucket)
 
     def staged_migrations(self) -> dict:
         """Pending (staged, not yet applied) moves: ``{lane: bucket}``."""
@@ -870,6 +946,125 @@ class PoolRuntime:
             ln.migrations += 1
             ln.migration_log.append((ln.events_folded, old, new_bucket))
             self._migrations += 1
+
+    # -- control loop: observe -> decide -> actuate --------------------------
+
+    def _observation_locked(self) -> scheduler_mod.Observation:
+        """Per-pump observation snapshot (caller holds lock + pump token,
+        staged migrations already applied).  All host data — observing
+        costs no device sync."""
+        lanes = []
+        backlog = {b: 0 for b in self._buckets}
+        for lane in self.active_lanes:
+            ln = self._lanes[lane]
+            eps = state_mod.rate_estimate_eps(
+                ln.r_p1, ln.r_p2, self._cfg.dvfs_cfg
+            )
+            rounds = int(ln.buf_ts.size) // ln.bucket
+            backlog[ln.bucket] += rounds
+            lanes.append(scheduler_mod.LaneObservation(
+                lane=lane,
+                bucket=ln.bucket,
+                qos=ln.qos,
+                tier=ln.tier,
+                events_per_halfwin=eps * self._half_us * 1e-6,
+                backlog_rounds=rounds,
+                win=ln.r_win,
+            ))
+        return scheduler_mod.Observation(
+            lanes=tuple(lanes),
+            backlog_rounds=backlog,
+            reader_lag_rounds=dict(self._sealed_rounds),
+            drain_wait_s=self._pump_drain_wait,
+            last_drain_wait_s=dict(self._last_drain_wait),
+            padding_ratio=(
+                1.0 - self._h2d_valid / self._h2d_slots
+                if self._h2d_slots else 0.0
+            ),
+        )
+
+    def _apply_actions_locked(self, actions) -> None:
+        """Actuate a policy's decisions (caller holds lock + pump token).
+        Knob writes and drop-policy flips apply now — before this pass's
+        rounds; migrations stage and apply at the next pass.  Actions for
+        lanes retired since the observation are dropped: the decision
+        belonged to the dead session, and a slot's next tenant starts at
+        neutral knobs regardless."""
+        for act in actions:
+            if act.drop_policy is not None:
+                if act.drop_policy not in _OVERFLOW_POLICIES:
+                    raise ValueError(
+                        f"drop_policy must be one of {_OVERFLOW_POLICIES}, "
+                        f"got {act.drop_policy!r}"
+                    )
+                self._overflow = act.drop_policy
+            lane = act.lane
+            if lane is None:
+                continue
+            if not (0 <= lane < self._capacity) or not self._active[lane]:
+                continue                       # raced a disconnect
+            ln = self._lanes[lane]
+            self._set_knobs_locked(lane, ln, act.lut_every, act.vdd_cap,
+                                   act.shed)
+            if act.tier is not None:
+                ln.tier = int(act.tier)
+            if act.migrate is not None:
+                if act.migrate not in self._buckets:
+                    raise ValueError(
+                        f"{act.migrate} is not a configured bucket "
+                        f"({self._buckets})"
+                    )
+                self._stage_locked(lane, act.migrate)
+
+    def _set_knobs_locked(self, lane: int, ln: _Lane,
+                          lut_every: Optional[int],
+                          vdd_cap: Optional[int],
+                          shed: Optional[bool]) -> None:
+        """Write a lane's degradation knobs (caller holds lock + pump
+        token).  One jitted ``at[lane].set`` writes all three ctrl leaves
+        — unspecified knobs re-write their current mirror value, so the
+        write's trace never depends on which knobs the caller moved."""
+        want = (
+            ln.knob_lut_every if lut_every is None else max(1,
+                                                            int(lut_every)),
+            ln.knob_vdd_cap if vdd_cap is None
+            else max(0, min(int(vdd_cap), self._vdd_top)),
+            ln.knob_shed if shed is None else bool(shed),
+        )
+        if want == (ln.knob_lut_every, ln.knob_vdd_cap, ln.knob_shed):
+            return
+        self._states = self._place(self._vctrl(
+            self._states, jnp.int32(lane),
+            jnp.int32(want[0]), jnp.int32(want[1]), jnp.asarray(want[2]),
+        ))
+        entered_shed = want[2] and not ln.knob_shed
+        ln.knob_lut_every, ln.knob_vdd_cap, ln.knob_shed = want
+        if entered_shed:
+            self._shed_buffer(ln)     # immediate relief, not just next feed
+
+    def set_lane_control(self, lane: int, *,
+                         lut_every: Optional[int] = None,
+                         vdd_cap: Optional[int] = None,
+                         shed: Optional[bool] = None) -> None:
+        """Manually set a lane's degradation knobs (the out-of-band spelling
+        of a knob ``Action``; serialized on the pump token so it cannot
+        interleave with a pass's rounds)."""
+        with self._lock:
+            self._check_open()
+            self._check_lane(lane)
+            self._acquire_pump()
+            try:
+                self._check_lane(lane)    # re-validate after the token wait
+                self._set_knobs_locked(lane, self._lanes[lane],
+                                       lut_every, vdd_cap, shed)
+            finally:
+                self._release_pump()
+
+    @property
+    def vdd_top(self) -> int:
+        """Highest DVFS operating-point index a knob may select (0 in
+        fixed-Vdd mode, where the cap is inert)."""
+        return self._vdd_top
 
     # -- observability -------------------------------------------------------
 
@@ -961,6 +1156,19 @@ class PoolRuntime:
             "ring_dropped_rounds": (
                 self._dropped_dev[b] + self._dropped_pred[b]
             ),
+            # -- the ladder's per-lane inputs and outputs (ISSUE 6):
+            # how far behind this lane runs (re-chunk backlog depth +
+            # reader lag on its bucket + the bucket's last forced-drain
+            # wait) and where its degradation knobs currently sit.
+            "backlog_rounds": int(ln.buf_ts.size) // b,
+            "reader_lag_rounds": self._sealed_rounds[b],
+            "last_drain_wait_s": self._last_drain_wait[b],
+            "qos": ln.qos,
+            "ladder_tier": ln.tier,
+            "ctrl_lut_every": ln.knob_lut_every,
+            "ctrl_vdd_cap": ln.knob_vdd_cap,
+            "ctrl_shed": ln.knob_shed,
+            "shed_events": ln.shed_events,
         }
         return out, dev
 
@@ -1025,6 +1233,9 @@ class PoolRuntime:
                     + sum(self._dropped_pred.values())
                 ),
                 "dropped_rounds_confirmed": sum(self._dropped_dev.values()),
+                "shed_events_total": sum(
+                    ln.shed_events for ln in self._lanes if ln is not None
+                ),
                 "buckets": {
                     b: {
                         "lanes": sum(
@@ -1166,7 +1377,9 @@ class PoolRuntime:
         if self._overflow == "drain" and self._ring_count[bucket] + n > k:
             t0 = time.perf_counter()
             self._drain_bucket(bucket, wait=False)
-            self._pump_drain_wait += time.perf_counter() - t0
+            w = time.perf_counter() - t0
+            self._pump_drain_wait += w
+            self._last_drain_wait[bucket] = w
             self._pump_forced_drains += 1
 
         if n == 1 and bucket in self._exec1:

@@ -1,14 +1,34 @@
-"""Control plane for the multi-camera pool: placement as *policy*.
+"""Control plane for the multi-camera pool: observe → decide → actuate.
 
 The data plane (``repro.serve.runtime.PoolRuntime``) owns compiled
 executors, device rings, the reader thread, and donation bookkeeping — it
-can run any lane in any chunk-size bucket, but it never decides *which*.
-Deciding is this module's job:
+can run any lane in any chunk-size bucket at any degradation knob setting,
+but it never decides *which*.  Deciding is this module's job, expressed as
+one control-loop contract every policy shares:
+
+  **observe** — the runtime measures; the scheduler consumes.  Two
+      channels: the per-poll rate observation (``observe()``, gated by
+      ``needs_observation`` — the adaptive migration path) and the
+      per-pump ``Observation`` snapshot (``decide()``, gated by
+      ``needs_pump_observation``) carrying every overload signal the
+      runtime has per lane: rate estimate, re-chunk backlog depth, reader
+      lag, drain wait, H2D padding ratio.
+  **decide**  — pure host-side policy: ``decide(obs)`` returns a tuple of
+      ``Action`` records (set degradation knobs, migrate a lane, flip the
+      overflow policy).  No locks, no device handles, no threads.
+  **actuate** — the runtime applies the returned actions under the pump
+      token before collecting the pass's rounds: knob writes are
+      ``at[lane].set`` on ``DetectorState.ctrl`` leaves (data, never a
+      recompile), migrations stage through the existing seal/drain/
+      snapshot machinery and apply at the *next* pump pass.
+
+Policies on the contract:
 
   ``StaticScheduler``   — PR 4 behavior, frozen: a lane lands in the
                           smallest bucket that fits its ``connect(chunk=)``
                           request and stays there for life; buckets pump in
-                          ascending size order.  Zero observation overhead.
+                          ascending size order.  Zero observation overhead;
+                          ``decide`` returns no actions.
   ``AdaptiveScheduler`` — the paper's DVFS insight applied to the serving
                           layer: the detector re-budgets itself from the
                           *measured* event rate.  Each drain observation
@@ -23,6 +43,21 @@ Deciding is this module's job:
                           also orders the pump across buckets by re-chunk
                           backlog, so the most starved bucket's lanes fold
                           first when a round budget is in force.
+  ``DegradationLadder`` — graceful overload (the luvHarris EBE/FBF
+                          argument: when the detector cannot keep up,
+                          degrade *quality*, never latency).  A global
+                          ladder level climbs under sustained backlog
+                          pressure and descends when it clears
+                          (hysteresis: separate enter/exit thresholds with
+                          a dead band, plus patience in consecutive pump
+                          observations).  Per-lane QoS classes map the
+                          level to tiers so lower classes degrade first —
+                          premium lanes hold full quality until every
+                          standard lane is fully degraded.  Tier rungs:
+                          stretch the Harris LUT refresh interval → lower
+                          the DVFS operating-point ceiling → shed (suspend
+                          refresh + drop-oldest on the lane's re-chunk
+                          buffer).
 
 Schedulers are pure host-side policy objects: no locks, no device handles,
 no threads.  The façade (``DetectorPool``) serializes calls under the
@@ -41,9 +76,69 @@ target before committing — one bursty window never triggers a move.
 """
 from __future__ import annotations
 
-from typing import Optional
+import dataclasses
+from typing import NamedTuple, Optional
 
-__all__ = ["StaticScheduler", "AdaptiveScheduler", "make_scheduler"]
+__all__ = [
+    "LaneObservation",
+    "Observation",
+    "Action",
+    "StaticScheduler",
+    "AdaptiveScheduler",
+    "LadderConfig",
+    "DegradationLadder",
+    "make_scheduler",
+]
+
+
+class LaneObservation(NamedTuple):
+    """One lane's slice of a pump observation (host scalars only)."""
+
+    lane: int
+    bucket: int
+    qos: str                     # QoS class the session connected with
+    tier: int                    # currently *actuated* ladder tier (mirror)
+    events_per_halfwin: float    # host rate-twin estimate
+    backlog_rounds: int          # full chunks waiting in the re-chunk buffer
+    win: Optional[int]           # rate-estimator rotation cursor
+
+
+class Observation(NamedTuple):
+    """What the runtime hands ``decide()`` once per pump pass.
+
+    Built under the pump token before any round is collected, so a policy
+    sees the pool exactly as this pass will find it.  All host data — no
+    device sync is paid to observe.
+    """
+
+    lanes: tuple                 # of LaneObservation, lane-id order
+    backlog_rounds: dict         # bucket -> ready-but-unpumped rounds
+    reader_lag_rounds: dict      # bucket -> sealed, not yet drained rounds
+    drain_wait_s: float          # cumulative pump-thread drain wait
+    last_drain_wait_s: dict      # bucket -> last forced-drain wait (s)
+    padding_ratio: float         # 1 - valid/uploaded H2D chunk slots
+
+
+class Action(NamedTuple):
+    """One actuation request returned by ``decide()``.
+
+    ``None`` fields are left alone.  Knob writes (``lut_every`` /
+    ``vdd_cap`` / ``shed``) apply immediately (before this pass's rounds);
+    ``migrate`` stages through the normal migration machinery and applies
+    at the *next* pump pass; ``drop_policy`` flips the pool-wide overflow
+    policy.  ``tier`` is bookkeeping: the runtime mirrors it back in the
+    next ``LaneObservation`` so a policy can tell intent from actuation.
+    Actions for lanes that disconnected since the observation are dropped
+    silently — the decision belonged to the dead session.
+    """
+
+    lane: Optional[int]
+    lut_every: Optional[int] = None      # Harris LUT refresh interval
+    vdd_cap: Optional[int] = None        # max DVFS operating-point index
+    shed: Optional[bool] = None          # suspend refresh + drop-oldest buf
+    migrate: Optional[int] = None        # target chunk-size bucket
+    drop_policy: Optional[str] = None    # pool-wide: "drain"/"drop_oldest"
+    tier: Optional[int] = None           # actuated-tier mirror bookkeeping
 
 
 class StaticScheduler:
@@ -56,6 +151,9 @@ class StaticScheduler:
     # rate observation entirely on the default (PR 4-compat) path
     needs_backlog = False
     needs_observation = False
+    # ... and the runtime skips building the per-pump Observation unless a
+    # policy actually consumes it (the ladder does; static/adaptive don't)
+    needs_pump_observation = False
 
     def __init__(self, buckets: tuple):
         self._buckets = tuple(sorted(int(b) for b in buckets))
@@ -80,8 +178,18 @@ class StaticScheduler:
         bucket or ``None``.  Static never migrates."""
         return None
 
+    def decide(self, obs: Observation) -> tuple:
+        """The decide half of the control loop: one pump observation in,
+        a tuple of ``Action`` records out.  Static/adaptive never act
+        here (their migration path is the per-poll ``observe``)."""
+        return ()
+
     def forget(self, lane: int) -> None:
         """Drop any per-lane observation state (slot recycled)."""
+
+    def scheduler_stats(self) -> dict:
+        """Policy-side counters merged into ``pool_stats()``."""
+        return {}
 
 
 class AdaptiveScheduler(StaticScheduler):
@@ -176,15 +284,182 @@ class AdaptiveScheduler(StaticScheduler):
         self._streaks.pop(lane, None)
 
 
+@dataclasses.dataclass(frozen=True)
+class LadderConfig:
+    """Tuning of the overload ladder (all host-side policy constants).
+
+    ``classes`` lists the QoS classes in the order they degrade — first
+    entry degrades *first* — as ``(name, max_tier)`` pairs.  A class's
+    tier is ``clamp(level - offset, 0, max_tier)`` where ``offset`` is the
+    sum of the earlier classes' max tiers: the ladder fully degrades one
+    class before touching the next, so with the default a premium lane
+    (max_tier 0) never degrades at all.
+
+    Pressure is ready-but-unpumped rounds (re-chunk backlog) plus rounds
+    sealed to the reader but not yet drained, averaged over active lanes —
+    "how many rounds behind real time is the average lane".  The level
+    climbs one rung after ``patience`` consecutive pump observations above
+    ``hi_rounds`` and descends one after ``recover_patience`` below
+    ``lo_rounds``; between the thresholds both streaks reset (the dead
+    band that keeps a noisy boundary from flapping).
+
+    Tier rungs (cumulative): tier 1 stretches the Harris LUT refresh
+    interval by ``lut_stretch``; tier 2 additionally lowers the DVFS
+    operating-point ceiling by ``vdd_drop`` table entries (a no-op in
+    fixed-Vdd mode — there is no in-step controller to re-point); tier 3
+    additionally sheds (suspends refresh and drops oldest buffered events
+    beyond one ring of rounds).
+    """
+
+    classes: tuple = (("standard", 3), ("premium", 0))
+    hi_rounds: float = 2.0       # enter-degradation pressure (rounds/lane)
+    lo_rounds: float = 0.5       # exit-degradation pressure (rounds/lane)
+    patience: int = 2            # pump observations above hi before +1
+    recover_patience: int = 4    # pump observations below lo before -1
+    lut_stretch: int = 4         # tier 1: lut_every *= lut_stretch
+    vdd_drop: int = 1            # tier 2: vdd_cap = top - vdd_drop
+
+    def __post_init__(self):
+        if not self.classes:
+            raise ValueError("ladder needs at least one QoS class")
+        names = [c for c, _ in self.classes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate QoS class in {names}")
+        if any(int(m) < 0 for _, m in self.classes):
+            raise ValueError("max_tier must be >= 0")
+        if not (0 <= self.lo_rounds < self.hi_rounds):
+            raise ValueError("need 0 <= lo_rounds < hi_rounds")
+        if self.patience < 1 or self.recover_patience < 1:
+            raise ValueError("patience values must be >= 1")
+        if self.lut_stretch < 2:
+            raise ValueError("lut_stretch must be >= 2")
+        if self.vdd_drop < 0:
+            raise ValueError("vdd_drop must be >= 0")
+
+    def qos_names(self) -> tuple:
+        return tuple(c for c, _ in self.classes)
+
+
+class DegradationLadder(StaticScheduler):
+    """Hysteretic tiered degradation with QoS-ordered descent.
+
+    Placement stays static (``place``/``order`` inherited — ``order`` is
+    overridden to starved-first like adaptive, since an overloaded pool
+    should fold its deepest backlog first); the policy's whole job is
+    ``decide``: track backlog pressure across pump observations, move the
+    global ladder level with hysteresis + patience, and emit knob Actions
+    for lanes whose QoS-mapped tier differs from their actuated tier.
+    Emitting only on mismatch makes actuation idempotent and self-healing:
+    a lane that reconnects (knobs reset) or migrates simply shows up with
+    a stale tier mirror and gets re-actuated next pass.
+    """
+
+    policy = "ladder"
+    needs_backlog = True
+    needs_observation = False
+    needs_pump_observation = True
+
+    def __init__(self, buckets: tuple, *,
+                 ladder: Optional[LadderConfig] = None,
+                 base_lut_every: int = 1, vdd_top: int = 0):
+        super().__init__(buckets)
+        self.ladder = ladder if ladder is not None else LadderConfig()
+        self._base = max(1, int(base_lut_every))
+        self._top = max(0, int(vdd_top))
+        self._max_level = sum(int(m) for _, m in self.ladder.classes)
+        self._level = 0
+        self._hot = 0            # consecutive observations above hi_rounds
+        self._cool = 0           # consecutive observations below lo_rounds
+        self._transitions = 0    # lane tier moves actuated (the CI witness)
+
+    @property
+    def level(self) -> int:
+        return self._level
+
+    def target_tier(self, qos: str) -> int:
+        """Ladder tier for a class at the current level (first class in
+        ``classes`` eats the first rungs).  Unknown classes never degrade
+        — the façade validates QoS names at connect, so this only guards
+        policy-object reuse across pools."""
+        off = 0
+        for name, mx in self.ladder.classes:
+            if name == qos:
+                return max(0, min(self._level - off, int(mx)))
+            off += int(mx)
+        return 0
+
+    def knobs_for_tier(self, tier: int) -> tuple:
+        """(lut_every, vdd_cap, shed) a lane at ``tier`` runs with."""
+        lad = self.ladder
+        lut_every = self._base if tier < 1 else self._base * lad.lut_stretch
+        vdd_cap = self._top if tier < 2 else max(0, self._top - lad.vdd_drop)
+        return lut_every, vdd_cap, tier >= 3
+
+    def order(self, backlog_rounds: dict) -> tuple:
+        """Starved-first, like adaptive: under overload the deepest
+        backlog folds first; ties break ascending for determinism."""
+        return tuple(sorted(
+            self._buckets,
+            key=lambda b: (-int(backlog_rounds.get(b, 0)), b),
+        ))
+
+    def decide(self, obs: Observation) -> tuple:
+        lad = self.ladder
+        n = max(1, len(obs.lanes))
+        pressure = (
+            sum(l.backlog_rounds for l in obs.lanes)
+            + sum(obs.reader_lag_rounds.values())
+        ) / n
+        if pressure > lad.hi_rounds:
+            self._hot, self._cool = self._hot + 1, 0
+            if self._hot >= lad.patience and self._level < self._max_level:
+                self._level += 1
+                self._hot = 0
+        elif pressure < lad.lo_rounds:
+            self._cool, self._hot = self._cool + 1, 0
+            if self._cool >= lad.recover_patience and self._level > 0:
+                self._level -= 1
+                self._cool = 0
+        else:
+            self._hot = self._cool = 0     # dead band: both streaks reset
+
+        actions = []
+        for lob in obs.lanes:
+            tier = self.target_tier(lob.qos)
+            if tier == lob.tier:
+                continue
+            lut_every, vdd_cap, shed = self.knobs_for_tier(tier)
+            actions.append(Action(
+                lane=lob.lane, lut_every=lut_every, vdd_cap=vdd_cap,
+                shed=shed, tier=tier,
+            ))
+            self._transitions += 1
+        return tuple(actions)
+
+    def scheduler_stats(self) -> dict:
+        return {
+            "ladder_level": self._level,
+            "ladder_max_level": self._max_level,
+            "ladder_transitions": self._transitions,
+        }
+
+
 def make_scheduler(policy: str, buckets: tuple, *, patience: int = 3,
                    down_margin: float = 0.9,
-                   up_margin: float = 1.0) -> StaticScheduler:
+                   up_margin: float = 1.0,
+                   ladder: Optional[LadderConfig] = None,
+                   base_lut_every: int = 1,
+                   vdd_top: int = 0) -> StaticScheduler:
     if policy == "static":
         return StaticScheduler(buckets)
     if policy == "adaptive":
         return AdaptiveScheduler(buckets, patience=patience,
                                  down_margin=down_margin,
                                  up_margin=up_margin)
+    if policy == "ladder":
+        return DegradationLadder(buckets, ladder=ladder,
+                                 base_lut_every=base_lut_every,
+                                 vdd_top=vdd_top)
     raise ValueError(
-        f"policy must be 'static' or 'adaptive', got {policy!r}"
+        f"policy must be 'static', 'adaptive', or 'ladder', got {policy!r}"
     )

@@ -429,6 +429,43 @@ class StreamingDetector:
         self.rebuckets += 1
         return self
 
+    # -- degradation knobs --------------------------------------------------
+
+    def set_control(self, *, lut_every: Optional[int] = None,
+                    vdd_cap: Optional[int] = None,
+                    shed: Optional[bool] = None) -> "StreamingDetector":
+        """Set the session's degradation knobs (``DetectorState.ctrl``).
+
+        The knobs are runtime data, not config: moving one swaps scalar
+        leaves of the carried state (plain uncommitted jnp scalars, like
+        ``detector_init``'s — a ``device_put`` here would flip the jitted
+        step's cache key), so the session's compiled step never
+        respecializes.  ``lut_every`` stretches the Harris LUT refresh
+        interval; ``vdd_cap`` caps the online-DVFS operating point
+        (clamped to the table, inert in fixed-Vdd mode); ``shed`` suspends
+        LUT refresh entirely.  Unset knobs keep their value; snapshots and
+        ``rebucket`` carry the knobs along with the rest of the state.
+        Returns ``self`` for chaining."""
+        c = self._state.ctrl
+        if lut_every is not None:
+            c = c._replace(lut_every=jnp.int32(max(1, int(lut_every))))
+        if vdd_cap is not None:
+            top = len(self._tab.caps) - 1
+            c = c._replace(vdd_cap=jnp.int32(max(0, min(int(vdd_cap), top))))
+        if shed is not None:
+            c = c._replace(shed=jnp.asarray(bool(shed)))
+        self._state = self._state._replace(ctrl=c)
+        return self
+
+    @property
+    def control(self) -> dict:
+        """Current degradation knobs as host scalars."""
+        le, vc, sh = jax.device_get(
+            (self._state.ctrl.lut_every, self._state.ctrl.vdd_cap,
+             self._state.ctrl.shed)
+        )
+        return {"lut_every": int(le), "vdd_cap": int(vc), "shed": bool(sh)}
+
     # -- introspection ------------------------------------------------------
 
     @property

@@ -1,0 +1,568 @@
+"""Overload ladder (ISSUE 6): per-lane degradation knobs as state data,
+the observe -> decide -> actuate control loop, and the ``DegradationLadder``
+policy.
+
+Contracts:
+
+  * Knob bit-exactness: a session running at ladder-tier knobs set through
+    ``set_control`` (state data, no recompile) is bit-identical to a fresh
+    session whose *config* is respecialized to the same operating point —
+    ``lut_every`` vs ``cfg.lut_every_chunks``, ``vdd_cap`` vs
+    ``DvfsConfig(vdd_ceiling=...)``, ``shed`` vs a refresh interval longer
+    than the stream.
+  * ``DegradationLadder`` is pure host policy: QoS-ordered tier mapping
+    (first class degrades first, premium never), hysteretic level moves
+    (dead band + patience), actions only on tier mismatch.
+  * The runtime's per-pump ``Observation`` reports real backlog/QoS/tier;
+    actuation is idempotent and survives disconnect (slot reuse resets
+    knobs; the ladder re-actuates on the next pass) and migration (the
+    snapshot carries the ctrl leaves).
+  * Everything happens with zero recompiles (``executors_compiled_once``).
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import dvfs, pipeline
+from repro.events import synthetic
+from repro.serve import DetectorPool, StreamingDetector
+from repro.serve.runtime import PoolRuntime
+from repro.serve.scheduler import (
+    Action,
+    DegradationLadder,
+    LadderConfig,
+    LaneObservation,
+    Observation,
+    make_scheduler,
+)
+
+
+def _feed_all(det, xy, ts, slab=333):
+    scores, kept = [], []
+    for i in range(0, len(ts), slab):
+        s, k = det.feed(xy[i:i + slab], ts[i:i + slab])
+        scores.append(s)
+        kept.append(k)
+    s, k = det.flush()
+    scores.append(s)
+    kept.append(k)
+    return np.concatenate(scores), np.concatenate(kept)
+
+
+def _assert_matches(det, scores, kept, ref):
+    np.testing.assert_array_equal(scores, ref.scores)
+    np.testing.assert_array_equal(kept, ref.kept)
+    np.testing.assert_array_equal(np.asarray(det.state.surface), ref.tos)
+    np.testing.assert_array_equal(np.asarray(det.state.lut), ref.lut)
+    np.testing.assert_array_equal(
+        np.asarray(det.vdd_trace, np.float64), ref.vdd_trace
+    )
+    assert det.energy_pj == ref.energy_pj
+
+
+# ---------------------------------------------------------------------------
+# Knob bit-exactness vs config-respecialized oracles, one per ladder tier
+# ---------------------------------------------------------------------------
+
+
+# A short DVFS window turns a modest synthetic stream into one the
+# controller reads as > 39 Meps — past the second-highest LUT capacity, so
+# the uncapped run picks the top operating point and a vdd ceiling must
+# actually change the chosen trace.
+_HOT_DVFS = dvfs.DvfsConfig(tw_us=200)
+
+
+def _hot_stream():
+    return synthetic.ramp_stream([4_000] * 8, _HOT_DVFS.half_us, seed=5)
+
+
+@pytest.mark.parametrize("tier", [0, 1, 2, 3])
+def test_knobs_bitexact_vs_config_oracle_per_tier(tier):
+    """Tier knobs written through ``set_control`` == a fresh session whose
+    config bakes the same operating point in.  The knob route and the
+    oracle route share one compiled step (knobs are ctrl-state data), so
+    this pins that nothing in the trace still reads the raw config."""
+    st = _hot_stream()
+    cfg = pipeline.PipelineConfig(
+        chunk=256, lut_every_chunks=2, dvfs=True, dvfs_online=True,
+        inject_ber=True, dvfs_cfg=_HOT_DVFS,
+    )
+    lad = LadderConfig()                      # lut_stretch=4, vdd_drop=1
+    top = len(dvfs.op_point_table(cfg.dvfs_cfg).caps) - 1
+    sched = DegradationLadder(
+        (cfg.chunk,), ladder=lad,
+        base_lut_every=cfg.lut_every_chunks, vdd_top=top,
+    )
+    lut_every, vdd_cap, shed = sched.knobs_for_tier(tier)
+
+    # config-respecialized oracle for the same knobs
+    ocfg = cfg
+    if shed:
+        # shed suspends refresh outright == an interval the stream never
+        # reaches (and drop-oldest never fires in a lone session: there is
+        # no re-chunk backlog to cap)
+        ocfg = dataclasses.replace(ocfg, lut_every_chunks=1_000_000)
+    elif lut_every != cfg.lut_every_chunks:
+        ocfg = dataclasses.replace(ocfg, lut_every_chunks=lut_every)
+    if vdd_cap < top:
+        tab = dvfs.op_point_table(cfg.dvfs_cfg)
+        ocfg = dataclasses.replace(
+            ocfg, dvfs_cfg=dataclasses.replace(
+                cfg.dvfs_cfg, vdd_ceiling=float(tab.vdd64[vdd_cap])
+            ),
+        )
+    ref = pipeline.run_pipeline(st.xy, st.ts, ocfg)
+
+    det = StreamingDetector(cfg)
+    det.set_control(lut_every=lut_every, vdd_cap=vdd_cap, shed=shed)
+    assert det.control == {
+        "lut_every": lut_every, "vdd_cap": vdd_cap, "shed": shed,
+    }
+    scores, kept = _feed_all(det, st.xy, st.ts)
+    _assert_matches(det, scores, kept, ref)
+
+
+def test_vdd_cap_actually_bites():
+    """Guard against a vacuous ceiling oracle: on the hot stream the
+    uncapped controller must pick the top operating point somewhere, so
+    tier 2's capped trace genuinely differs from tier 0's."""
+    st = _hot_stream()
+    cfg = pipeline.PipelineConfig(
+        chunk=256, lut_every_chunks=2, dvfs=True, dvfs_online=True,
+        dvfs_cfg=_HOT_DVFS,
+    )
+    tab = dvfs.op_point_table(cfg.dvfs_cfg)
+    assert len(tab.caps) >= 2, "hw LUT must offer more than one point"
+    free = pipeline.run_pipeline(st.xy, st.ts, cfg)
+    assert float(np.max(free.vdd_trace)) == float(tab.vdd64[-1])
+
+    det = StreamingDetector(cfg)
+    det.set_control(vdd_cap=len(tab.caps) - 2)
+    det.feed(st.xy, st.ts)
+    det.flush()
+    capped = np.asarray(det.vdd_trace, np.float64)
+    assert float(np.max(capped)) <= float(tab.vdd64[-2])
+    assert not np.array_equal(capped, free.vdd_trace)
+
+
+def test_set_control_midstream_shed_equals_infinite_interval():
+    """shed == an unreachable refresh interval, also when flipped
+    mid-stream: two sessions split at the same slab boundary, one shed,
+    one stretched past the horizon, stay bit-identical."""
+    st = synthetic.shapes_stream(duration_us=30_000, seed=6)
+    xy, ts = st.xy[:2600], st.ts[:2600]
+    cfg = pipeline.PipelineConfig(chunk=256, lut_every_chunks=2)
+    a = StreamingDetector(cfg)
+    b = StreamingDetector(cfg)
+    sa = [a.feed(xy[:1300], ts[:1300])]
+    sb = [b.feed(xy[:1300], ts[:1300])]
+    a.set_control(shed=True)
+    b.set_control(lut_every=1_000_000)
+    sa += [a.feed(xy[1300:], ts[1300:]), a.flush()]
+    sb += [b.feed(xy[1300:], ts[1300:]), b.flush()]
+    for (s1, k1), (s2, k2) in zip(sa, sb):
+        np.testing.assert_array_equal(s1, s2)
+        np.testing.assert_array_equal(k1, k2)
+    np.testing.assert_array_equal(
+        np.asarray(a.state.lut), np.asarray(b.state.lut)
+    )
+
+
+# ---------------------------------------------------------------------------
+# DegradationLadder policy units (pure host)
+# ---------------------------------------------------------------------------
+
+
+def _obs(lanes=(), reader_lag=None):
+    return Observation(
+        lanes=tuple(lanes),
+        backlog_rounds={},
+        reader_lag_rounds=reader_lag or {},
+        drain_wait_s=0.0,
+        last_drain_wait_s={},
+        padding_ratio=0.0,
+    )
+
+
+def _lane(lane, backlog, qos="standard", tier=0, bucket=128):
+    return LaneObservation(
+        lane=lane, bucket=bucket, qos=qos, tier=tier,
+        events_per_halfwin=0.0, backlog_rounds=backlog, win=None,
+    )
+
+
+def test_ladder_tier_mapping_is_qos_ordered():
+    lad = LadderConfig(classes=(("bronze", 2), ("silver", 2), ("premium", 0)))
+    s = DegradationLadder((128,), ladder=lad)
+    assert s._max_level == 4
+    expect = {              # level -> (bronze, silver, premium)
+        0: (0, 0, 0), 1: (1, 0, 0), 2: (2, 0, 0),
+        3: (2, 1, 0), 4: (2, 2, 0),
+    }
+    for level, tiers in expect.items():
+        s._level = level
+        assert (s.target_tier("bronze"), s.target_tier("silver"),
+                s.target_tier("premium")) == tiers
+        assert s.target_tier("not-a-class") == 0
+
+
+def test_ladder_knobs_per_tier():
+    lad = LadderConfig(lut_stretch=4, vdd_drop=1)
+    s = DegradationLadder((128,), ladder=lad, base_lut_every=2, vdd_top=3)
+    assert s.knobs_for_tier(0) == (2, 3, False)
+    assert s.knobs_for_tier(1) == (8, 3, False)
+    assert s.knobs_for_tier(2) == (8, 2, False)
+    assert s.knobs_for_tier(3) == (8, 2, True)
+
+
+def test_ladder_hysteresis_dead_band_and_patience():
+    lad = LadderConfig(hi_rounds=2.0, lo_rounds=0.5, patience=2,
+                       recover_patience=3)
+    s = DegradationLadder((128,), ladder=lad)
+    hot = _obs([_lane(0, 5)])                  # pressure 5 > hi
+    mid = _obs([_lane(0, 1)])                  # dead band: 0.5 <= 1 <= 2
+    cool = _obs([_lane(0, 0)])                 # pressure 0 < lo
+    s.decide(hot)
+    assert s.level == 0                        # patience=2: not yet
+    s.decide(hot)
+    assert s.level == 1
+    # dead band resets BOTH streaks: hot, mid, hot must not climb
+    s.decide(hot)
+    s.decide(mid)
+    s.decide(hot)
+    assert s.level == 1
+    s.decide(hot)
+    assert s.level == 2
+    # recovery needs recover_patience consecutive cool observations
+    s.decide(cool)
+    s.decide(cool)
+    s.decide(mid)                              # resets the cool streak too
+    s.decide(cool)
+    s.decide(cool)
+    assert s.level == 2
+    s.decide(cool)
+    assert s.level == 1
+    # level clamps at 0 / max
+    for _ in range(20):
+        s.decide(cool)
+    assert s.level == 0
+    for _ in range(40):
+        s.decide(hot)
+    assert s.level == s._max_level
+
+
+def test_ladder_actions_only_on_tier_mismatch():
+    lad = LadderConfig(patience=1, recover_patience=1)
+    s = DegradationLadder((128,), ladder=lad, base_lut_every=2, vdd_top=3)
+    s._level = 1
+    acts = s.decide(_obs([_lane(0, 1, tier=0), _lane(1, 1, qos="premium"),
+                          _lane(2, 1, tier=1)]))
+    # lane 0 moves to tier 1; premium stays 0; lane 2 already actuated
+    assert [a.lane for a in acts] == [0]
+    assert acts[0] == Action(lane=0, lut_every=8, vdd_cap=3, shed=False,
+                             tier=1)
+    assert s.scheduler_stats()["ladder_transitions"] == 1
+    # recovery emits the restore action for the degraded lane
+    s._level = 0
+    acts = s.decide(_obs([_lane(2, 1, tier=1)]))
+    assert acts == (Action(lane=2, lut_every=2, vdd_cap=3, shed=False,
+                           tier=0),)
+    assert s.scheduler_stats()["ladder_transitions"] == 2
+
+
+def test_ladder_order_is_starved_first():
+    s = DegradationLadder((128, 256, 512))
+    assert s.order({128: 0, 256: 4, 512: 1}) == (256, 512, 128)
+    assert s.order({}) == (128, 256, 512)
+
+
+def test_ladder_config_validation_and_factory():
+    assert make_scheduler("ladder", (128,)).policy == "ladder"
+    assert make_scheduler("ladder", (128,)).needs_pump_observation
+    assert not make_scheduler("static", (128,)).needs_pump_observation
+    with pytest.raises(ValueError, match="policy"):
+        make_scheduler("greedy", (128,))
+    with pytest.raises(ValueError, match="QoS"):
+        LadderConfig(classes=(("a", 1), ("a", 2)))
+    with pytest.raises(ValueError, match="lo_rounds"):
+        LadderConfig(hi_rounds=1.0, lo_rounds=2.0)
+    with pytest.raises(ValueError, match="patience"):
+        LadderConfig(patience=0)
+    with pytest.raises(ValueError, match="lut_stretch"):
+        LadderConfig(lut_stretch=1)
+
+
+# ---------------------------------------------------------------------------
+# Runtime: Observation correctness + actuation races
+# ---------------------------------------------------------------------------
+
+
+def test_pump_observation_reports_real_backlog_and_qos():
+    cfg = pipeline.PipelineConfig(chunk=128, lut_every_chunks=2)
+    st = synthetic.shapes_stream(duration_us=30_000, seed=0)
+    rt = PoolRuntime(cfg, capacity=2, buckets=(128,))
+    a = rt.connect(128, seed=0, qos="premium")
+    b = rt.connect(128, seed=1)
+    rt.feed(a, st.xy[:300], st.ts[:300])       # 2 full rounds + 44 buffered
+    rt.feed(b, st.xy[:100], st.ts[:100])       # 0 full rounds
+    seen = []
+
+    def capture(obs):
+        seen.append(obs)
+        return ()
+
+    rt.pump_pass((128,), decide=capture)
+    rt.pump_pass((128,), decide=capture)
+    first, second = seen
+    by_lane = {l.lane: l for l in first.lanes}
+    assert by_lane[a].qos == "premium" and by_lane[b].qos == "standard"
+    assert by_lane[a].tier == 0
+    assert by_lane[a].backlog_rounds == 2
+    assert by_lane[b].backlog_rounds == 0
+    assert first.backlog_rounds == {128: 2}
+    assert 0.0 <= first.padding_ratio <= 1.0
+    assert set(first.reader_lag_rounds) == {128}
+    # the pass folded the backlog: the next observation sees it drained
+    assert second.backlog_rounds == {128: 0}
+    rt.close()
+
+
+def test_in_pump_actions_actuate_knobs_and_stage_migration():
+    cfg = pipeline.PipelineConfig(chunk=128, lut_every_chunks=2)
+    st = synthetic.shapes_stream(duration_us=30_000, seed=0)
+    rt = PoolRuntime(cfg, capacity=1, buckets=(128, 256))
+    lane = rt.connect(128)
+    rt.feed(lane, st.xy[:400], st.ts[:400])
+    rt.pump_pass((128, 256), decide=lambda obs: (
+        Action(lane=lane, lut_every=8, vdd_cap=0, shed=False, tier=1,
+               migrate=256),
+    ))
+    s = rt.stats(lane)
+    assert s["ctrl_lut_every"] == 8 and s["ladder_tier"] == 1
+    assert s["bucket"] == 128                  # migrate staged, not applied
+    assert rt.staged_migrations() == {lane: 256}
+    rt.pump_pass((128, 256))                   # next pass applies the move
+    s = rt.stats(lane)
+    assert s["bucket"] == 256 and s["migrations"] == 1
+    # the migration snapshot carried the ctrl leaves: knobs survive
+    assert s["ctrl_lut_every"] == 8 and s["ladder_tier"] == 1
+    assert rt.executors_compiled_once()
+    rt.close()
+
+
+def test_action_for_retired_lane_is_dropped_silently():
+    cfg = pipeline.PipelineConfig(chunk=128, lut_every_chunks=2)
+    rt = PoolRuntime(cfg, capacity=2, buckets=(128,))
+    dead = rt.connect(128)
+    live = rt.connect(128)
+    rt.disconnect(dead)
+    rt.pump_pass((128,), decide=lambda obs: (
+        Action(lane=dead, shed=True, tier=3),   # raced a disconnect
+        Action(lane=live, lut_every=4, tier=1),
+        Action(lane=None, drop_policy="drop_oldest"),  # pool-wide, no lane
+    ))
+    assert rt.stats(live)["ctrl_lut_every"] == 4
+    assert rt._overflow == "drop_oldest"
+    # slot reuse starts at neutral knobs regardless of the dead action
+    fresh = rt.connect(128)
+    assert fresh == dead
+    s = rt.stats(fresh)
+    assert s["ctrl_shed"] is False and s["ladder_tier"] == 0
+    assert s["ctrl_lut_every"] == cfg.lut_every_chunks
+    with pytest.raises(ValueError, match="drop_policy"):
+        rt.pump_pass((128,), decide=lambda obs: (
+            Action(lane=None, drop_policy="yolo"),
+        ))
+    rt.close()
+
+
+def test_shed_caps_rechunk_buffer_drop_oldest():
+    cfg = pipeline.PipelineConfig(chunk=128, lut_every_chunks=2)
+    st = synthetic.shapes_stream(duration_us=60_000, seed=1)
+    rt = PoolRuntime(cfg, capacity=1, buckets=(128,), ring_rounds=2)
+    lane = rt.connect(128)
+    rt.set_lane_control(lane, shed=True)
+    rt.feed(lane, st.xy[:2000], st.ts[:2000])
+    s = rt.stats(lane)
+    cap = 2 * 128                              # ring_rounds * bucket
+    assert s["buffered"] <= cap
+    assert s["shed_events"] == 2000 - cap
+    # the drop is oldest-first: the newest timestamp survives
+    ln = rt._lanes[lane]
+    assert int(ln.buf_ts[-1]) == int(st.ts[1999])
+    assert rt.pool_stats()["shed_events_total"] == 2000 - cap
+    rt.close()
+
+
+# ---------------------------------------------------------------------------
+# Pool e2e: ladder degrades standard, spares premium, recovers, never
+# recompiles
+# ---------------------------------------------------------------------------
+
+
+def test_pool_ladder_degrades_standard_spares_premium_then_recovers():
+    cfg = pipeline.PipelineConfig(chunk=128, lut_every_chunks=2)
+    st = synthetic.burst_stream(600, 12, 2_000, burst_factor=2.0, seed=3)
+    lad = LadderConfig(patience=1, recover_patience=1,
+                       hi_rounds=2.0, lo_rounds=0.5)
+    # sync drain keeps reader_lag_rounds at 0, so recovery pressure is a
+    # deterministic function of the re-chunk backlog alone (async mode
+    # would fold the reader's drain timing into the pressure signal)
+    pool = DetectorPool(cfg, capacity=2, buckets=(128,), policy="ladder",
+                        ladder=lad, ring_rounds=2, drain_mode="sync")
+    std = pool.connect(qos="standard", seed=0)
+    prm = pool.connect(qos="premium", seed=1)
+
+    # overload: feed whole windows, pump on a starvation budget so backlog
+    # pressure builds and the ladder climbs to shed
+    half = 2_000
+    for j in range(12):
+        m = (st.ts // half) == j
+        pool.feed(std, st.xy[m], st.ts[m])
+        pool.feed(prm, st.xy[m], st.ts[m])
+        pool.pump_rounds(1)
+        if pool.pool_stats()["ladder_level"] >= 3:
+            break
+    ps = pool.pool_stats()
+    assert ps["ladder_level"] >= 3
+    assert ps["ladder_transitions"] >= 1
+    s_std, s_prm = pool.stats(std), pool.stats(prm)
+    assert s_std["ladder_tier"] == 3 and s_std["ctrl_shed"] is True
+    assert s_std["ctrl_lut_every"] == cfg.lut_every_chunks * lad.lut_stretch
+    # premium holds full quality through the whole overload
+    assert s_prm["ladder_tier"] == 0
+    assert s_prm["ctrl_lut_every"] == cfg.lut_every_chunks
+    assert s_prm["ctrl_shed"] is False
+    assert ps["shed_events_total"] > 0
+
+    # recovery: drain the backlog, then pressure-free pumps walk the level
+    # back down and restore the standard lane's knobs
+    for _ in range(20):
+        pool.pump()
+        pool.poll(std, wait=False)
+        pool.poll(prm, wait=False)
+        if pool.pool_stats()["ladder_level"] == 0:
+            break
+    assert pool.pool_stats()["ladder_level"] == 0
+    pool.pump()                                # one more pass re-actuates
+    s_std = pool.stats(std)
+    assert s_std["ladder_tier"] == 0
+    assert s_std["ctrl_lut_every"] == cfg.lut_every_chunks
+    assert s_std["ctrl_shed"] is False
+    assert pool.executors_compiled_once()      # zero recompiles throughout
+    pool.close()
+
+
+def test_pool_ladder_poll_nonblocking_defers_actuation_to_pump():
+    """poll(wait=False) must never actuate (actuation runs under the pump
+    token and may seal/drain): with overload pressure pending, a
+    non-blocking poll leaves knobs and the ladder untouched; the next
+    pump pass observes, decides, and actuates."""
+    cfg = pipeline.PipelineConfig(chunk=128, lut_every_chunks=2)
+    st = synthetic.shapes_stream(duration_us=60_000, seed=2)
+    lad = LadderConfig(patience=1, hi_rounds=1.0)
+    pool = DetectorPool(cfg, capacity=1, buckets=(128,), policy="ladder",
+                        ladder=lad)
+    lane = pool.connect(qos="standard", seed=0)
+    pool.feed(lane, st.xy[:1000], st.ts[:1000])    # 7 rounds of pressure
+    for _ in range(4):
+        pool.poll(lane, wait=False)
+    assert pool.pool_stats()["ladder_level"] == 0
+    assert pool.pool_stats()["ladder_transitions"] == 0
+    assert pool.stats(lane)["ladder_tier"] == 0
+    pool.pump()                                    # the fold point actuates
+    assert pool.pool_stats()["ladder_level"] == 1
+    assert pool.stats(lane)["ladder_tier"] == 1
+    pool.close()
+
+
+def test_pool_ladder_tier_survives_disconnect_via_reactuation():
+    """A degraded lane that disconnects hands its slot to a fresh session
+    at neutral knobs; the ladder (still at altitude) re-actuates the new
+    tenant on the next pump — the tier mirror makes actuation idempotent
+    and self-healing."""
+    cfg = pipeline.PipelineConfig(chunk=128, lut_every_chunks=2)
+    st = synthetic.shapes_stream(duration_us=60_000, seed=4)
+    lad = LadderConfig(patience=1, recover_patience=10, hi_rounds=1.0)
+    pool = DetectorPool(cfg, capacity=1, buckets=(128,), policy="ladder",
+                        ladder=lad)
+    lane = pool.connect(qos="standard", seed=0)
+    pool.feed(lane, st.xy[:1000], st.ts[:1000])
+    pool.pump_rounds(1)
+    assert pool.stats(lane)["ladder_tier"] >= 1
+    t0 = pool.pool_stats()["ladder_transitions"]
+    pool.disconnect(lane)
+    lane2 = pool.connect(qos="standard", seed=1)
+    assert lane2 == lane                           # slot reused
+    s = pool.stats(lane2)
+    assert s["ladder_tier"] == 0                   # fresh knobs
+    assert s["ctrl_lut_every"] == cfg.lut_every_chunks
+    pool.feed(lane2, st.xy[:1000], st.ts[:1000])   # keep the pressure on
+    pool.pump_rounds(1)
+    s = pool.stats(lane2)
+    assert s["ladder_tier"] >= 1                   # re-actuated
+    assert pool.pool_stats()["ladder_transitions"] > t0
+    assert pool.executors_compiled_once()
+    pool.close()
+
+
+def test_pool_rejects_unknown_qos_class():
+    cfg = pipeline.PipelineConfig(chunk=128)
+    pool = DetectorPool(cfg, capacity=1, policy="ladder")
+    with pytest.raises(ValueError, match="QoS"):
+        pool.connect(qos="platinum")
+    pool.close()
+    # other policies carry qos as an inert label
+    pool = DetectorPool(cfg, capacity=1)
+    lane = pool.connect(qos="whatever")
+    assert pool.stats(lane)["qos"] == "whatever"
+    pool.close()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: per-lane overload stats fields
+# ---------------------------------------------------------------------------
+
+
+def test_lane_stats_overload_fields():
+    cfg = pipeline.PipelineConfig(chunk=128, lut_every_chunks=2)
+    st = synthetic.shapes_stream(duration_us=30_000, seed=0)
+    pool = DetectorPool(cfg, capacity=1)
+    lane = pool.connect(seed=0)
+    s = pool.stats(lane)
+    assert s["backlog_rounds"] == 0
+    assert s["reader_lag_rounds"] == 0
+    assert s["last_drain_wait_s"] == 0.0
+    pool.feed(lane, st.xy[:300], st.ts[:300])
+    assert pool.stats(lane)["backlog_rounds"] == 2     # 300 // 128
+    pool.pump()
+    pool.poll(lane)
+    s = pool.stats(lane)
+    assert s["backlog_rounds"] == 0                    # folded
+    assert s["reader_lag_rounds"] >= 0
+    assert isinstance(s["last_drain_wait_s"], float)
+    assert s["qos"] == "standard" and s["ladder_tier"] == 0
+    assert s["shed_events"] == 0
+    pool.close()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: burst_stream shape
+# ---------------------------------------------------------------------------
+
+
+def test_burst_stream_exact_window_counts():
+    st = synthetic.burst_stream(100, 8, 1_000, burst_start=2, burst_len=4,
+                                burst_factor=3.0, seed=9)
+    counts = np.bincount(st.ts // 1_000, minlength=8)
+    np.testing.assert_array_equal(
+        counts, [100, 100, 300, 300, 300, 300, 100, 100]
+    )
+    assert np.all(np.diff(st.ts) >= 0)
+    # defaults: burst spans the middle half at 2x
+    st = synthetic.burst_stream(50, 8, 1_000)
+    counts = np.bincount(st.ts // 1_000, minlength=8)
+    np.testing.assert_array_equal(
+        counts, [50, 50, 100, 100, 100, 100, 50, 50]
+    )
