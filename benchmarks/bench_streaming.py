@@ -59,7 +59,12 @@ Rows per pool size K in {1, 4, 16}:
 
 plus the batch-path reference (``batchK_events_per_s`` via the vmapped
 ``run_pipeline_batched`` scan) so the cost of *online* serving is visible
-next to the single-sync fold.  All stream/slab randomness is pinned by
+next to the single-sync fold, and the ISSUE 7 fused-step contrast
+(``stream_fused_{H}x{W}_{fused,unfused}_events_per_s`` at DAVIS240 and
+720p): measured streaming throughput of ``backend="pallas_fused"`` vs the
+jnp path — recorded ``_skipped`` on non-TPU hosts, where the fused kernel
+runs under the Pallas interpreter and wall time measures the interpreter,
+not the kernel.  All stream/slab randomness is pinned by
 ``SEED`` for run-to-run comparability; ``rows(smoke=True)`` shrinks sizes
 for the CI bench-smoke step.  ``benchmarks/run.py --check-regression``
 gates the structural rows (burst rounds/fetch) and the ring p99 against a
@@ -82,6 +87,7 @@ SLAB = 384
 SEED = 7                      # pinned: streams and any slab jitter
 RING_ROUNDS = 8
 DRAIN_WAIT_RING = 2           # small ring -> bursts must drain mid-pump
+FUSED_SIZES = ((180, 240), (720, 1280))   # DAVIS240 + 720p
 
 
 def _mk_streams(k: int, duration_us: int):
@@ -244,6 +250,51 @@ def _run_overload(cfg, k, *, use_ladder, n_windows):
     return np.asarray(lat), trans, shed
 
 
+def _time_stream(cfg, st):
+    """Wall time to serve one stream slab-by-slab through a
+    StreamingDetector (compile warmed on a throwaway instance)."""
+    from repro.serve.streaming import StreamingDetector
+
+    warm = StreamingDetector(cfg, seed=SEED)
+    warm.feed(st.xy, st.ts)
+    warm.flush()
+    det = StreamingDetector(cfg, seed=SEED)
+    t0 = time.perf_counter()
+    for c in range(0, len(st), SLAB):
+        det.feed(st.xy[c:c + SLAB], st.ts[c:c + SLAB])
+    det.flush()
+    return time.perf_counter() - t0
+
+
+def _fused_stream_rows(smoke: bool):
+    """Measured fused-vs-unfused streaming throughput (ISSUE 7) at DAVIS240
+    and 720p.  On non-TPU hosts the fused backend runs the Pallas kernel in
+    interpret mode — a correctness vehicle, not a perf one — so the rows are
+    recorded ``_skipped`` instead of gating interpreter noise; the analytic
+    contrast lives in ``bench_tos_kernels.fused_terms`` either way."""
+    out = []
+    on_tpu = jax.default_backend() == "tpu"
+    sizes = FUSED_SIZES[:1] if smoke else FUSED_SIZES
+    duration = 6_000 if smoke else DURATION_US
+    for (h, w) in sizes:
+        tag = f"stream_fused_{h}x{w}"
+        if not on_tpu:
+            out.append((f"{tag}_unfused_events_per_s_skipped", 0.0, 0.0))
+            out.append((f"{tag}_fused_events_per_s_skipped", 0.0, 0.0))
+            continue
+        st = synthetic.shapes_stream(height=h, width=w,
+                                     duration_us=duration, seed=SEED)
+        for label, backend in (("unfused", "jnp"),
+                               ("fused", "pallas_fused")):
+            cfg = pipeline.PipelineConfig(height=h, width=w, chunk=256,
+                                          lut_every_chunks=2,
+                                          backend=backend)
+            dt = _time_stream(cfg, st)
+            out.append((f"{tag}_{label}_events_per_s",
+                        dt * 1e6 / max(len(st), 1), len(st) / dt))
+    return out
+
+
 def _run_batch(cfg, streams):
     k = len(streams)
     e = min(len(s) for s in streams)
@@ -357,4 +408,5 @@ def rows(smoke: bool = False):
         bdt, bn = _run_batch(cfg, streams)
         out.append((f"batch{k}_events_per_s", bdt * 1e6 / max(bn, 1),
                     bn / bdt))
+    out.extend(_fused_stream_rows(smoke))
     return out

@@ -5,7 +5,13 @@ derives the analytic roofline terms of the two kernel formulations per chunk
 of E events on a (H, W) surface (v5e constants), plus interpret-mode
 correctness timing on this host.  The MXU-matmul formulation's compute term
 and the stream formulation's VPU term quantify the reformulation win — the
-numbers feeding EXPERIMENTS.md §Perf (TOS kernel hillclimb)."""
+numbers feeding EXPERIMENTS.md §Perf (TOS kernel hillclimb).
+
+The ``fusedstep_*`` rows contrast the ISSUE 7 fused chunk-step megakernel
+(one pallas_call: STCF + TOS + BER + LUT score, surface state resident in
+VMEM) against the unfused 4-op pipeline: HBM bytes per chunk, kernel
+round-trips per chunk (the structural witness ``run.py`` gates), and the
+resulting events/s bound including per-launch overhead."""
 from __future__ import annotations
 
 import time
@@ -18,6 +24,11 @@ from repro.launch.mesh import HW
 
 # v5e VPU: 8x128 lanes x 4 ALUs x ~0.94 GHz ~= 4 Tops/s elementwise (f32)
 VPU_OPS = 4e12
+
+# Per pallas_call dispatch + drain overhead (grid setup, DMA semaphore
+# init, tail flush) — order measured on v5e-class parts.  The fused-step
+# win is mostly this term times the launches it removes.
+T_LAUNCH_S = 3e-6
 
 
 def kernel_terms(h=720, w=1280, e=1024, patch=7):
@@ -42,6 +53,46 @@ def kernel_terms(h=720, w=1280, e=1024, patch=7):
     out["onehot_vpu_s"] = (e * (h + w) + e * e * 2 + px * 4) / VPU_OPS
     out["onehot_hbm_s"] = 2 * px / HW.HBM_BW
     return out
+
+
+def fused_terms(h=720, w=1280, e=1024, patch=7):
+    """Roofline terms for the fused chunk-step megakernel (ISSUE 7) vs the
+    unfused 4-op pipeline (STCF -> TOS update -> BER inject -> LUT gather).
+
+    Byte accounting is honest in both directions: unfused pays an HBM
+    round-trip for every intermediate (the TOS crosses HBM twice between
+    the update and the BER op, the SAE once per STCF call) plus one kernel
+    launch per op; fused pays a *full* 4 B/px LUT read for VMEM residency
+    where the unfused gather touches only E entries — the fused win is the
+    removed round-trips and launches, not a smaller byte total at every
+    size.  ``*_events_per_s`` folds both into a latency bound with the
+    (shared) stream-formulation VPU term."""
+    px = h * w
+    ev_bytes = e * 4 * 4               # (E,4) int32 chunk upload
+    out_bytes = e * 4 + e * 4          # keep (int32) + scores (f32)
+    unfused_bytes = (
+        (px * 4 + ev_bytes + px * 4 + e * 4)  # stcf: SAE in/out, keep out
+        + (px + ev_bytes + px)                # tos update: TOS in/out
+        + (px + px)                           # ber inject: TOS in/out
+        + (e * 4 + e * 4)                     # score: LUT gather, scores
+    )
+    fused_bytes = (
+        px + px                # TOS in/out, once for the whole step
+        + px * 4 + px * 4      # SAE in/out
+        + px * 4               # full-LUT VMEM residency (the honest cost)
+        + ev_bytes + out_bytes
+    )
+    vpu_s = e * px * 3.0 / VPU_OPS     # masked decrement — same both ways
+    unfused_s = 4 * T_LAUNCH_S + unfused_bytes / HW.HBM_BW + vpu_s
+    fused_s = 1 * T_LAUNCH_S + fused_bytes / HW.HBM_BW + vpu_s
+    return {
+        "unfused_hbm_bytes_per_chunk": float(unfused_bytes),
+        "fused_hbm_bytes_per_chunk": float(fused_bytes),
+        "unfused_roundtrips_per_chunk": 4.0,
+        "fused_roundtrips_per_chunk": 1.0,
+        "unfused_events_per_s": e / unfused_s,
+        "fused_events_per_s": e / fused_s,
+    }
 
 
 def binned_fraction(h, w, e, patch=7, seed=0):
@@ -85,4 +136,8 @@ def rows(smoke: bool = False):
         out.append((f"tos_kernel_{h}x{w}_E{e}_bin_max_frac", 0.0, max_f))
         out.append((f"tos_kernel_{h}x{w}_E{e}_binned_stream_meps", 0.0,
                     e / (stream * max_f) / 1e6))
+        # fused chunk-step megakernel vs the unfused 4-op pipeline: bytes,
+        # round-trips (the structural witness run.py gates), events/s
+        for k, v in fused_terms(h, w, e).items():
+            out.append((f"fusedstep_{h}x{w}_E{e}_{k}", 0.0, v))
     return out

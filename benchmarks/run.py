@@ -20,8 +20,10 @@ baseline JSON and the process exits non-zero on a regression.
   * structural rows (``*_burst_rounds_per_fetch`` higher-is-better,
     ``*_fetches_per_round`` lower-is-better, the ISSUE 5 migration
     witnesses ``*_migration_count`` / ``*_migration_padding_saved_ratio``,
-    and the ISSUE 6 overload witness ``*_overload_ladder_transitions``,
-    all higher-is-better) count blocking transfers per executed round and
+    the ISSUE 6 overload witness ``*_overload_ladder_transitions``, both
+    higher-is-better, and the ISSUE 7 fused-step witness
+    ``*_fused_roundtrips_per_chunk``, lower-is-better) count blocking
+    transfers per executed round and
     the control plane's work — machine-independent and deterministic
     at fixed sizes, so they get the tight ``--tol`` (default 0.35 = 35%).
     These catch "the ring quietly started fetching every round" and "the
@@ -59,6 +61,12 @@ _GATE_STRUCTURAL = (
     # actuating tier transitions — zero means the ladder stopped observing,
     # deciding, or actuating
     ("_overload_ladder_transitions", "higher"),
+    # fused chunk-step (ISSUE 7): the megakernel must keep the whole
+    # STCF->TOS->BER->score step in ONE pallas_call — this row rising above
+    # 1 means the step quietly split back into multiple launches.  Presence
+    # is the gate (fail-closed on a missing row); the analytic events/s
+    # rows ride along ungated since they are model outputs, not timings.
+    ("_fused_roundtrips_per_chunk", "lower"),
 )
 _GATE_TIME = (
     ("_slab_p99_ms", "lower"),

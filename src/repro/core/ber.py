@@ -21,6 +21,8 @@ import jax.numpy as jnp
 __all__ = [
     "encode5",
     "decode5",
+    "write_error_bits",
+    "apply_write_errors",
     "inject_write_errors",
     "inject_write_errors_at",
     "corrupt_surface",
@@ -58,6 +60,35 @@ def inject_write_errors(key: jax.Array, tos: jax.Array, ber: float) -> jax.Array
     return inject_write_errors_at(key, tos, jnp.float32(ber))
 
 
+def write_error_bits(
+    key: jax.Array, shape: tuple, ber: jax.Array
+) -> jax.Array:
+    """Per-pixel 5-bit xor masks (int32, values in [0, 31]) for one write
+    pass: bit ``b`` of pixel ``p`` is set w.p. ``ber``.
+
+    This is the *draw* half of ``inject_write_errors_at`` — split out so the
+    fused Pallas chunk step can take the Bernoulli samples from the same
+    key-split discipline on the host side and apply the xor/decode chain
+    inside the kernel (``kernels.fused_step``), staying draw-for-draw
+    identical to the jnp oracle.
+    """
+    flips = jax.random.bernoulli(key, ber, shape=(*shape, 5))
+    return jnp.sum(flips.astype(jnp.int32) * (2 ** jnp.arange(5)), axis=-1)
+
+
+def apply_write_errors(
+    tos: jax.Array, bits: jax.Array, ber: jax.Array
+) -> jax.Array:
+    """Apply precomputed xor masks to a surface (the *apply* half): encode to
+    the 5-bit storage code, xor, decode; value-0 pixels skip write-back and
+    ``ber == 0`` is an exact identity select."""
+    code = encode5(tos).astype(jnp.int32)
+    corrupted = jnp.bitwise_xor(code, bits)
+    out = jnp.where(code > 0, corrupted, code)   # zero pixels: no write-back
+    out = decode5(out.astype(jnp.uint8))
+    return jnp.where(ber > 0, out, tos)
+
+
 @jax.jit
 def inject_write_errors_at(
     key: jax.Array, tos: jax.Array, ber: jax.Array
@@ -68,14 +99,10 @@ def inject_write_errors_at(
     samples the uniform independently of ``ber``), and ``ber == 0`` is an
     exact identity via select rather than a Python branch, so the scan
     pipeline matches the host-loop reference bit-for-bit at every voltage.
+    Composition of ``write_error_bits`` + ``apply_write_errors`` — the same
+    two halves the fused Pallas backend splits across host and kernel.
     """
-    code = encode5(tos).astype(jnp.int32)
-    flips = jax.random.bernoulli(key, ber, shape=(*tos.shape, 5))
-    bits = jnp.sum(flips.astype(jnp.int32) * (2 ** jnp.arange(5)), axis=-1)
-    corrupted = jnp.bitwise_xor(code, bits)
-    out = jnp.where(code > 0, corrupted, code)   # zero pixels: no write-back
-    out = decode5(out.astype(jnp.uint8))
-    return jnp.where(ber > 0, out, tos)
+    return apply_write_errors(tos, write_error_bits(key, tos.shape, ber), ber)
 
 
 def corrupt_surface(key: jax.Array, tos: jax.Array, vdd: float) -> jax.Array:

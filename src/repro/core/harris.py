@@ -30,6 +30,32 @@ DEFAULT_SOBEL = 5
 DEFAULT_WINDOW = 5
 
 
+def _ensure_barrier_batching_rule() -> None:
+    """Backport the (identity) vmap rule for ``optimization_barrier``.
+
+    ``harris_response`` fences its conv region with ``optimization_barrier``
+    (see its docstring), and the pool executors vmap ``detector_step`` over
+    lanes — but the jax pinned here predates the upstream batching rule for
+    the barrier primitive.  The rule is trivially the identity on batch
+    dims (a barrier is semantically transparent), so register it iff absent.
+    """
+    try:
+        from jax._src.interpreters import batching
+        from jax._src.lax import lax as _lax_src
+
+        prim = _lax_src.optimization_barrier_p
+        if prim not in batching.primitive_batchers:
+            def _rule(batched_args, batch_dims, **params):
+                return prim.bind(*batched_args, **params), batch_dims
+
+            batching.primitive_batchers[prim] = _rule
+    except Exception:  # pragma: no cover - newer jax layouts ship the rule
+        pass
+
+
+_ensure_barrier_batching_rule()
+
+
 def _pascal_row(n: int) -> np.ndarray:
     row = np.array([1.0])
     for _ in range(n - 1):
@@ -89,10 +115,20 @@ def harris_response(
     semantics of the Pallas kernel (single padded VMEM image, valid taps),
     so kernel and oracle agree to float tolerance everywhere including
     borders.
+
+    The whole response is fenced with ``optimization_barrier`` for the same
+    reason ``_conv2_valid`` avoids ``lax.conv``: the shift-and-add emits
+    identical HLO in every context, but XLA:CPU may still *contract* the
+    ``tap * slice + acc`` chain into FMAs differently depending on what the
+    surrounding program fuses in (observed: one-ULP LUT drift when the
+    refresh sits next to the inlined interpret-mode fused Pallas step inside
+    the pool's scan-of-cond executor).  The barriers pin the conv region's
+    fusion boundary so its rounding is program-context independent — the
+    property every cross-path bit-exactness test in the suite leans on.
     """
     halo = sobel_size // 2 + window_size // 2
     img = tos.astype(jnp.float32) / 255.0
-    img = jnp.pad(img, halo)
+    img = jax.lax.optimization_barrier(jnp.pad(img, halo))
     gxk, gyk = sobel_kernels(sobel_size)
     gx = _conv2_valid(img, gxk)
     gy = _conv2_valid(img, gyk)
@@ -102,7 +138,7 @@ def harris_response(
     c = _conv2_valid(gx * gy, win)
     det = a * b - c * c
     tr = a + b
-    return det - k * tr * tr
+    return jax.lax.optimization_barrier(det - k * tr * tr)
 
 
 def corner_lut(

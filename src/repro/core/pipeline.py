@@ -34,10 +34,13 @@ Timestamps are int64 microseconds on the host; ``_prepare`` rebases them to
 chunk-relative int32 (base aligned to a DVFS half-window multiple) before
 they reach the device, so long recordings don't wrap int32.
 
-The ``backend`` config axis routes the TOS update through the Pallas
-kernels (``repro.kernels.ops.tos_update_op``): ``"jnp"`` uses the closed-form
-batched update, ``"pallas_nmc"`` the paper-faithful VMEM-streaming kernel,
-``"pallas_batched"`` the fused MXU formulation.
+The ``backend`` config axis routes the hot path through the Pallas kernels
+(``repro.kernels.ops``): ``"jnp"`` uses the closed-form batched TOS update,
+``"pallas_nmc"`` the paper-faithful VMEM-streaming TOS kernel,
+``"pallas_batched"`` the fused MXU TOS formulation, and ``"pallas_fused"``
+replaces the *whole* per-chunk STCF -> TOS -> BER -> LUT-score block with
+one VMEM-resident megakernel (``kernels.fused_step``) — every backend is
+property-tested bit-exact against the jnp step.
 
 Per-event scores are read from the *latest available* LUT — exactly the
 EBE/FBF decoupling the paper inherits from luvHarris.
@@ -70,7 +73,7 @@ __all__ = [
     "run_pipeline_batched",
 ]
 
-BACKENDS = ("jnp", "pallas_nmc", "pallas_batched")
+BACKENDS = ("jnp", "pallas_nmc", "pallas_batched", "pallas_fused")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,7 +101,7 @@ class PipelineConfig:
     seed: int = 0
     use_onehot_update: bool = False  # MXU formulation of the batched update
     # execution
-    backend: str = "jnp"             # "jnp" | "pallas_nmc" | "pallas_batched"
+    backend: str = "jnp"             # one of BACKENDS
     interpret: Optional[bool] = None  # Pallas interpret; None = auto (non-TPU)
 
 

@@ -317,9 +317,16 @@ def select_update(cfg) -> Callable:
             s, xy, v, patch=cfg.patch, th=cfg.th, mode=mode,
             interpret=cfg.interpret,
         )
+    if cfg.backend == "pallas_fused":
+        raise ValueError(
+            "backend 'pallas_fused' fuses the whole chunk step (STCF -> TOS "
+            "-> BER -> LUT score) into one kernel — it has no standalone TOS "
+            "update; route through detector_step / run_pipeline / the "
+            "serving layer instead"
+        )
     raise ValueError(
         f"unknown backend {cfg.backend!r}; expected ('jnp', 'pallas_nmc', "
-        f"'pallas_batched')"
+        f"'pallas_batched', 'pallas_fused')"
     )
 
 
@@ -359,6 +366,54 @@ def detector_init(cfg, *, seed: Optional[int] = None) -> DetectorState:
     )
 
 
+def _operating_point(cfg, state: DetectorState, chunk: ChunkInput):
+    """This chunk's (rate, vdd_idx, ber, energy_coef, latency_coef).
+
+    Shared verbatim by the jnp and fused steps: online mode runs the
+    streaming estimator and clamps the pick to the ladder's per-stream
+    ceiling (bit-identical to a table truncated at the cap — see
+    ``ControlState.vdd_cap`` — but traced data, so moving it never
+    respecializes); precomputed mode passes the chunk riders through.
+    """
+    if _online(cfg):
+        tab = dvfs_mod.op_point_table(cfg.dvfs_cfg)
+        rate, vdd_idx = dvfs_mod.online_vdd_from_chunk_ts(
+            state.rate, chunk.ts, chunk.valid,
+            cfg=cfg.dvfs_cfg, caps=jnp.asarray(tab.caps),
+        )
+        vdd_idx = jnp.minimum(vdd_idx, state.ctrl.vdd_cap)
+        return (rate, vdd_idx, jnp.asarray(tab.ber)[vdd_idx],
+                jnp.asarray(tab.energy_pj)[vdd_idx],
+                jnp.asarray(tab.latency_ns)[vdd_idx])
+    return (state.rate, jnp.int32(0), chunk.ber,
+            chunk.energy_coef, chunk.latency_coef)
+
+
+def _refresh_lut(cfg, state: DetectorState, surface, lut):
+    """Periodic Harris LUT rebuild; returns (lut, do_refresh).
+
+    Refresh cadence is runtime data (ControlState), not the config
+    constant — the ladder stretches it without a recompile.  ``shed``
+    suspends refresh outright; scoring continues against the stale LUT
+    (the luvHarris overload mode: degrade quality, never latency).
+    """
+    do_refresh = (
+        ((state.chunk_idx + 1) % state.ctrl.lut_every) == 0
+    ) & jnp.logical_not(state.ctrl.shed)
+    lut = jax.lax.cond(
+        do_refresh,
+        lambda s: harris_mod.harris_response(
+            s,
+            sobel_size=cfg.sobel_size,
+            window_size=cfg.window_size,
+            k=cfg.harris_k,
+        ),
+        lambda s: lut,
+        surface,
+    )
+    return lut, do_refresh
+
+
 def detector_step(
     cfg, state: DetectorState, chunk: ChunkInput
 ) -> tuple[DetectorState, ChunkOutput]:
@@ -368,7 +423,14 @@ def detector_step(
     stream, ``StreamingDetector`` calls it per arriving chunk, and
     ``DetectorPool`` vmaps it over camera lanes.  Per-event scores read the
     *latest available* LUT — the EBE/FBF decoupling of luvHarris.
+
+    ``backend="pallas_fused"`` swaps the four-stage STCF/TOS/BER/score
+    block for the single VMEM-resident Pallas kernel (property-tested
+    bit-exact); the DVFS pick, accumulators, and LUT refresh are shared
+    code either way, so every serving path gets the fusion unchanged.
     """
+    if cfg.backend == "pallas_fused":
+        return _detector_step_fused(cfg, state, chunk)
     update = select_update(cfg)
     surface, sae, lut = state.surface, state.sae, state.lut
     lut_ready, key = state.lut_ready, state.key
@@ -379,24 +441,9 @@ def detector_step(
         support=cfg.stcf_support, tw=cfg.stcf_tw_us,
     )
 
-    if _online(cfg):
-        tab = dvfs_mod.op_point_table(cfg.dvfs_cfg)
-        rate, vdd_idx = dvfs_mod.online_vdd_from_chunk_ts(
-            state.rate, chunk.ts, chunk.valid,
-            cfg=cfg.dvfs_cfg, caps=jnp.asarray(tab.caps),
-        )
-        # Ladder knob: clamp the chosen operating point to the per-stream
-        # ceiling.  Bit-identical to picking from a table truncated at the
-        # cap (see ControlState.vdd_cap), but as traced data it moves
-        # without respecializing the executable.
-        vdd_idx = jnp.minimum(vdd_idx, state.ctrl.vdd_cap)
-        ber_c = jnp.asarray(tab.ber)[vdd_idx]
-        energy_coef = jnp.asarray(tab.energy_pj)[vdd_idx]
-        latency_coef = jnp.asarray(tab.latency_ns)[vdd_idx]
-    else:
-        rate, vdd_idx = state.rate, jnp.int32(0)
-        ber_c = chunk.ber
-        energy_coef, latency_coef = chunk.energy_coef, chunk.latency_coef
+    rate, vdd_idx, ber_c, energy_coef, latency_coef = _operating_point(
+        cfg, state, chunk
+    )
 
     surface = update(surface, chunk.xy, keep)
 
@@ -413,24 +460,68 @@ def detector_step(
         -jnp.inf,
     ).astype(jnp.float32)
 
-    # Refresh cadence is runtime data (ControlState), not the config
-    # constant — the ladder stretches it without a recompile.  ``shed``
-    # suspends refresh outright; scoring continues against the stale LUT
-    # (the luvHarris overload mode: degrade quality, never latency).
-    do_refresh = (
-        ((state.chunk_idx + 1) % state.ctrl.lut_every) == 0
-    ) & jnp.logical_not(state.ctrl.shed)
-    lut = jax.lax.cond(
-        do_refresh,
-        lambda s: harris_mod.harris_response(
-            s,
-            sobel_size=cfg.sobel_size,
-            window_size=cfg.window_size,
-            k=cfg.harris_k,
-        ),
-        lambda s: lut,
-        surface,
+    lut, do_refresh = _refresh_lut(cfg, state, surface, lut)
+    lut_ready = lut_ready | do_refresh
+
+    new_state = DetectorState(
+        surface=surface,
+        sae=sae,
+        lut=lut,
+        lut_ready=lut_ready,
+        key=key,
+        chunk_idx=state.chunk_idx + 1,
+        rate=rate,
+        kept_total=state.kept_total + n_kept,
+        energy_pj=state.energy_pj + n_kept.astype(jnp.float32) * energy_coef,
+        latency_ns=state.latency_ns
+        + n_kept.astype(jnp.float32) * latency_coef,
+        ctrl=state.ctrl,
     )
+    return new_state, ChunkOutput(
+        scores=scores, keep=keep, n_kept=n_kept, vdd_idx=vdd_idx
+    )
+
+
+def _detector_step_fused(
+    cfg, state: DetectorState, chunk: ChunkInput
+) -> tuple[DetectorState, ChunkOutput]:
+    """``detector_step`` with the STCF/TOS/BER/score block replaced by the
+    fused Pallas megakernel (``kernels.fused_step``) — surfaces stay VMEM-
+    resident across the whole chain instead of round-tripping HBM between
+    stages.  Everything around the block (online DVFS pick, PRNG key
+    discipline, accumulators, LUT refresh cond) is the same code as the jnp
+    step, so bit-exactness reduces to the kernel contract, which the
+    ``tests/test_fused_step.py`` property suite pins across paths.
+    """
+    from repro.kernels import ops  # deferred: keep jnp path Pallas-free
+
+    surface, sae, lut = state.surface, state.sae, state.lut
+    lut_ready, key = state.lut_ready, state.key
+
+    rate, vdd_idx, ber_c, energy_coef, latency_coef = _operating_point(
+        cfg, state, chunk
+    )
+
+    # Same key-split discipline as the jnp step: one split iff injecting,
+    # Bernoulli draws on the host-traced side (ops shares them with the
+    # oracle via ber.write_error_bits), xor/decode applied in-kernel.
+    bits = None
+    if cfg.inject_ber:
+        key, sub = jax.random.split(key)
+        bits = ber_mod.write_error_bits(sub, surface.shape, ber_c)
+
+    surface, sae, keep, raw_scores = ops.fused_step_op(
+        surface, sae, lut, chunk.xy, chunk.ts, chunk.valid, ber_c, bits,
+        patch=cfg.patch, th=cfg.th,
+        support=cfg.stcf_support, tw=cfg.stcf_tw_us,
+        stcf_enabled=cfg.stcf_enabled, inject_ber=cfg.inject_ber,
+        interpret=cfg.interpret,
+    )
+
+    n_kept = jnp.sum(keep).astype(jnp.int32)
+    scores = jnp.where(lut_ready, raw_scores, -jnp.inf).astype(jnp.float32)
+
+    lut, do_refresh = _refresh_lut(cfg, state, surface, lut)
     lut_ready = lut_ready | do_refresh
 
     new_state = DetectorState(

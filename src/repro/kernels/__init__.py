@@ -1,3 +1,35 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the detector hot loop, organised around the fused
+chunk-step formulation.
+
+The centre of the package is ``fused_step``: ONE ``pallas_call`` per chunk
+that keeps the TOS tile, the SAE, and the Harris LUT resident in VMEM and
+runs the whole per-event inner pipeline — STCF support check against the
+SAE, TOS patch decrement/threshold/centre-set, BER write-error injection
+(xor/decode on the 5-bit storage code), and the per-event LUT score read —
+without touching HBM between stages.  That is the paper's near-memory
+thesis expressed as a TPU kernel: the unfused path pays an HBM round-trip
+and a kernel launch per stage; the fused step pays one of each per chunk
+(``benchmarks/bench_tos_kernels.fused_terms`` quantifies both sides,
+including the honest cost of full-LUT residency).
+
+Around it:
+
+* ``tos_update`` — standalone TOS patch-update kernels (near-memory stream
+  and event-parallel batched formulations, plus tile binning), still used
+  by the ``pallas_nmc`` / ``pallas_batched`` backends and as building
+  blocks for shape experiments.
+* ``harris_conv`` — the FBF Harris response as a strip-mined conv kernel
+  (the LUT *refresh*; the fused step only reads the LUT, refresh stays a
+  separate per-``lut_every`` call by design).
+* ``ops`` — the jit-facing wrappers: padding/cropping to tile multiples,
+  ``resolve_interpret`` (explicit kwarg > ``REPRO_PALLAS_INTERPRET`` env,
+  read per call > backend auto), and ``fused_step_op``, the seam
+  ``core.state.detector_step`` routes through for ``backend="pallas_fused"``.
+* ``ref`` — pure-jnp oracles; every kernel is property-tested bit-exact
+  against them (interpret mode on CPU, compiled on TPU).
+
+Keep new kernels paired with an oracle in ``ref`` and an op wrapper in
+``ops`` — the cross-backend parity suite (``tests/test_fused_step.py``,
+``-m pallas``) is what lets the serving layer treat backends as
+interchangeable.
+"""

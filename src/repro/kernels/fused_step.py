@@ -1,0 +1,214 @@
+"""Fused chunk-step megakernel: the whole per-chunk inner pipeline in one
+``pallas_call``.
+
+The unfused serving step lowers as separate XLA ops with an HBM round-trip
+of the surface between each stage:
+
+    STCF (read SAE, write SAE + keep) -> TOS update (read/write TOS)
+    -> BER injection (read/write TOS again) -> LUT score gather
+
+This kernel executes STCF support check, TOS patch decrement / threshold /
+centre-set, BER write-error application, and the per-event Harris-LUT score
+lookup in a single kernel instance per 128x128 tile, keeping the TOS tile,
+the (radius-padded) SAE, and the LUT resident in VMEM for the whole chain —
+the software twin of the paper's near-memory macro, which wins its 24.7x
+latency by never letting the surface leave SRAM between update, compare and
+write-back.
+
+Bit-exactness contract (property-tested in ``tests/test_fused_step.py``):
+
+  * STCF: each grid cell carries the full SAE as a ``fori_loop`` value and
+    replays the chunk *sequentially* — event ``i`` reads its 3x3 window from
+    ``max(SAE_pre, earlier in-chunk valid writes)``, which equals
+    ``stcf_chunked``'s ``surf_recent | chunk_recent`` disjunction exactly:
+    recency is monotone in the timestamp, so the max over the two sources is
+    recent iff either is, and rebased device timestamps are non-negative so
+    a valid in-chunk write always dominates ``_NEVER``.  The accumulated
+    per-pixel max equals the chunked scatter-max.  Borders are handled by a
+    ``_NEVER``-valued radius pad (== the oracle's in-bounds mask).
+  * TOS: the in-loop decrement/threshold/centre-set gated on ``keep`` is the
+    sequential TOS spelling, property-equal to ``tos_update_batched``.
+  * BER: the Bernoulli bit draws happen *outside* (``ber.write_error_bits``,
+    same key-split discipline as ``inject_write_errors_at``); the kernel
+    applies the encode5/xor/decode5 chain to its VMEM tile, replicating
+    ``ber.apply_write_errors`` exactly.
+  * Scores: ``where(keep, LUT[y, x], -inf)`` read per event from the
+    VMEM-resident LUT; the ``lut_ready`` gate stays outside (scalar select).
+
+Events stream through SMEM like ``tos_update.nmc_stream_call``; the (E,)
+keep/score outputs use constant-index-map blocks that every cell writes
+identically (all cells see all events), so the result is grid-order
+independent.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.ber import _BASE
+from repro.core.stcf import _NEVER
+from repro.kernels.tos_update import TILE_H, TILE_W
+
+__all__ = ["fused_chunk_step_call", "RS"]
+
+RS = 1  # STCF neighbourhood radius (3x3, fixed — matches stcf.DEFAULT_RADIUS)
+
+
+def _fused_kernel(
+    ev_ref,            # (E, 4) int32 SMEM: x, y, ts, valid
+    sae_ref,           # (hp + 2RS, wp + 2RS) int32 VMEM, full (RS pad=_NEVER)
+    lut_ref,           # (hp, wp) f32 VMEM, full
+    tos_ref,           # (TILE_H, TILE_W) uint8 tile
+    *refs,             # [bits_ref, ber_ref] if inject, then the 4 outputs
+    patch: int,
+    th: int,
+    support: int,
+    tw: int,
+    stcf_enabled: bool,
+    inject: bool,
+):
+    if inject:
+        bits_ref, ber_ref, tos_out, sae_out, keep_out, scores_out = refs
+    else:
+        tos_out, sae_out, keep_out, scores_out = refs
+
+    r = (patch - 1) // 2
+    row0 = pl.program_id(0) * TILE_H
+    col0 = pl.program_id(1) * TILE_W
+    rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (TILE_H, TILE_W), 0)
+    cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (TILE_H, TILE_W), 1)
+
+    surf0 = tos_ref[...].astype(jnp.int32)
+    sae0 = sae_ref[...]
+    n_events = ev_ref.shape[0]
+    win = 2 * RS + 1
+
+    def body(i, carry):
+        surf, sae = carry
+        x = ev_ref[i, 0]
+        y = ev_ref[i, 1]
+        t = ev_ref[i, 2]
+        ok = ev_ref[i, 3] > 0
+
+        if stcf_enabled:
+            # 3x3 window of the *running* SAE, centred at (y, x): in padded
+            # coordinates the centre is (y+RS, x+RS) so the slice starts at
+            # (y, x).  Centre pixel is excluded from the support count.
+            w3 = jax.lax.dynamic_slice(sae, (y, x), (win, win))
+            recent = (t - w3 <= tw) & (w3 > _NEVER // 2)
+            cnt = (jnp.sum(recent.astype(jnp.int32))
+                   - recent[RS, RS].astype(jnp.int32))
+            keep = ok & (cnt >= support)
+            # SAE refresh: scatter-max at the centre, valid events only.
+            old = sae[y + RS, x + RS]
+            new = jnp.where(ok, jnp.maximum(old, t), old)
+            sae = jax.lax.dynamic_update_slice(
+                sae, new[None, None], (y + RS, x + RS)
+            )
+        else:
+            keep = ok
+
+        keep_out[i] = keep.astype(jnp.int32)
+        scores_out[i] = jnp.where(
+            keep, lut_ref[y, x], jnp.float32(-jnp.inf)
+        ).astype(jnp.float32)
+
+        # TOS patch op on this cell's tile, gated on keep: decrement the
+        # P x P neighbourhood with threshold clamp, then set the centre.
+        inside = (jnp.abs(rows - y) <= r) & (jnp.abs(cols - x) <= r) & keep
+        dec = surf - 1
+        dec = jnp.where(dec >= th, dec, 0)
+        surf = jnp.where(inside, dec, surf)
+        centre = (rows == y) & (cols == x) & keep
+        surf = jnp.where(centre, 255, surf)
+        return surf, sae
+
+    surf, sae = jax.lax.fori_loop(0, n_events, body, (surf0, sae0))
+
+    if inject:
+        # ber.apply_write_errors on the VMEM tile: 5-bit storage code, xor
+        # with the precomputed Bernoulli bits, decode; value-0 pixels skip
+        # write-back, and ber == 0 is an exact identity select.
+        code = jnp.where(surf > _BASE, surf - _BASE, 0)
+        flipped = jnp.bitwise_xor(code, bits_ref[...])
+        res = jnp.where(code > 0, flipped, code)
+        dec5 = jnp.where(res > 0, res + _BASE, 0)
+        surf = jnp.where(ber_ref[0] > 0.0, dec5, surf)
+
+    tos_out[...] = surf.astype(jnp.uint8)
+    sae_out[...] = jax.lax.dynamic_slice(
+        sae, (row0 + RS, col0 + RS), (TILE_H, TILE_W)
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "patch", "th", "support", "tw", "stcf_enabled", "interpret"
+    ),
+)
+def fused_chunk_step_call(
+    tos_pad: jax.Array,     # (hp, wp) uint8, tile-padded
+    sae_pad: jax.Array,     # (hp + 2RS, wp + 2RS) int32, _NEVER-padded
+    lut_pad: jax.Array,     # (hp, wp) f32, tile-padded
+    ev: jax.Array,          # (E, 4) int32: x, y, ts, valid
+    bits_pad: jax.Array | None,  # (hp, wp) int32 BER bits, or None
+    ber: jax.Array | None,       # (1,) f32 traced BER, or None
+    *,
+    patch: int,
+    th: int,
+    support: int,
+    tw: int,
+    stcf_enabled: bool,
+    interpret: bool,
+):
+    """One fused chunk step over pre-padded surfaces.
+
+    Returns ``(tos, sae, keep_i32, scores)`` with the surfaces still padded
+    (``ops.fused_step_op`` crops); ``keep``/``scores`` are (E,) and exact.
+    BER injection is compiled in iff ``bits_pad``/``ber`` are given.
+    """
+    hp, wp = tos_pad.shape
+    e = ev.shape[0]
+    inject = bits_pad is not None
+    grid = (hp // TILE_H, wp // TILE_W)
+
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),                    # events
+        pl.BlockSpec(sae_pad.shape, lambda i, j: (0, 0)),         # full SAE
+        pl.BlockSpec((hp, wp), lambda i, j: (0, 0)),              # full LUT
+        pl.BlockSpec((TILE_H, TILE_W), lambda i, j: (i, j)),      # TOS tile
+    ]
+    args = [ev, sae_pad, lut_pad, tos_pad]
+    if inject:
+        in_specs.append(pl.BlockSpec((TILE_H, TILE_W), lambda i, j: (i, j)))
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+        args += [bits_pad, ber.reshape((1,)).astype(jnp.float32)]
+
+    kernel = functools.partial(
+        _fused_kernel,
+        patch=patch, th=th, support=support, tw=tw,
+        stcf_enabled=stcf_enabled, inject=inject,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((TILE_H, TILE_W), lambda i, j: (i, j)),
+            pl.BlockSpec((TILE_H, TILE_W), lambda i, j: (i, j)),
+            pl.BlockSpec((e,), lambda i, j: (0,)),
+            pl.BlockSpec((e,), lambda i, j: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((hp, wp), jnp.uint8),
+            jax.ShapeDtypeStruct((hp, wp), jnp.int32),
+            jax.ShapeDtypeStruct((e,), jnp.int32),
+            jax.ShapeDtypeStruct((e,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*args)

@@ -1,21 +1,36 @@
 """Jit'd public wrappers over the Pallas kernels.
 
-``tos_update``      — chunked TOS update.  mode='nmc' streams events through
-                      the VMEM-resident tile (paper-faithful); mode='batched'
-                      uses the fused MXU formulation (beyond-paper).
-``harris_response`` — Pallas Harris when the surface fits VMEM, jnp fallback
-                      otherwise.
+``tos_update_op``      — chunked TOS update.  mode='nmc' streams events
+                         through the VMEM-resident tile (paper-faithful);
+                         mode='batched' uses the fused MXU formulation
+                         (beyond-paper).
+``fused_step_op``      — the whole per-chunk inner pipeline (STCF -> TOS ->
+                         BER -> LUT score) in one kernel, VMEM-resident end
+                         to end (``backend="pallas_fused"``; see
+                         ``kernels.fused_step``).
+``harris_response_op`` — Pallas Harris when the surface fits VMEM, jnp
+                         fallback otherwise.
 
-Both auto-pad surfaces to tile multiples and crop back, so callers keep
+All auto-pad surfaces to tile multiples and crop back, so callers keep
 native sensor shapes (e.g. DAVIS240's 180 x 240).
+
+Interpret-mode resolution (every op takes ``interpret=``):
+
+    explicit kwarg  >  REPRO_PALLAS_INTERPRET env var  >  backend auto
+
+The env var is read per call — not at import time — so a test or a launch
+script can flip it without re-importing; ``PipelineConfig.interpret`` threads
+the kwarg through every backend route.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.stcf import _NEVER
 from repro.core.tos import (
     DEFAULT_PATCH,
     DEFAULT_TH,
@@ -24,14 +39,38 @@ from repro.core.tos import (
     _scatter_last_center_value,
     _suffix_cover_counts,
 )
-from repro.kernels import harris_conv, tos_update
+from repro.kernels import fused_step, harris_conv, tos_update
 
-__all__ = ["tos_update_op", "harris_response_op", "default_interpret"]
+__all__ = [
+    "tos_update_op",
+    "fused_step_op",
+    "harris_response_op",
+    "default_interpret",
+    "resolve_interpret",
+]
+
+_INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
 
 
 def default_interpret() -> bool:
-    """Pallas interpret mode unless the process is actually on a TPU."""
+    """Pallas interpret mode unless the process is actually on a TPU.
+
+    ``REPRO_PALLAS_INTERPRET`` overrides the auto choice ("0"/"false"/""
+    forces compiled, anything else forces interpret); it is consulted at
+    *call* time so flipping the env mid-process takes effect.  An explicit
+    ``interpret=`` kwarg on any op beats both — see ``resolve_interpret``.
+    """
+    env = os.environ.get(_INTERPRET_ENV)
+    if env is not None:
+        return env.strip().lower() not in ("", "0", "false", "no")
     return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Per-call interpret resolution: explicit kwarg > env > backend auto."""
+    if interpret is None:
+        return default_interpret()
+    return bool(interpret)
 
 
 def _pad_to_tiles(tos: jax.Array) -> tuple[jax.Array, tuple[int, int]]:
@@ -41,9 +80,6 @@ def _pad_to_tiles(tos: jax.Array) -> tuple[jax.Array, tuple[int, int]]:
     return jnp.pad(tos, ((0, hp), (0, wp))), (h, w)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("patch", "th", "mode", "interpret")
-)
 def tos_update_op(
     tos: jax.Array,
     xy: jax.Array,
@@ -56,11 +92,30 @@ def tos_update_op(
 ) -> jax.Array:
     """Chunked TOS update through the Pallas kernels (order-exact).
 
-    ``interpret=None`` resolves to ``default_interpret()`` so callers can
-    stay backend-agnostic (compiled on TPU, interpreter elsewhere).
+    ``interpret=None`` resolves via ``resolve_interpret`` (env var, then
+    backend auto) so callers can stay backend-agnostic — compiled on TPU,
+    interpreter elsewhere.  Resolution happens *outside* the jit cache so a
+    flipped env var retraces instead of hitting a stale entry.
     """
-    if interpret is None:
-        interpret = default_interpret()
+    return _tos_update_jit(
+        tos, xy, valid, patch=patch, th=th, mode=mode,
+        interpret=resolve_interpret(interpret),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("patch", "th", "mode", "interpret")
+)
+def _tos_update_jit(
+    tos: jax.Array,
+    xy: jax.Array,
+    valid: jax.Array,
+    *,
+    patch: int,
+    th: int,
+    mode: str,
+    interpret: bool,
+) -> jax.Array:
     padded, (h, w) = _pad_to_tiles(tos)
     if mode == "nmc":
         out = tos_update.nmc_stream_call(
@@ -88,9 +143,82 @@ def tos_update_op(
     return out[:h, :w]
 
 
+def fused_step_op(
+    tos: jax.Array,
+    sae: jax.Array,
+    lut: jax.Array,
+    xy: jax.Array,
+    ts: jax.Array,
+    valid: jax.Array,
+    ber: jax.Array | None = None,
+    bits: jax.Array | None = None,
+    *,
+    patch: int = DEFAULT_PATCH,
+    th: int = DEFAULT_TH,
+    support: int = 2,
+    tw: int = 5000,
+    stcf_enabled: bool = True,
+    inject_ber: bool = False,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One fused chunk step: STCF -> TOS -> BER -> LUT score in one kernel.
+
+    Returns ``(new_tos, new_sae, keep, scores_raw)``; ``scores_raw`` is
+    ``where(keep, lut[y, x], -inf)`` — the caller applies the ``lut_ready``
+    gate (a scalar select), exactly like ``harris.score_events`` composition
+    in the jnp step.  With ``inject_ber`` the caller supplies the Bernoulli
+    ``bits`` (``ber.write_error_bits``) and the traced ``ber`` scalar, so
+    the randomness discipline is shared with the oracle.
+    """
+    return _fused_step_jit(
+        tos, sae, lut, xy, ts, valid, ber, bits,
+        patch=patch, th=th, support=support, tw=tw,
+        stcf_enabled=stcf_enabled, inject_ber=inject_ber,
+        interpret=resolve_interpret(interpret),
+    )
+
+
 @functools.partial(
-    jax.jit, static_argnames=("sobel_size", "window_size", "k", "interpret")
+    jax.jit,
+    static_argnames=(
+        "patch", "th", "support", "tw", "stcf_enabled", "inject_ber",
+        "interpret",
+    ),
 )
+def _fused_step_jit(
+    tos, sae, lut, xy, ts, valid, ber, bits, *,
+    patch, th, support, tw, stcf_enabled, inject_ber, interpret,
+):
+    h, w = tos.shape
+    tos_p, _ = _pad_to_tiles(tos)
+    hp, wp = tos_p.shape
+    lut_p = jnp.pad(lut, ((0, hp - h), (0, wp - w)))
+    # SAE: tile-pad then radius-pad, both with _NEVER so out-of-surface
+    # neighbours read as "never fired" (== the oracle's in-bounds mask).
+    sae_p = jnp.pad(
+        sae,
+        ((fused_step.RS, hp - h + fused_step.RS),
+         (fused_step.RS, wp - w + fused_step.RS)),
+        constant_values=_NEVER,
+    )
+    ev = jnp.stack(
+        [xy[:, 0].astype(jnp.int32), xy[:, 1].astype(jnp.int32),
+         ts.astype(jnp.int32), valid.astype(jnp.int32)],
+        axis=1,
+    )
+    if inject_ber:
+        bits_p = jnp.pad(bits, ((0, hp - h), (0, wp - w)))
+        ber_arg = jnp.asarray(ber)
+    else:
+        bits_p, ber_arg = None, None
+    tos_o, sae_o, keep, scores = fused_step.fused_chunk_step_call(
+        tos_p, sae_p, lut_p, ev, bits_p, ber_arg,
+        patch=patch, th=th, support=support, tw=tw,
+        stcf_enabled=stcf_enabled, interpret=interpret,
+    )
+    return tos_o[:h, :w], sae_o[:h, :w], keep.astype(bool), scores
+
+
 def harris_response_op(
     tos: jax.Array,
     *,
@@ -99,8 +227,23 @@ def harris_response_op(
     k: float = 0.04,
     interpret: bool | None = None,
 ) -> jax.Array:
-    if interpret is None:
-        interpret = default_interpret()
+    return _harris_response_jit(
+        tos, sobel_size=sobel_size, window_size=window_size, k=k,
+        interpret=resolve_interpret(interpret),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sobel_size", "window_size", "k", "interpret")
+)
+def _harris_response_jit(
+    tos: jax.Array,
+    *,
+    sobel_size: int,
+    window_size: int,
+    k: float,
+    interpret: bool,
+) -> jax.Array:
     h, w = tos.shape
     budget = 16 * 2**20  # one v5e core's VMEM, conservative
     if harris_conv.vmem_bytes(h, w, sobel_size, window_size) > budget:

@@ -19,7 +19,10 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+import jax.numpy as jnp
+from jax.sharding import (
+    Mesh, NamedSharding, PartitionSpec as P, SingleDeviceSharding,
+)
 
 from repro.meshctx import logical_to_spec
 from repro.models.common import ModelConfig
@@ -27,6 +30,7 @@ from repro.models.common import ModelConfig
 __all__ = [
     "make_rules", "param_shardings", "batch_shardings", "data_axes",
     "local_lane_mesh", "lane_padded_capacity", "lane_spec", "lane_put",
+    "HostStager", "pinned_host_sharding",
 ]
 
 
@@ -78,6 +82,58 @@ def lane_put(mesh: Mesh, tree, lane_axis: int = 0):
         return jax.device_put(leaf, NamedSharding(mesh, spec))
 
     return jax.tree.map(one, tree)
+
+
+def pinned_host_sharding(device) -> Optional[SingleDeviceSharding]:
+    """``pinned_host`` sharding for ``device``, or None when the runtime
+    doesn't expose one (CPU devices, or backends without memory spaces).
+
+    Factored out of ``HostStager`` so the capability probe is unit-testable
+    with stub devices on CPU-only hosts.
+    """
+    if getattr(device, "platform", "cpu") == "cpu":
+        return None
+    try:
+        kinds = {m.kind for m in device.addressable_memories()}
+    except Exception:
+        return None
+    if "pinned_host" not in kinds:
+        return None
+    return SingleDeviceSharding(device, memory_kind="pinned_host")
+
+
+class HostStager:
+    """Pinned (page-locked) host staging for H2D event uploads.
+
+    A plain ``jnp.asarray(host_array)`` upload gives the driver a pageable
+    buffer, so every copy pays a hidden pageable -> pinned bounce and the
+    DMA cannot overlap compute.  On runtimes that expose a ``pinned_host``
+    memory space (CUDA, TPU) this stager device_puts the host array into
+    pinned memory first and then issues the device copy from there — the
+    second hop reads locked pages directly, making the pool's per-pump
+    1-round upload async-copy-capable.  On hosts without a pinned space
+    (CPU-only CI) ``put`` degrades transparently to ``jnp.asarray``: same
+    values, same device, no staging — so every caller keeps one code path.
+    """
+
+    def __init__(self, device=None):
+        self.device = jax.devices()[0] if device is None else device
+        self._pinned = pinned_host_sharding(self.device)
+        self.uploads = 0          # put() calls routed through this stager
+        self.staged_bytes = 0     # bytes that went via pinned memory
+
+    @property
+    def pinned(self) -> bool:
+        """True iff uploads actually stage through pinned host memory."""
+        return self._pinned is not None
+
+    def put(self, arr) -> jax.Array:
+        self.uploads += 1
+        if self._pinned is None:
+            return jnp.asarray(arr)
+        staged = jax.device_put(arr, self._pinned)
+        self.staged_bytes += staged.nbytes
+        return jax.device_put(staged, self.device)
 
 
 def make_rules(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = True,

@@ -323,6 +323,15 @@ class PoolRuntime:
         # jax.default_backend()); a no-op on CPU-resident pools.
         self._donate = state_mod.donation_ok(self._states)
 
+        # Pinned-host staging for the 1-round H2D upload (the sparse-arrival
+        # fast path uploads real event bytes every pump): on CUDA the copy
+        # becomes async-capable, on CPU-only hosts the stager transparently
+        # degrades to jnp.asarray.  Single-device pools only — the sharded
+        # path scatters through lane_put and keeps its own placement logic.
+        self._stager = (
+            sharding_mod.HostStager() if self._mesh is None else None
+        )
+
         # -- per-bucket runtime: ring-of-rings + K-round/1-round executors --
         self._rings: dict[int, state_mod.RingState] = {}    # live ring
         self._spares: dict[int, collections.deque] = {}
@@ -1225,6 +1234,12 @@ class PoolRuntime:
                 "migrations_staged": len(self._staged),
                 "h2d_event_slots": self._h2d_slots,
                 "h2d_valid_events": self._h2d_valid,
+                "h2d_pinned_staging": bool(
+                    self._stager is not None and self._stager.pinned
+                ),
+                "h2d_staged_uploads": (
+                    self._stager.uploads if self._stager is not None else 0
+                ),
                 "h2d_padding_bytes": (
                     (self._h2d_slots - self._h2d_valid) * EVENT_SLOT_BYTES
                 ),
@@ -1384,10 +1399,11 @@ class PoolRuntime:
 
         if n == 1 and bucket in self._exec1:
             rnd = rounds[0]
+            up = self._stager.put if self._stager is not None else jnp.asarray
             chunks = state_mod.ChunkInput(
-                xy=jnp.asarray(rnd.xy),
-                ts=jnp.asarray(rnd.ts),
-                valid=jnp.asarray(rnd.valid),
+                xy=up(rnd.xy),
+                ts=up(rnd.ts),
+                valid=up(rnd.valid),
                 ber=jnp.full((self._phys,), self._riders[0], jnp.float32),
                 energy_coef=jnp.full(
                     (self._phys,), self._riders[1], jnp.float32
@@ -1398,7 +1414,7 @@ class PoolRuntime:
             )
             self._states, self._rings[bucket] = self._exec1[bucket](
                 self._states, self._rings[bucket], chunks,
-                jnp.asarray(rnd.mask), jnp.asarray(rnd.n_valid),
+                up(rnd.mask), up(rnd.n_valid),
             )
             self._h2d_slots += self._phys * bucket
             self._h2d_valid += int(rnd.n_valid.sum())

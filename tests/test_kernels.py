@@ -59,3 +59,53 @@ def test_tos_kernel_empty_chunk(rng):
     for mode in ("nmc", "batched", "nmc_binned", "batched_binned"):
         out = ops.tos_update_op(t0, xy, valid, mode=mode)
         np.testing.assert_array_equal(np.asarray(out), np.asarray(t0))
+
+
+# ---------------------------------------------------------------------------
+# Interpret-mode resolution: explicit kwarg > env var > backend auto.  The
+# env is consulted at *call* time (not import time), so flipping it
+# mid-process must take effect.
+# ---------------------------------------------------------------------------
+
+
+def test_default_interpret_env_precedence(monkeypatch):
+    import jax as _jax
+
+    auto = _jax.default_backend() != "tpu"
+    monkeypatch.delenv("REPRO_PALLAS_INTERPRET", raising=False)
+    assert ops.default_interpret() is auto
+    # falsy spellings force compiled regardless of backend
+    for off in ("", "0", "false", "no", " FALSE ", " 0 "):
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", off)
+        assert ops.default_interpret() is False, repr(off)
+    # anything else forces interpret
+    for on in ("1", "true", "yes", "interpret"):
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", on)
+        assert ops.default_interpret() is True, repr(on)
+
+
+def test_resolve_interpret_kwarg_beats_env(monkeypatch):
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    assert ops.resolve_interpret(True) is True
+    assert ops.resolve_interpret(None) is False
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    assert ops.resolve_interpret(False) is False
+    assert ops.resolve_interpret(None) is True
+
+
+def test_env_flip_takes_effect_per_call(rng, monkeypatch):
+    """The op wrappers resolve interpret outside the jit cache: the same
+    Python callable honours an env flip between calls (the old import-time
+    read would have frozen the first value)."""
+    t0 = jnp.asarray(make_tos(rng, 64, 64))
+    xy = jnp.zeros((8, 2), jnp.int32)
+    valid = jnp.zeros((8,), bool)
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    a = ops.tos_update_op(t0, xy, valid, mode="nmc")
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+    # on a CPU host the compiled path would fail inside pallas_call if it
+    # were actually taken with a TPU-only kernel; the nmc kernel lowers on
+    # CPU interpret only — so just assert the resolver output flipped and
+    # the interpret call above produced the oracle result.
+    assert ops.default_interpret() is False
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(t0))

@@ -77,7 +77,8 @@ def test_scan_empty_stream():
     assert a.energy_pj == 0.0
 
 
-@pytest.mark.parametrize("backend", ["pallas_nmc", "pallas_batched"])
+@pytest.mark.parametrize("backend",
+                         ["pallas_nmc", "pallas_batched", "pallas_fused"])
 def test_backend_parity_interpret(backend):
     """Pallas kernels on the e2e path == jnp closed form, bit-for-bit."""
     rng = np.random.default_rng(0)
