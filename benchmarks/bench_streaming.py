@@ -47,6 +47,22 @@ Rows per pool size K in {1, 4, 16}:
     structural witnesses gated by ``run.py --check-regression``;
     ``..._padding_saved_mb`` and ``..._rounds_per_fetch`` ride along as
     context.
+  * ``poolK_pump_stage_overlap_ratio`` — the ISSUE 8 pipelined-pump
+    witness: share of stage phases (host gather + H2D upload of one
+    block) that began with an earlier block staged ahead AND a block of
+    the same pass already dispatched — i.e. the gather/upload ran
+    concurrently with device compute.  Measured on a backlog burst of
+    ~8 blocks pumped in one pass at ``pipeline_depth=2`` (the first two
+    blocks of a pass can never overlap, so 8 blocks bound the ratio at
+    0.75); structural, not wall-time, so it gates cleanly on CPU CI.
+  * ``poolK_pack_padding_saved_ratio`` / ``poolK_pack_moves`` — the
+    ISSUE 8 fleet-packing witness on a heterogeneous fleet (k busy
+    128-chunk lanes + 2 sparse 512-chunk lanes): H2D padded-slot bytes
+    of ``policy="pack"`` relative to the never-packed static placement
+    (``1 - packed/static``), plus the number of packing migrations
+    applied.  The pack planner evacuates the sparse big bucket into the
+    busy small one, whose blocks the fleet is already paying for; both
+    pools must keep ``executors_compiled_once()``.
   * ``poolK_overload_p99_{none,ladder}_ms`` /
     ``poolK_overload_ladder_transitions`` — the overload ladder (ISSUE 6)
     under a 2x flash crowd (``burst_stream``): p99 wall latency of a
@@ -186,6 +202,79 @@ def _run_ramp(cfg, k, *, policy, rates):
     assert pool.executors_compiled_once(), pool.compile_cache_sizes()
     pool.close()
     return out
+
+
+def _run_overlap(cfg, k):
+    """Pipelined-pump overlap witness (ISSUE 8): burst-feed every lane
+    enough events for ~8 executor blocks (ring_rounds=4), pump the backlog
+    in one pass at the default ``pipeline_depth=2``, and return the pool's
+    structural stage-overlap ratio.  With B blocks in a pass the first two
+    stages can't overlap (nothing dispatched yet / nothing staged ahead),
+    so 8 blocks yield (B-2)/B = 0.75 — comfortably above the 0.5 gate and
+    machine-independent."""
+    ring = 4
+    blocks = 8
+    bucket = cfg.chunk
+    n_ev = ring * blocks * bucket
+    streams = [synthetic.ramp_stream([n_ev], 20_000, seed=SEED + s)
+               for s in range(k)]
+    pool = DetectorPool(cfg, capacity=k, ring_rounds=ring,
+                        buckets=(bucket,), pipeline_depth=2,
+                        on_overflow="drop_oldest")
+    pool.warmup(streams[0].xy, streams[0].ts)
+    st0 = pool.pool_stats()
+    lanes = {i: pool.connect(seed=SEED + i) for i in range(k)}
+    for i, lane in lanes.items():
+        pool.feed(lane, streams[i].xy, streams[i].ts)
+    pool.pump()
+    for lane in lanes.values():
+        pool.poll(lane)
+    ps = pool.pool_stats()
+    stages = ps["pump_stages"] - st0["pump_stages"]
+    overlapped = ps["pump_stages_overlapped"] - st0["pump_stages_overlapped"]
+    assert pool.executors_compiled_once(), pool.compile_cache_sizes()
+    pool.close()
+    return overlapped / max(stages, 1)
+
+
+def _run_pack(cfg, k, *, n_windows):
+    """Fleet-packing witness (ISSUE 8): k busy lanes in the 128 bucket
+    plus 2 sparse high-resolution lanes in the 512 bucket — the sparse
+    bucket's blocks upload ``(K, phys, 512)`` slots for ~100 valid events
+    each.  ``policy="pack"`` evacuates it into the busy bucket (whose
+    blocks the fleet already pays for); the never-packed static placement
+    is the padding baseline.  Returns (saved_ratio, pack_moves)."""
+    half = cfg.dvfs_cfg.half_us
+    busy = [synthetic.ramp_stream([512] * n_windows, half, seed=SEED + s)
+            for s in range(k)]
+    sparse = [synthetic.ramp_stream([100] * n_windows, half, seed=SEED + 64 + s)
+              for s in range(2)]
+
+    def serve(policy):
+        pool = DetectorPool(cfg, capacity=k + 2, ring_rounds=4,
+                            buckets=(128, 512), policy=policy,
+                            migrate_patience=2, pipeline_depth=2)
+        lanes = {i: pool.connect(seed=SEED + i, chunk=128)
+                 for i in range(k)}
+        lanes.update({k + i: pool.connect(seed=SEED + 64 + i, chunk=512)
+                      for i in range(2)})
+        for j in range(n_windows):
+            for i, lane in lanes.items():
+                st = busy[i] if i < k else sparse[i - k]
+                m = (st.ts // half) == j
+                pool.feed(lane, st.xy[m], st.ts[m])
+            pool.pump()
+            for lane in lanes.values():
+                pool.poll(lane)
+        ps = pool.pool_stats()
+        out = (ps["h2d_padding_bytes"], ps.get("pack_moves", 0))
+        assert pool.executors_compiled_once(), pool.compile_cache_sizes()
+        pool.close()
+        return out
+
+    pad_static, _ = serve("static")
+    pad_packed, moves = serve("pack")
+    return 1.0 - pad_packed / max(pad_static, 1), float(moves)
 
 
 def _run_overload(cfg, k, *, use_ladder, n_windows):
@@ -387,6 +476,16 @@ def rows(smoke: bool = False):
                     (pad_s - pad_a) / 1e6))
         out.append((f"pool{k}_migration_rounds_per_fetch", 0.0,
                     rounds / max(fetches, 1)))
+
+        # pipelined pump: structural stage/dispatch overlap on a backlog
+        # burst (ISSUE 8); pack: padded-upload bytes saved by migrating a
+        # sparse big-bucket fleet into the busy small bucket
+        out.append((f"pool{k}_pump_stage_overlap_ratio", 0.0,
+                    _run_overlap(cfg, k)))
+        pack_win = 8 if smoke else 14
+        saved, moves = _run_pack(cfg, k, n_windows=pack_win)
+        out.append((f"pool{k}_pack_padding_saved_ratio", 0.0, saved))
+        out.append((f"pool{k}_pack_moves", 0.0, moves))
 
         # overload ladder SLO: p99 of a serving round under a 2x flash
         # crowd, with and without graceful degradation (ISSUE 6); the

@@ -67,6 +67,13 @@ _GATE_STRUCTURAL = (
     # is the gate (fail-closed on a missing row); the analytic events/s
     # rows ride along ungated since they are model outputs, not timings.
     ("_fused_roundtrips_per_chunk", "lower"),
+    # pipelined pump + fleet packing (ISSUE 8): the backlog-burst pass must
+    # keep staging blocks ahead of the dispatch point (structural overlap,
+    # (B-2)/B at depth 2), and the pack policy must keep shrinking padded
+    # H2D upload bytes on the heterogeneous fleet vs never-packed static
+    # placement — both machine-independent at fixed sizes
+    ("_pump_stage_overlap_ratio", "higher"),
+    ("_pack_padding_saved_ratio", "higher"),
 )
 _GATE_TIME = (
     ("_slab_p99_ms", "lower"),

@@ -42,7 +42,22 @@ buffered/dropped rounds, pump drain wait) — the serving-side counterpart of
     classes first (``--qos standard,premium``: premium lanes hold full
     quality throughout).  Try it with ``--burst-factor 2`` for the
     flash-crowd shape; watch the ``[ladder]`` log lines as the level
-    climbs during the burst and recovers after it.
+    climbs during the burst and recovers after it.  The ladder's bottom
+    rung is placement: pinned at max level it packs sparse buckets' lanes
+    together (below) and un-packs them home on full recovery.
+  * ``pack``: fleet-wide lane packing alone — when the pool is paying H2D
+    padding (uploaded slots exceed valid events), consolidate the lanes
+    of sparsely-used buckets into the bucket where their traffic
+    re-chunks cheapest, cutting padded upload bytes.  Same seal + drain +
+    snapshot/restore migration as ``adaptive``; zero recompiles.
+
+``--pipeline-depth`` sizes the pump's stage-ahead window: each pump pass
+stages block *i+1* (host gather + pinned H2D upload) while block *i* runs
+on device, and all of a pass's control-knob writes coalesce into one
+batched jitted update.  Depth 1 is the serial pre-pipeline pump; every
+depth is bit-exact (property-tested).  The final report prints the
+overlap counters (``pump_stages_overlapped / pump_stages``) and how much
+stage time landed while the device was busy.
 
 Backpressure and migration are observable, not silent: every round the
 driver checks ``pool.pool_stats()`` and logs dropped rounds (``--overflow
@@ -83,11 +98,19 @@ def main(argv=None):
                     help="async: reader thread fetches sealed rings off the "
                          "pump thread; sync: drains block the caller")
     ap.add_argument("--policy", default="static",
-                    choices=("static", "adaptive", "ladder"),
+                    choices=("static", "adaptive", "ladder", "pack"),
                     help="control plane: static=PR 4 placement for life; "
                          "adaptive=rate-aware live bucket migration; "
                          "ladder=QoS-ordered overload degradation "
-                         "(observe->decide->actuate per pump pass)")
+                         "(observe->decide->actuate per pump pass); "
+                         "pack=fleet-wide lane packing that migrates "
+                         "sparse buckets' lanes together to minimize "
+                         "padded H2D upload bytes")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="pump stage-ahead window: blocks staged (host "
+                         "gather + H2D upload) while earlier blocks run "
+                         "on device; 1 = the serial pump (bit-exact "
+                         "either way)")
     ap.add_argument("--qos", default="standard",
                     help="comma-separated QoS classes assigned to sessions "
                          "round-robin (ladder policy: classes listed first "
@@ -143,6 +166,7 @@ def main(argv=None):
                         on_overflow=args.overflow,
                         drain_mode=args.drain_mode,
                         policy=args.policy,
+                        pipeline_depth=args.pipeline_depth,
                         migrate_patience=args.migrate_patience)
     ps = pool.pool_stats()
     print(f"pool: capacity {args.sessions}, ring_rounds {args.ring_rounds} "
@@ -252,6 +276,20 @@ def main(argv=None):
           f"{ps['h2d_event_slots']} uploaded slots "
           f"({ps['h2d_valid_events']} valid events) — "
           f"{ps['migrations_total']} migration(s), policy={ps['policy']}")
+    print(f"pump pipeline (depth {ps['pipeline_depth']}): "
+          f"{ps['pump_stages_overlapped']}/{ps['pump_stages']} stages "
+          f"overlapped device compute "
+          f"(ratio {ps['pump_stage_overlap_ratio']:.2f}); "
+          f"{ps['pump_stage_hidden_s'] * 1e3:.2f} of "
+          f"{ps['pump_stage_s'] * 1e3:.2f} ms stage time hidden behind a "
+          f"busy device; {ps['ctrl_actions_coalesced']} knob write(s) "
+          f"coalesced into {ps['ctrl_batched_writes']} batched update(s); "
+          f"observation cache {ps['observation_reuses']} reuse(s) / "
+          f"{ps['observation_rebuilds']} rebuild(s)")
+    if "pack_moves" in ps:
+        print(f"pack: {ps['pack_moves']} packing migration(s), "
+              f"{ps.get('pack_saved_slots', 0)} upload slot(s) saved "
+              f"(planner estimate)")
     if args.policy == "ladder":
         print(f"ladder: level {ps['ladder_level']}/{ps['ladder_max_level']} "
               f"at exit, {ps['ladder_transitions']} tier transition(s), "

@@ -16,6 +16,7 @@ to NamedShardings for pjit in_shardings.
 """
 from __future__ import annotations
 
+import collections
 from typing import Optional
 
 import jax
@@ -110,15 +111,25 @@ class HostStager:
     DMA cannot overlap compute.  On runtimes that expose a ``pinned_host``
     memory space (CUDA, TPU) this stager device_puts the host array into
     pinned memory first and then issues the device copy from there — the
-    second hop reads locked pages directly, making the pool's per-pump
-    1-round upload async-copy-capable.  On hosts without a pinned space
+    second hop reads locked pages directly, making the pool's H2D event
+    uploads async-copy-capable.  On hosts without a pinned space
     (CPU-only CI) ``put`` degrades transparently to ``jnp.asarray``: same
     values, same device, no staging — so every caller keeps one code path.
+
+    ``depth`` sizes the in-flight double buffer: the stager keeps the last
+    ``depth`` pinned slabs alive (a bounded deque), so a caller that stages
+    upload *i+1* while upload *i*'s device copy is still in flight never
+    races the source pages — depth 2 is the pump pipeline's stage-ahead
+    window (one block staging while one executes).
     """
 
-    def __init__(self, device=None):
+    def __init__(self, device=None, *, depth: int = 2):
+        if depth < 1:
+            raise ValueError("depth must be >= 1")
         self.device = jax.devices()[0] if device is None else device
         self._pinned = pinned_host_sharding(self.device)
+        self.depth = int(depth)
+        self._inflight = collections.deque(maxlen=self.depth)
         self.uploads = 0          # put() calls routed through this stager
         self.staged_bytes = 0     # bytes that went via pinned memory
 
@@ -133,6 +144,10 @@ class HostStager:
             return jnp.asarray(arr)
         staged = jax.device_put(arr, self._pinned)
         self.staged_bytes += staged.nbytes
+        # retain the pinned slab until `depth` newer uploads have staged:
+        # the second-hop copy may still be reading these locked pages when
+        # the caller moves on to stage the next block
+        self._inflight.append(staged)
         return jax.device_put(staged, self.device)
 
 

@@ -20,14 +20,24 @@ plane.
               the fetch off the pump thread; lanes shard across local
               devices; membership is an active-mask lane system
               (join/leave/migrate/re-knob without recompilation).
+              The pump itself is *pipelined*: each block's pass splits
+              into a **stage** phase (host gather + H2D upload through the
+              pinned-host stager, no ring or state touched) and a
+              **dispatch** phase (ring-room drain + executor launch), with
+              block *i+1* staging while block *i* runs on device
+              (``pipeline_depth``-deep, 1 = the serial pump, bit-exact
+              either way; a pending timebase rebase flushes the stage
+              queue first so staged uploads never cross a base hop).
               **observe**: each pump pass snapshots an ``Observation``
               (per-lane rate estimate, re-chunk backlog, reader lag, drain
-              wait, H2D padding) — host data, no device sync.
+              wait, per-bucket H2D slot/valid accounting) — host data, no
+              device sync; per-lane fields are memoized on a lane
+              generation counter so idle passes rebuild nothing.
               **actuate**: the returned ``Action``s apply under the pump
-              token — knob writes are jitted ``at[lane].set`` on the
-              ``DetectorState.ctrl`` leaves and take effect this pass;
-              migrations stage through seal/drain/snapshot and apply next
-              pass.
+              token — all of a pass's knob writes coalesce into ONE jitted
+              batched update of the ``DetectorState.ctrl`` leaves and take
+              effect this pass; migrations stage through
+              seal/drain/snapshot and apply next pass.
   scheduler — the pool's *control plane*: the decide half, pure host-side
               policy.  ``StaticScheduler`` freezes placement at connect;
               ``AdaptiveScheduler`` re-buckets live lanes from their
@@ -38,11 +48,19 @@ plane.
               pressure lanes descend QoS-ordered tiers (stretch LUT
               refresh -> lower the DVFS operating-point ceiling -> shed),
               premium classes last (by default never), with hysteretic
-              recovery.  ``LadderConfig`` tunes classes and thresholds.
+              recovery; its bottom rung is *placement* — pinned at max
+              level it packs sparse buckets' lanes together to cut padded
+              upload bytes, and un-packs on full recovery.
+              ``LadderConfig`` tunes classes and thresholds.
+              ``PackScheduler`` runs that packing standalone
+              (``policy="pack"``): ``plan_pack`` greedily evacuates the
+              bucket whose traffic re-chunks cheapest elsewhere, gated on
+              observed H2D padding and a minimum fleet-wide saving.
   pool      — ``DetectorPool``: the façade wiring scheduler policy to
               runtime mechanics.  ``policy="static"`` (default) is PR 4
               behavior exactly; ``policy="adaptive"`` adds live bucket
-              migration; ``policy="ladder"`` runs the overload ladder
+              migration; ``policy="ladder"`` runs the overload ladder;
+              ``policy="pack"`` runs fleet-wide lane packing alone
               (sessions join with ``connect(qos=...)``).  ``poll()`` is
               the readout/backpressure point and never actuates on the
               non-blocking path; overflow is either lossless (``"drain"``)
@@ -63,6 +81,7 @@ from repro.serve.scheduler import (  # noqa: F401
     DegradationLadder,
     LadderConfig,
     Observation,
+    PackScheduler,
     StaticScheduler,
 )
 from repro.serve.streaming import StreamingDetector, session_base_us  # noqa: F401
@@ -74,6 +93,7 @@ __all__ = [
     "StaticScheduler",
     "AdaptiveScheduler",
     "DegradationLadder",
+    "PackScheduler",
     "LadderConfig",
     "Observation",
     "Action",

@@ -21,8 +21,11 @@ scheduler.
     deepest re-chunk backlog pump first when a round budget is in force;
     ``policy="ladder"`` runs the overload ladder — per-pump observations
     of backlog pressure drive hysteretic tiered degradation (stretch LUT
-    refresh -> lower the DVFS ceiling -> shed) with QoS classes so
-    premium lanes degrade last (``connect(qos=...)``).
+    refresh -> lower the DVFS ceiling -> shed -> pack lanes into fewer
+    buckets) with QoS classes so premium lanes degrade last
+    (``connect(qos=...)``); ``policy="pack"`` runs the packing move
+    standalone — every pump observation re-packs lanes across buckets to
+    minimize the fleet-wide padded H2D upload bytes per round.
 
 The façade wires them together as an observe -> decide -> actuate loop:
 ``connect`` asks the scheduler where a lane lands, ``pump``/``flush``
@@ -72,7 +75,11 @@ class DetectorPool:
     """Fixed-capacity pool of detector sessions: a ``PoolRuntime`` data
     plane driven by a placement scheduler (``policy="static"`` freezes
     PR 4 behavior; ``policy="adaptive"`` adds rate-aware live bucket
-    migration and starved-first pump order)."""
+    migration and starved-first pump order; ``policy="ladder"`` the
+    overload ladder; ``policy="pack"`` fleet-wide padding-minimizing lane
+    packing).  ``pipeline_depth`` sizes the pump's stage-ahead window
+    (blocks staged while earlier blocks run on device; 1 = the serial
+    pre-PR 8 pump, bit-exact either way)."""
 
     def __init__(self, cfg, capacity: int, *, seed: int = 0,
                  ring_rounds: int = 8,
@@ -81,6 +88,7 @@ class DetectorPool:
                  shard: object = "auto",
                  drain_mode: str = "async",
                  ring_depth: int = 2,
+                 pipeline_depth: int = 2,
                  policy: str = "static",
                  migrate_patience: int = 3,
                  migrate_margin: float = 0.9,
@@ -90,6 +98,7 @@ class DetectorPool:
             cfg, capacity, seed=seed, ring_rounds=ring_rounds,
             buckets=buckets, on_overflow=on_overflow, shard=shard,
             drain_mode=drain_mode, ring_depth=ring_depth,
+            pipeline_depth=pipeline_depth,
         )
         if scheduler is not None:
             if tuple(scheduler.buckets) != self._rt.buckets:

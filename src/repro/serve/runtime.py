@@ -32,6 +32,23 @@ exactly once — membership churn and live migration must not grow either
   * ``on_overflow="drop_oldest"``: a full ring overwrites its oldest slot
     and counts the loss; the in-state device accumulators stay complete.
 
+**Pipelined pump (stage -> dispatch).**  Each executor block's life splits
+in two: *stage* gathers the block's chunks into padded host slabs and
+starts their H2D upload (through ``launch.sharding.HostStager``'s pinned
+double buffer where the runtime exposes one), *dispatch* makes ring room
+and launches the executor.  A pump pass keeps a stage-ahead deque of up to
+``pipeline_depth - 1`` staged blocks (default depth 2 — the classic double
+buffer), so block *i+1* is gathered and uploaded while block *i* still
+runs on device: JAX dispatch is async, so the host-side gather — the
+pump's remaining serial cost after PR 7 — hides behind device compute.
+Dispatch order is stage order (one FIFO across all buckets of a pass), so
+results are bit-exact vs the unpipelined pump; a timebase rebase — a
+device write to the stacked states — only applies when the deque is empty
+(the pump flushes it first), keeping device-op order identical to the
+serial path.  ``pipeline_depth=1`` *is* the serial path.  Knob actions are
+coalesced the same way: all of a pass's ctrl writes become ONE batched
+leaf replace instead of one ``at[lane].set`` dispatch per action.
+
 **N-deep ring-of-rings** (``ring_depth``, default 2).  In async drain mode
 each bucket owns ``ring_depth`` device rings: one live, the rest a spare
 pool.  Draining *seals* the live ring — an atomic swap that installs a
@@ -123,7 +140,7 @@ class _Lane:
                  "vdd_trace", "events_folded", "migrations", "migration_log",
                  "r_win", "r_cur", "r_p1", "r_p2",
                  "qos", "tier", "knob_lut_every", "knob_vdd_cap",
-                 "knob_shed", "shed_events")
+                 "knob_shed", "shed_events", "gen", "obs_cache")
 
     def __init__(self, bucket: int, *, qos: str = "standard",
                  lut_every: int = 1, vdd_cap: int = 0):
@@ -160,6 +177,13 @@ class _Lane:
         self.r_cur = 0
         self.r_p1 = 0
         self.r_p2 = 0
+        # Observation memoization: ``gen`` bumps on every mutation that
+        # could change this lane's LaneObservation (feed, round collect,
+        # shed, migration apply, tier write); ``obs_cache`` holds
+        # ``(gen, LaneObservation)`` so idle lanes cost a dict lookup per
+        # pump observation, not a rebuild.
+        self.gen = 0
+        self.obs_cache: Optional[tuple] = None
 
     def rate_update(self, ts: np.ndarray, half: int) -> None:
         """Fold one time-sorted slab into the rate twin (vectorized; only
@@ -190,6 +214,26 @@ class _Round:
     def __init__(self, xy, ts, valid, mask, n_valid):
         self.xy, self.ts, self.valid = xy, ts, valid
         self.mask, self.n_valid = mask, n_valid
+
+
+class _StagedBlock:
+    """One executor block whose H2D upload has been issued but whose
+    executor has not yet launched — the unit of the pump's stage-ahead
+    deque.  Holds only device-side chunk inputs (plus the accounting the
+    dispatch half needs); it never references the stacked states or the
+    rings, so a staged block stays valid across other blocks' dispatches
+    and is inert to everything except a timebase rebase (which the pump
+    therefore fences behind a pipeline flush)."""
+
+    __slots__ = ("bucket", "n", "single", "chunks", "mask", "n_valid",
+                 "round_active", "n_valid_sum")
+
+    def __init__(self, bucket, n, single, chunks, mask, n_valid,
+                 round_active, n_valid_sum):
+        self.bucket, self.n, self.single = bucket, n, single
+        self.chunks, self.mask, self.n_valid = chunks, mask, n_valid
+        self.round_active = round_active
+        self.n_valid_sum = n_valid_sum
 
 
 class PoolRuntime:
@@ -234,12 +278,18 @@ class PoolRuntime:
                  on_overflow: str = "drain",
                  shard: object = "auto",
                  drain_mode: str = "async",
-                 ring_depth: int = 2):
+                 ring_depth: int = 2,
+                 pipeline_depth: int = 2):
         streaming_mod._check_streamable(cfg)
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         if ring_rounds < 1:
             raise ValueError("ring_rounds must be >= 1")
+        if pipeline_depth < 1:
+            raise ValueError(
+                "pipeline_depth must be >= 1 (1 = unpipelined: every block "
+                "dispatches as soon as it is staged)"
+            )
         if on_overflow not in _OVERFLOW_POLICIES:
             raise ValueError(
                 f"on_overflow must be one of {_OVERFLOW_POLICIES}, "
@@ -268,6 +318,7 @@ class PoolRuntime:
         self._overflow = on_overflow
         self._drain_mode = drain_mode
         self._ring_depth = ring_depth
+        self._pipeline_depth = int(pipeline_depth)
         self._half_us = int(cfg.dvfs_cfg.half_us)
         self._online = bool(cfg.dvfs and cfg.dvfs_online)
         self._tab = dvfs_mod.op_point_table(cfg.dvfs_cfg)
@@ -313,6 +364,18 @@ class PoolRuntime:
         self._active = np.zeros((self._phys,), bool)
         self._lanes: list[Optional[_Lane]] = [None] * self._phys
 
+        # Host mirrors of the FULL (phys,) ctrl leaves — the device truth
+        # every lane's knobs currently sit at, inactive slots included
+        # (they keep whatever their last write left; detector_init seeds
+        # the defaults below).  The batched knob write replaces the leaves
+        # wholesale from these mirrors, so coalescing N actions into one
+        # update is value-identical to N per-lane ``at[lane].set`` writes.
+        self._ctrl_lut = np.full(
+            (self._phys,), int(cfg.lut_every_chunks), np.int32
+        )
+        self._ctrl_cap = np.full((self._phys,), self._vdd_top, np.int32)
+        self._ctrl_shed = np.zeros((self._phys,), bool)
+
         # Staged migrations: lane -> (host state snapshot, target bucket).
         # Applied at the start of the next pump pass; discarded by
         # disconnect (a reused slot must inherit nothing).
@@ -323,13 +386,16 @@ class PoolRuntime:
         # jax.default_backend()); a no-op on CPU-resident pools.
         self._donate = state_mod.donation_ok(self._states)
 
-        # Pinned-host staging for the 1-round H2D upload (the sparse-arrival
-        # fast path uploads real event bytes every pump): on CUDA the copy
-        # becomes async-capable, on CPU-only hosts the stager transparently
-        # degrades to jnp.asarray.  Single-device pools only — the sharded
-        # path scatters through lane_put and keeps its own placement logic.
+        # Pinned-host staging for the H2D event uploads (both executor
+        # paths): on CUDA the copy becomes async-capable, on CPU-only hosts
+        # the stager transparently degrades to jnp.asarray.  Sized to the
+        # pump's stage-ahead window so an upload still in flight keeps its
+        # pinned slab alive while the next block stages.  Single-device
+        # pools only — the sharded path scatters through lane_put and
+        # keeps its own placement logic.
         self._stager = (
-            sharding_mod.HostStager() if self._mesh is None else None
+            sharding_mod.HostStager(depth=self._pipeline_depth)
+            if self._mesh is None else None
         )
 
         # -- per-bucket runtime: ring-of-rings + K-round/1-round executors --
@@ -363,8 +429,22 @@ class PoolRuntime:
         self._rounds_executed = 0
         self._pump_drain_wait = 0.0  # s the pump spent on drains/seals
         self._pump_forced_drains = 0  # mid-pump makes-room events
-        self._h2d_slots = 0        # chunk slots uploaded (incl. padding)
-        self._h2d_valid = 0        # valid events among them
+        # H2D upload audit, per bucket (both executor paths account here;
+        # totals are the sums).  Per-bucket resolution is what the packing
+        # objective consumes: which bucket's slab is the fleet paying for.
+        self._h2d_slots_b = {b: 0 for b in buckets}  # slots incl. padding
+        self._h2d_valid_b = {b: 0 for b in buckets}  # valid events in them
+        # -- pump pipeline instrumentation ---------------------------------
+        self._pass_dispatches = 0  # blocks dispatched in the current pass
+        self._stage_total = 0      # blocks staged, ever
+        self._stage_overlapped = 0  # staged while a pass block was in flight
+        self._stage_time_s = 0.0   # wall time spent gathering/uploading
+        self._stage_hidden_s = 0.0  # stage wall time with device still busy
+        self._busy_probe = None    # an output array of the last dispatch
+        self._ctrl_batched_writes = 0    # coalesced ctrl-leaf replaces
+        self._ctrl_actions_coalesced = 0  # knob actions folded into them
+        self._obs_rebuilds = 0     # LaneObservations built fresh
+        self._obs_reuses = 0       # LaneObservations served from cache
         # One pump at a time: _seal_ring can wait on the cv (releasing the
         # lock) AFTER chunks were popped into a pending block, so a second
         # concurrent pump could otherwise collect and execute LATER chunks
@@ -403,6 +483,17 @@ class PoolRuntime:
         # jitted-write + re-place discipline as _vreset — moving a knob is
         # a data write, never a recompile of the executors.
         self._vctrl = jax.jit(_ctrl)
+
+        def _ctrl_all(states, lut_every, vdd_cap, shed):
+            return states._replace(ctrl=state_mod.ControlState(
+                lut_every=lut_every, vdd_cap=vdd_cap, shed=shed,
+            ))
+
+        # Coalesced knob actuation: ONE batched ctrl-leaf replace for all
+        # of a pass's knob Actions, fed from the full (phys,) host mirrors
+        # — value-identical to applying the same actions one at[lane].set
+        # at a time, at one dispatch instead of one per action.
+        self._vctrl_all = jax.jit(_ctrl_all)
 
         half = cfg.dvfs_cfg.half_us
 
@@ -622,6 +713,11 @@ class PoolRuntime:
                 self._vreset(self._states, jnp.int32(lane), fresh)
             )
             self._active[lane] = True
+            # the fresh state's ctrl leaves are control_init's defaults —
+            # keep the full-leaf mirrors in lockstep with the device truth
+            self._ctrl_lut[lane] = int(self._cfg.lut_every_chunks)
+            self._ctrl_cap[lane] = self._vdd_top
+            self._ctrl_shed[lane] = False
             self._lanes[lane] = _Lane(
                 bucket, qos=str(qos),
                 lut_every=self._cfg.lut_every_chunks,
@@ -741,6 +837,7 @@ class PoolRuntime:
             ln.buf_ts = np.concatenate([ln.buf_ts, ts], 0)
             ln.n_events += int(ts.size)
             ln.rate_update(ts, self._half_us)
+            ln.gen += 1           # backlog and rate twin changed
             if ln.knob_shed:
                 self._shed_buffer(ln)
 
@@ -753,6 +850,7 @@ class PoolRuntime:
             ln.buf_xy = ln.buf_xy[excess:]
             ln.buf_ts = ln.buf_ts[excess:]
             ln.shed_events += excess
+            ln.gen += 1           # backlog changed
 
     def pump_pass(self, order: tuple,
                   max_rounds: Optional[int] = None,
@@ -773,7 +871,16 @@ class PoolRuntime:
         the ``"drain"`` policy).  K-round blocks with one fetch per drain
         are bit-exact vs the same rounds pumped one at a time; concurrent
         pumpers serialize on the pump token (round order must match the
-        sequential path even while a seal waits on a spare ring)."""
+        sequential path even while a seal waits on a spare ring).
+
+        The pass pipelines blocks through one stage-ahead deque shared
+        across its buckets: a block's H2D upload is issued at *stage*, its
+        executor launches at *dispatch*, and up to ``pipeline_depth - 1``
+        staged blocks ride ahead of the dispatch point.  Dispatch order is
+        stage order, and the deque is always flushed before the pass
+        returns (``finally`` — an exception mid-pass cannot strand an
+        uploaded block), so every staged round executes exactly once, in
+        the serial path's order."""
         with self._lock:
             self._check_open()
             self._acquire_pump()
@@ -784,11 +891,18 @@ class PoolRuntime:
                     if actions:
                         self._apply_actions_locked(actions)
                 total = 0
-                for bucket in order:
-                    left = None if max_rounds is None else max_rounds - total
-                    if left is not None and left <= 0:
-                        break
-                    total += self._pump_bucket(bucket, max_rounds=left)
+                q: collections.deque = collections.deque()
+                self._pass_dispatches = 0
+                try:
+                    for bucket in order:
+                        left = (None if max_rounds is None
+                                else max_rounds - total)
+                        if left is not None and left <= 0:
+                            break
+                        total += self._pump_bucket(bucket, q,
+                                                   max_rounds=left)
+                finally:
+                    self._flush_pipeline(q)
                 return total
             finally:
                 self._release_pump()
@@ -805,12 +919,17 @@ class PoolRuntime:
                 # re-validate after the token wait (see disconnect)
                 self._check_lane(lane)
                 self._apply_staged_locked()
-                for bucket in order:
-                    self._pump_bucket(bucket)          # until dry
-                ln = self._lanes[lane]
-                if ln.buf_ts.size:
-                    self._pump_bucket(ln.bucket, max_rounds=1,
-                                      flush_lane=lane)
+                q: collections.deque = collections.deque()
+                self._pass_dispatches = 0
+                try:
+                    for bucket in order:
+                        self._pump_bucket(bucket, q)   # until dry
+                    ln = self._lanes[lane]
+                    if ln.buf_ts.size:
+                        self._pump_bucket(ln.bucket, q, max_rounds=1,
+                                          flush_lane=lane)
+                finally:
+                    self._flush_pipeline(q)
             finally:
                 self._release_pump()
             return self.poll(lane)
@@ -951,7 +1070,13 @@ class PoolRuntime:
             self._states = self._place(
                 self._vreset(self._states, jnp.int32(lane), restored)
             )
+            # the restore rewrote the lane's ctrl leaves from the snapshot
+            # — fold the snapshot values into the full-width knob mirrors
+            self._ctrl_lut[lane] = int(snap.ctrl.lut_every)
+            self._ctrl_cap[lane] = int(snap.ctrl.vdd_cap)
+            self._ctrl_shed[lane] = bool(snap.ctrl.shed)
             ln.bucket = new_bucket
+            ln.gen += 1           # bucket (and backlog-rounds basis) changed
             ln.migrations += 1
             ln.migration_log.append((ln.events_folded, old, new_bucket))
             self._migrations += 1
@@ -961,25 +1086,40 @@ class PoolRuntime:
     def _observation_locked(self) -> scheduler_mod.Observation:
         """Per-pump observation snapshot (caller holds lock + pump token,
         staged migrations already applied).  All host data — observing
-        costs no device sync."""
+        costs no device sync.
+
+        Per-lane fields are memoized on the lane's generation counter
+        (bumped by feed, round collection, shed, migration apply, and tier
+        writes): an idle pass re-serves cached ``LaneObservation`` tuples
+        and costs O(changed lanes), witnessed by
+        ``observation_rebuilds``/``observation_reuses``."""
         lanes = []
         backlog = {b: 0 for b in self._buckets}
         for lane in self.active_lanes:
             ln = self._lanes[lane]
-            eps = state_mod.rate_estimate_eps(
-                ln.r_p1, ln.r_p2, self._cfg.dvfs_cfg
-            )
-            rounds = int(ln.buf_ts.size) // ln.bucket
-            backlog[ln.bucket] += rounds
-            lanes.append(scheduler_mod.LaneObservation(
-                lane=lane,
-                bucket=ln.bucket,
-                qos=ln.qos,
-                tier=ln.tier,
-                events_per_halfwin=eps * self._half_us * 1e-6,
-                backlog_rounds=rounds,
-                win=ln.r_win,
-            ))
+            cached = ln.obs_cache
+            if cached is not None and cached[0] == ln.gen:
+                lob = cached[1]
+                self._obs_reuses += 1
+            else:
+                eps = state_mod.rate_estimate_eps(
+                    ln.r_p1, ln.r_p2, self._cfg.dvfs_cfg
+                )
+                lob = scheduler_mod.LaneObservation(
+                    lane=lane,
+                    bucket=ln.bucket,
+                    qos=ln.qos,
+                    tier=ln.tier,
+                    events_per_halfwin=eps * self._half_us * 1e-6,
+                    backlog_rounds=int(ln.buf_ts.size) // ln.bucket,
+                    win=ln.r_win,
+                )
+                ln.obs_cache = (ln.gen, lob)
+                self._obs_rebuilds += 1
+            backlog[lob.bucket] += lob.backlog_rounds
+            lanes.append(lob)
+        h2d_slots = sum(self._h2d_slots_b.values())
+        h2d_valid = sum(self._h2d_valid_b.values())
         return scheduler_mod.Observation(
             lanes=tuple(lanes),
             backlog_rounds=backlog,
@@ -987,9 +1127,18 @@ class PoolRuntime:
             drain_wait_s=self._pump_drain_wait,
             last_drain_wait_s=dict(self._last_drain_wait),
             padding_ratio=(
-                1.0 - self._h2d_valid / self._h2d_slots
-                if self._h2d_slots else 0.0
+                1.0 - h2d_valid / h2d_slots if h2d_slots else 0.0
             ),
+            h2d_event_slots=h2d_slots,
+            h2d_valid_events=h2d_valid,
+            h2d_padding_bytes=(h2d_slots - h2d_valid) * EVENT_SLOT_BYTES,
+            h2d_by_bucket={
+                b: {"slots": self._h2d_slots_b[b],
+                    "valid": self._h2d_valid_b[b]}
+                for b in self._buckets
+            },
+            phys=self._phys,
+            ring_rounds=self._ring_rounds,
         )
 
     def _apply_actions_locked(self, actions) -> None:
@@ -998,7 +1147,19 @@ class PoolRuntime:
         rounds; migrations stage and apply at the next pass.  Actions for
         lanes retired since the observation are dropped: the decision
         belonged to the dead session, and a slot's next tenant starts at
-        neutral knobs regardless."""
+        neutral knobs regardless.
+
+        Knob writes are coalesced: the pass collects every action's wanted
+        knob triple first, then actuates them all in ONE batched ctrl-leaf
+        replace (fed from the full-width host mirrors) instead of one
+        jitted ``at[lane].set`` dispatch per action — value-identical,
+        since unmentioned lanes re-write their mirror (= device) values.
+        Migrations stage *after* the knob batch, so an action carrying
+        both sees its own knob write in the snapshot, exactly like the
+        serial one-action-at-a-time path did.  A pass with a single knob
+        write keeps the per-lane ``at[lane].set`` spelling (no cheaper to
+        batch)."""
+        writes = []                # (lane, ln, want triple) in action order
         for act in actions:
             if act.drop_policy is not None:
                 if act.drop_policy not in _OVERFLOW_POLICIES:
@@ -1013,10 +1174,23 @@ class PoolRuntime:
             if not (0 <= lane < self._capacity) or not self._active[lane]:
                 continue                       # raced a disconnect
             ln = self._lanes[lane]
-            self._set_knobs_locked(lane, ln, act.lut_every, act.vdd_cap,
-                                   act.shed)
-            if act.tier is not None:
+            want = self._knob_want(ln, act.lut_every, act.vdd_cap, act.shed)
+            if want is not None:
+                writes.append((lane, ln, want))
+        if len(writes) == 1:
+            self._apply_knobs_locked(*writes[0])
+        elif writes:
+            self._apply_knob_batch_locked(writes)
+
+        for act in actions:
+            lane = act.lane
+            if lane is None or not (0 <= lane < self._capacity) \
+                    or not self._active[lane]:
+                continue
+            ln = self._lanes[lane]
+            if act.tier is not None and int(act.tier) != ln.tier:
                 ln.tier = int(act.tier)
+                ln.gen += 1       # the tier mirror is observable
             if act.migrate is not None:
                 if act.migrate not in self._buckets:
                     raise ValueError(
@@ -1024,6 +1198,22 @@ class PoolRuntime:
                         f"({self._buckets})"
                     )
                 self._stage_locked(lane, act.migrate)
+
+    def _knob_want(self, ln: _Lane, lut_every: Optional[int],
+                   vdd_cap: Optional[int],
+                   shed: Optional[bool]) -> Optional[tuple]:
+        """Clamp a knob request against the lane's current mirrors; None
+        when the write would be a no-op."""
+        want = (
+            ln.knob_lut_every if lut_every is None else max(1,
+                                                            int(lut_every)),
+            ln.knob_vdd_cap if vdd_cap is None
+            else max(0, min(int(vdd_cap), self._vdd_top)),
+            ln.knob_shed if shed is None else bool(shed),
+        )
+        if want == (ln.knob_lut_every, ln.knob_vdd_cap, ln.knob_shed):
+            return None
+        return want
 
     def _set_knobs_locked(self, lane: int, ln: _Lane,
                           lut_every: Optional[int],
@@ -1033,21 +1223,49 @@ class PoolRuntime:
         token).  One jitted ``at[lane].set`` writes all three ctrl leaves
         — unspecified knobs re-write their current mirror value, so the
         write's trace never depends on which knobs the caller moved."""
-        want = (
-            ln.knob_lut_every if lut_every is None else max(1,
-                                                            int(lut_every)),
-            ln.knob_vdd_cap if vdd_cap is None
-            else max(0, min(int(vdd_cap), self._vdd_top)),
-            ln.knob_shed if shed is None else bool(shed),
-        )
-        if want == (ln.knob_lut_every, ln.knob_vdd_cap, ln.knob_shed):
-            return
+        want = self._knob_want(ln, lut_every, vdd_cap, shed)
+        if want is not None:
+            self._apply_knobs_locked(lane, ln, want)
+
+    def _apply_knobs_locked(self, lane: int, ln: _Lane, want: tuple) -> None:
+        """The single-lane actuation: one jitted ``at[lane].set``."""
         self._states = self._place(self._vctrl(
             self._states, jnp.int32(lane),
             jnp.int32(want[0]), jnp.int32(want[1]), jnp.asarray(want[2]),
         ))
+        self._commit_knobs(lane, ln, want)
+
+    def _apply_knob_batch_locked(self, writes: list) -> None:
+        """The coalesced actuation: fold every wanted triple into the
+        full-width host mirrors, then replace the three ctrl leaves in one
+        jitted update.  Later writes to the same lane win, matching the
+        serial order."""
+        lut = self._ctrl_lut.copy()
+        cap = self._ctrl_cap.copy()
+        shd = self._ctrl_shed.copy()
+        for lane, _ln, want in writes:
+            lut[lane], cap[lane], shd[lane] = want
+        self._states = self._place(self._vctrl_all(
+            self._states, jnp.asarray(lut), jnp.asarray(cap),
+            jnp.asarray(shd),
+        ))
+        self._ctrl_lut, self._ctrl_cap, self._ctrl_shed = lut, cap, shd
+        self._ctrl_batched_writes += 1
+        self._ctrl_actions_coalesced += len(writes)
+        for lane, ln, want in writes:
+            self._commit_knobs(lane, ln, want, device_written=True)
+
+    def _commit_knobs(self, lane: int, ln: _Lane, want: tuple,
+                      *, device_written: bool = False) -> None:
+        """Post-write bookkeeping shared by both actuation spellings:
+        update the lane + full-width mirrors and shed immediately on a
+        shed entry.  ``device_written`` marks mirrors already folded into
+        a batched leaf replace."""
         entered_shed = want[2] and not ln.knob_shed
         ln.knob_lut_every, ln.knob_vdd_cap, ln.knob_shed = want
+        if not device_written:
+            self._ctrl_lut[lane], self._ctrl_cap[lane], \
+                self._ctrl_shed[lane] = want
         if entered_shed:
             self._shed_buffer(ln)     # immediate relief, not just next feed
 
@@ -1215,6 +1433,8 @@ class PoolRuntime:
         with self._lock:
             self._check_open()
             exe = self.compile_cache_sizes()
+            h2d_slots = sum(self._h2d_slots_b.values())
+            h2d_valid = sum(self._h2d_valid_b.values())
             return {
                 "capacity": self._capacity,
                 "active": len(self.active_lanes),
@@ -1223,17 +1443,35 @@ class PoolRuntime:
                             if self._mesh is not None else 1),
                 "ring_rounds": self._ring_rounds,
                 "ring_depth": self._ring_depth,
+                "pipeline_depth": self._pipeline_depth,
                 "on_overflow": self._overflow,
                 "drain_mode": self._drain_mode,
                 "host_fetches": self._host_fetches,
                 "rounds_executed": self._rounds_executed,
                 "pump_drain_wait_s": self._pump_drain_wait,
                 "pump_forced_drains": self._pump_forced_drains,
+                # pipelined-pump witnesses: how many block stages began
+                # while an earlier block of the same pass was already
+                # dispatched (structural, deterministic at fixed sizes),
+                # plus the wall time staging took and how much of it ran
+                # while the device still reported the last dispatch busy
+                "pump_stages": self._stage_total,
+                "pump_stages_overlapped": self._stage_overlapped,
+                "pump_stage_overlap_ratio": (
+                    self._stage_overlapped / self._stage_total
+                    if self._stage_total else 0.0
+                ),
+                "pump_stage_s": self._stage_time_s,
+                "pump_stage_hidden_s": self._stage_hidden_s,
+                "ctrl_batched_writes": self._ctrl_batched_writes,
+                "ctrl_actions_coalesced": self._ctrl_actions_coalesced,
+                "observation_rebuilds": self._obs_rebuilds,
+                "observation_reuses": self._obs_reuses,
                 "reader_lag_rounds": sum(self._sealed_rounds.values()),
                 "migrations_total": self._migrations,
                 "migrations_staged": len(self._staged),
-                "h2d_event_slots": self._h2d_slots,
-                "h2d_valid_events": self._h2d_valid,
+                "h2d_event_slots": h2d_slots,
+                "h2d_valid_events": h2d_valid,
                 "h2d_pinned_staging": bool(
                     self._stager is not None and self._stager.pinned
                 ),
@@ -1241,7 +1479,7 @@ class PoolRuntime:
                     self._stager.uploads if self._stager is not None else 0
                 ),
                 "h2d_padding_bytes": (
-                    (self._h2d_slots - self._h2d_valid) * EVENT_SLOT_BYTES
+                    (h2d_slots - h2d_valid) * EVENT_SLOT_BYTES
                 ),
                 "dropped_rounds_total": (
                     sum(self._dropped_dev.values())
@@ -1269,6 +1507,8 @@ class PoolRuntime:
                         "ring_dropped_rounds": (
                             self._dropped_dev[b] + self._dropped_pred[b]
                         ),
+                        "h2d_event_slots": self._h2d_slots_b[b],
+                        "h2d_valid_events": self._h2d_valid_b[b],
                         "executables": exe[b],
                     }
                     for b in self._buckets
@@ -1290,11 +1530,22 @@ class PoolRuntime:
             return states
         return sharding_mod.lane_put(self._mesh, states, 0)
 
-    def _pump_bucket(self, bucket: int, max_rounds: Optional[int] = None,
+    def _pump_bucket(self, bucket: int, q: collections.deque,
+                     max_rounds: Optional[int] = None,
                      flush_lane: Optional[int] = None) -> int:
         """Run this bucket's ready rounds through its K-round executor,
         cutting a block early when a lane needs a timebase rebase (the hop
-        applies between blocks; rebases are ~hourly per session)."""
+        applies between blocks; rebases are ~hourly per session).
+
+        ``q`` is the pass's stage-ahead deque: a completed block is
+        *staged* (host gather + H2D upload issued) immediately, but its
+        executor *dispatches* only once the deque holds ``pipeline_depth``
+        blocks — so with the default depth 2, block *i+1* stages while
+        block *i* still runs on device.  A rebase is a device write to the
+        stacked states, and a staged block's timestamps are relative to
+        its collect-time base — so a rebase may only apply when nothing is
+        staged ahead: the pump flushes the deque first and retries the
+        collect (``allow_rebase`` also requires an empty deque)."""
         executed = 0
         while True:
             pending: list[_Round] = []
@@ -1305,20 +1556,37 @@ class PoolRuntime:
                     stop = True
                     break
                 rnd = self._collect_round(
-                    bucket, flush_lane, allow_rebase=not pending
+                    bucket, flush_lane,
+                    allow_rebase=not pending and not q,
                 )
                 if rnd == "rebase":
+                    if not pending and q:
+                        # blocked only by staged-ahead blocks: drain the
+                        # pipeline, then retry with the rebase allowed
+                        self._flush_pipeline(q)
+                        continue
                     break          # cut the block; rebase opens the next one
                 if rnd is None:
                     stop = True
                     break
                 pending.append(rnd)
             if pending:
-                self._execute_block(bucket, pending)
+                q.append(self._stage_block(bucket, pending,
+                                           stage_ahead=bool(q)))
+                while len(q) >= self._pipeline_depth:
+                    self._dispatch_block(q.popleft())
                 executed += len(pending)
             if stop or not pending:
                 break
         return executed
+
+    def _flush_pipeline(self, q: collections.deque) -> None:
+        """Dispatch every staged-ahead block, in stage order.  Runs before
+        a pass returns (and before any rebase), so a staged upload can
+        never be dropped, reordered, or executed against a shifted
+        timebase."""
+        while q:
+            self._dispatch_block(q.popleft())
 
     def _collect_round(self, bucket: int, flush_lane: Optional[int],
                        allow_rebase: bool):
@@ -1375,31 +1643,28 @@ class PoolRuntime:
             ln.buf_xy = ln.buf_xy[n:]
             ln.buf_ts = ln.buf_ts[n:]
             ln.events_folded += n
+            ln.gen += 1           # backlog changed
         return _Round(xy, ts, valid, mask, n_valid)
 
-    def _execute_block(self, bucket: int, rounds: list) -> None:
-        """Launch one executor block.  Shapes never depend on occupancy:
-        a block with 2..K ready rounds runs the fixed (K, ...) executor
-        (padding skipped by the round-level cond); a block with exactly ONE
-        round runs the 1-round executor, whose inputs drop the K axis — so
-        sparse arrivals upload (phys, chunk) H2D bytes, not (K, phys,
-        chunk).  Under the ``"drain"`` policy a block that would overflow
-        the live ring first drains it (sync: inline fetch; async: seal to
-        the reader and keep pumping — the wait, if any, is for a spare
-        ring, not for PCIe)."""
+    def _stage_block(self, bucket: int, rounds: list, *,
+                     stage_ahead: bool = False) -> _StagedBlock:
+        """The stage half: gather a block's rounds into padded host slabs
+        and issue their H2D upload (through the pinned-host stager where
+        available — both executor paths).  Shapes never depend on
+        occupancy: a block with 2..K ready rounds targets the fixed
+        (K, ...) executor (padding skipped by the round-level cond); a
+        block with exactly ONE round targets the 1-round executor, whose
+        inputs drop the K axis — so sparse arrivals upload (phys, chunk)
+        H2D bytes, not (K, phys, chunk).  Uploads are accounted here (per
+        bucket — this is when the bytes move); rings and states are not
+        touched, so staged blocks ride ahead of the dispatch point safely.
+        """
         k = self._ring_rounds
         n = len(rounds)
-        if self._overflow == "drain" and self._ring_count[bucket] + n > k:
-            t0 = time.perf_counter()
-            self._drain_bucket(bucket, wait=False)
-            w = time.perf_counter() - t0
-            self._pump_drain_wait += w
-            self._last_drain_wait[bucket] = w
-            self._pump_forced_drains += 1
-
+        t0 = time.perf_counter()
+        up = self._stager.put if self._stager is not None else jnp.asarray
         if n == 1 and bucket in self._exec1:
             rnd = rounds[0]
-            up = self._stager.put if self._stager is not None else jnp.asarray
             chunks = state_mod.ChunkInput(
                 xy=up(rnd.xy),
                 ts=up(rnd.ts),
@@ -1412,12 +1677,11 @@ class PoolRuntime:
                     (self._phys,), self._riders[2], jnp.float32
                 ),
             )
-            self._states, self._rings[bucket] = self._exec1[bucket](
-                self._states, self._rings[bucket], chunks,
-                up(rnd.mask), up(rnd.n_valid),
+            blk = _StagedBlock(
+                bucket, n, True, chunks, up(rnd.mask), up(rnd.n_valid),
+                None, int(rnd.n_valid.sum()),
             )
-            self._h2d_slots += self._phys * bucket
-            self._h2d_valid += int(rnd.n_valid.sum())
+            self._h2d_slots_b[bucket] += self._phys * bucket
         else:
             xy = np.zeros((k, self._phys, bucket, 2), np.int32)
             ts = np.zeros((k, self._phys, bucket), np.int32)
@@ -1430,9 +1694,9 @@ class PoolRuntime:
             round_active = np.arange(k) < n
 
             chunks = state_mod.ChunkInput(
-                xy=jnp.asarray(xy),
-                ts=jnp.asarray(ts),
-                valid=jnp.asarray(valid),
+                xy=up(xy),
+                ts=up(ts),
+                valid=up(valid),
                 ber=jnp.full((k, self._phys), self._riders[0], jnp.float32),
                 energy_coef=jnp.full(
                     (k, self._phys), self._riders[1], jnp.float32
@@ -1441,17 +1705,62 @@ class PoolRuntime:
                     (k, self._phys), self._riders[2], jnp.float32
                 ),
             )
-            self._states, self._rings[bucket] = self._exec[bucket](
-                self._states, self._rings[bucket], chunks,
-                jnp.asarray(mask), jnp.asarray(n_valid),
-                jnp.asarray(round_active),
+            blk = _StagedBlock(
+                bucket, n, False, chunks, jnp.asarray(mask),
+                jnp.asarray(n_valid), jnp.asarray(round_active),
+                int(n_valid.sum()),
             )
-            self._h2d_slots += k * self._phys * bucket
-            self._h2d_valid += int(n_valid.sum())
+            self._h2d_slots_b[bucket] += k * self._phys * bucket
+        self._h2d_valid_b[bucket] += blk.n_valid_sum
+        dt = time.perf_counter() - t0
+        self._stage_total += 1
+        self._stage_time_s += dt
+        if stage_ahead and self._pass_dispatches > 0:
+            # structural overlap witness: this stage began with an earlier
+            # block staged-but-undispatched in the deque AND a block of
+            # this pass already dispatched — the gather/upload ran ahead
+            # of the dispatch point, concurrent with device compute.  At
+            # depth 1 the deque is always empty here, so the serial pump
+            # reports 0 by construction.
+            self._stage_overlapped += 1
+            if self._busy_probe is not None and \
+                    not self._busy_probe.is_ready():
+                self._stage_hidden_s += dt
+        return blk
+
+    def _dispatch_block(self, blk: _StagedBlock) -> None:
+        """The dispatch half: make ring room (under the ``"drain"`` policy
+        a block that would overflow the live ring first drains it — sync:
+        inline fetch; async: seal to the reader and keep pumping, the
+        wait, if any, is for a spare ring, not for PCIe) and launch the
+        staged block's executor."""
+        bucket, k, n = blk.bucket, self._ring_rounds, blk.n
+        if self._overflow == "drain" and self._ring_count[bucket] + n > k:
+            t0 = time.perf_counter()
+            self._drain_bucket(bucket, wait=False)
+            w = time.perf_counter() - t0
+            self._pump_drain_wait += w
+            self._last_drain_wait[bucket] = w
+            self._pump_forced_drains += 1
+
+        if blk.single:
+            self._states, self._rings[bucket] = self._exec1[bucket](
+                self._states, self._rings[bucket], blk.chunks,
+                blk.mask, blk.n_valid,
+            )
+        else:
+            self._states, self._rings[bucket] = self._exec[bucket](
+                self._states, self._rings[bucket], blk.chunks,
+                blk.mask, blk.n_valid, blk.round_active,
+            )
         c = self._ring_count[bucket]
         self._ring_count[bucket] = min(c + n, k)
         self._dropped_pred[bucket] += max(0, c + n - k)
         self._rounds_executed += n
+        self._pass_dispatches += 1
+        # any output array works as the device-busy probe for the next
+        # stage's hidden-time accounting (is_ready() never blocks)
+        self._busy_probe = self._rings[bucket].n_kept
 
     # -- draining: sync (inline fetch) and async (seal to the reader) -------
 

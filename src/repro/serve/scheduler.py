@@ -57,7 +57,21 @@ Policies on the contract:
                           stretch the Harris LUT refresh interval → lower
                           the DVFS operating-point ceiling → shed (suspend
                           refresh + drop-oldest on the lane's re-chunk
-                          buffer).
+                          buffer) → **pack** (the bottom rung: once every
+                          class is fully degraded, re-pack lanes across
+                          buckets to minimize fleet-wide padded H2D upload
+                          bytes — placement as degradation; lanes return
+                          to their home buckets when the ladder fully
+                          recovers).
+  ``PackScheduler``     — the pack move standalone (``policy="pack"``):
+                          every pump observation runs the greedy
+                          bucket-evacuation optimizer over the fleet's
+                          measured rates and emits migrate Actions that
+                          consolidate sparse buckets, shrinking the
+                          ``(phys - ready)`` padding every upload pays.
+                          Placement is otherwise static; migrations reuse
+                          the seal/snapshot/restore mechanics unchanged
+                          (zero recompiles).
 
 Schedulers are pure host-side policy objects: no locks, no device handles,
 no threads.  The façade (``DetectorPool``) serializes calls under the
@@ -77,6 +91,7 @@ target before committing — one bursty window never triggers a move.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import NamedTuple, Optional
 
 __all__ = [
@@ -87,6 +102,9 @@ __all__ = [
     "AdaptiveScheduler",
     "LadderConfig",
     "DegradationLadder",
+    "PackScheduler",
+    "pack_upload_slots",
+    "plan_pack",
     "make_scheduler",
 ]
 
@@ -117,6 +135,15 @@ class Observation(NamedTuple):
     drain_wait_s: float          # cumulative pump-thread drain wait
     last_drain_wait_s: dict      # bucket -> last forced-drain wait (s)
     padding_ratio: float         # 1 - valid/uploaded H2D chunk slots
+    # H2D upload audit (cumulative counters, both executor paths) — the
+    # packing objective's measured signal.  Trailing defaults keep older
+    # Observation(...) construction sites valid.
+    h2d_event_slots: int = 0     # chunk slots uploaded (valid + padding)
+    h2d_valid_events: int = 0    # slots that carried a real event
+    h2d_padding_bytes: int = 0   # wasted bytes at the AER slot width
+    h2d_by_bucket: dict = {}     # bucket -> {"slots": int, "valid": int}
+    phys: int = 1                # physical lane slots every upload pays
+    ring_rounds: int = 1         # K: rounds per compiled executor block
 
 
 class Action(NamedTuple):
@@ -284,6 +311,155 @@ class AdaptiveScheduler(StaticScheduler):
         self._streaks.pop(lane, None)
 
 
+def pack_upload_slots(max_rounds: int, bucket: int, phys: int,
+                      ring_rounds: int) -> int:
+    """H2D chunk slots one pump pass uploads for a bucket whose busiest
+    lane folds ``max_rounds`` rounds.
+
+    Every upload is padded to the full ``(phys, bucket)`` slab — sparse
+    fleets pay for empty lanes and short chunks alike.  The pump cuts a
+    bucket's rounds into executor blocks: full blocks ride the K-round
+    executor (``ring_rounds * phys * bucket`` slots each, rounds padded to
+    K), a 1-round remainder rides the cheap 1-round executor
+    (``phys * bucket`` slots), and a longer remainder pays a full K-padded
+    block.  A bucket nobody folds in uploads nothing — which is exactly
+    why evacuating a sparse bucket saves its whole slab.
+    """
+    m = int(max_rounds)
+    if m <= 0:
+        return 0
+    k = max(1, int(ring_rounds))
+    full, rem = divmod(m, k)
+    slots = full * k * int(phys) * int(bucket)
+    if rem == 1:
+        slots += int(phys) * int(bucket)
+    elif rem > 1:
+        slots += k * int(phys) * int(bucket)
+    return slots
+
+
+def plan_pack(obs: Observation, *, min_gain: float = 0.05) -> tuple:
+    """Greedy bucket evacuation minimizing fleet-wide padded upload slots.
+
+    Returns ``(moves, saved_slots, before_slots)`` where ``moves`` is a
+    tuple of ``(lane, src_bucket, dst_bucket)``.  The cost model projects
+    each bucket's per-pass upload (``pack_upload_slots``) from the lanes'
+    measured rates: a lane folding ``w`` events per half-window in bucket
+    ``b`` needs ``ceil(w / b)`` rounds, and the bucket pays for its busiest
+    lane.  Candidate moves evacuate *all* of a source bucket's
+    traffic-bearing lanes into one target — moving a single lane out of a
+    shared bucket saves nothing while a neighbor keeps the slab active, so
+    per-lane hill climbing stalls where whole-bucket evacuation does not.
+    One evacuation per call (migrations apply next pass; re-planning on
+    the new layout continues the descent), accepted only when it saves at
+    least ``min_gain`` of the current fleet-wide upload.  Ties break
+    deterministically toward the smallest ``(src, dst)`` pair.
+
+    ``obs.h2d_event_slots``/``h2d_valid_events`` gate the whole exercise:
+    until the audit has observed actual padded uploads there is nothing to
+    save and the planner stays quiet.
+    """
+    if int(obs.h2d_event_slots) <= int(obs.h2d_valid_events):
+        return (), 0, 0            # no padding observed yet: nothing to win
+    phys = max(1, int(obs.phys))
+    k = max(1, int(obs.ring_rounds))
+    buckets = sorted({*obs.backlog_rounds} |
+                     {lob.bucket for lob in obs.lanes})
+    if len(buckets) < 2 or not obs.lanes:
+        return (), 0, 0
+    rates: dict = {b: [] for b in buckets}
+    movers: dict = {b: [] for b in buckets}
+    for lob in obs.lanes:
+        w = float(lob.events_per_halfwin)
+        rates[lob.bucket].append(w)
+        if w > 0:
+            movers[lob.bucket].append(lob)
+
+    def bucket_slots(b: int, ws: list) -> int:
+        m = 0
+        for w in ws:
+            if w > 0:
+                m = max(m, max(1, math.ceil(w / b)))
+        return pack_upload_slots(m, b, phys, k)
+
+    before = sum(bucket_slots(b, rates[b]) for b in buckets)
+    if before <= 0:
+        return (), 0, before
+    best = None                    # (saved, src, dst)
+    for src in buckets:
+        if not movers[src]:
+            continue
+        src_cost = bucket_slots(src, rates[src])
+        for dst in buckets:
+            if dst == src:
+                continue
+            merged = rates[dst] + [float(l.events_per_halfwin)
+                                   for l in movers[src]]
+            saved = (src_cost + bucket_slots(dst, rates[dst])
+                     - bucket_slots(dst, merged))
+            if saved <= 0:
+                continue
+            if best is None or saved > best[0] or \
+                    (saved == best[0] and (src, dst) < (best[1], best[2])):
+                best = (saved, src, dst)
+    if best is None or best[0] < min_gain * before:
+        return (), 0, before
+    saved, src, dst = best
+    moves = tuple((lob.lane, src, dst) for lob in movers[src])
+    return moves, int(saved), int(before)
+
+
+class PackScheduler(StaticScheduler):
+    """Fleet-wide lane packing as a standalone policy (``policy="pack"``).
+
+    Placement starts static (smallest fitting bucket at connect); every
+    pump observation runs ``plan_pack`` over the fleet's measured rates
+    and — after ``patience`` consecutive observations that keep finding a
+    qualifying saving (anti-flap, same gate the adaptive migrator uses) —
+    emits the migrate Actions that evacuate the costliest sparse bucket.
+    Migrations reuse the seal/drain/snapshot/restore mechanics unchanged,
+    so ``executors_compiled_once()`` holds through any amount of packing.
+    """
+
+    policy = "pack"
+    needs_backlog = False
+    needs_observation = False
+    needs_pump_observation = True
+
+    def __init__(self, buckets: tuple, *, patience: int = 2,
+                 min_gain: float = 0.05):
+        super().__init__(buckets)
+        if patience < 1:
+            raise ValueError("patience must be >= 1")
+        if not (0.0 <= min_gain < 1.0):
+            raise ValueError("min_gain must be in [0, 1)")
+        self.patience = int(patience)
+        self.min_gain = float(min_gain)
+        self._streak = 0
+        self._pack_moves = 0
+        self._saved_slots = 0
+
+    def decide(self, obs: Observation) -> tuple:
+        moves, saved, _before = plan_pack(obs, min_gain=self.min_gain)
+        if not moves:
+            self._streak = 0
+            return ()
+        self._streak += 1
+        if self._streak < self.patience:
+            return ()
+        self._streak = 0
+        self._pack_moves += len(moves)
+        self._saved_slots += int(saved)
+        return tuple(Action(lane=lane, migrate=dst)
+                     for lane, _src, dst in moves)
+
+    def scheduler_stats(self) -> dict:
+        return {
+            "pack_moves": self._pack_moves,
+            "pack_saved_slots": self._saved_slots,
+        }
+
+
 @dataclasses.dataclass(frozen=True)
 class LadderConfig:
     """Tuning of the overload ladder (all host-side policy constants).
@@ -309,6 +485,14 @@ class LadderConfig:
     fixed-Vdd mode — there is no in-step controller to re-point); tier 3
     additionally sheds (suspends refresh and drops oldest buffered events
     beyond one ring of rounds).
+
+    The bottom rung is placement: with ``pack`` enabled (and more than one
+    bucket configured), a ladder pinned at its *maximum* level starts
+    emitting ``plan_pack`` migrations — consolidate sparse buckets so the
+    fleet stops paying ``(phys - ready)`` H2D padding on every upload —
+    and remembers each packed lane's home bucket.  When the ladder fully
+    recovers (level back to 0) the lanes migrate home, so packing is as
+    hysteretic and reversible as every other rung.
     """
 
     classes: tuple = (("standard", 3), ("premium", 0))
@@ -318,6 +502,8 @@ class LadderConfig:
     recover_patience: int = 4    # pump observations below lo before -1
     lut_stretch: int = 4         # tier 1: lut_every *= lut_stretch
     vdd_drop: int = 1            # tier 2: vdd_cap = top - vdd_drop
+    pack: bool = True            # bottom rung: pack lanes at max level
+    pack_min_gain: float = 0.05  # accept a pack move saving >= this share
 
     def __post_init__(self):
         if not self.classes:
@@ -335,6 +521,8 @@ class LadderConfig:
             raise ValueError("lut_stretch must be >= 2")
         if self.vdd_drop < 0:
             raise ValueError("vdd_drop must be >= 0")
+        if not (0.0 <= self.pack_min_gain < 1.0):
+            raise ValueError("pack_min_gain must be in [0, 1)")
 
     def qos_names(self) -> tuple:
         return tuple(c for c, _ in self.classes)
@@ -371,6 +559,8 @@ class DegradationLadder(StaticScheduler):
         self._hot = 0            # consecutive observations above hi_rounds
         self._cool = 0           # consecutive observations below lo_rounds
         self._transitions = 0    # lane tier moves actuated (the CI witness)
+        self._pack_home = {}     # lane -> bucket it lived in before packing
+        self._pack_moves = 0     # pack/un-pack migrations emitted
 
     @property
     def level(self) -> int:
@@ -434,13 +624,40 @@ class DegradationLadder(StaticScheduler):
                 shed=shed, tier=tier,
             ))
             self._transitions += 1
+
+        # bottom rung: placement.  Knobs exhausted (pinned at max level)
+        # -> pack lanes into fewer buckets to stop paying H2D padding;
+        # fully recovered (level 0) -> send packed lanes back home.
+        if lad.pack and len(self._buckets) > 1:
+            if self._level >= self._max_level and self._max_level > 0:
+                moves, _saved, _before = plan_pack(
+                    obs, min_gain=lad.pack_min_gain)
+                for lane, src, dst in moves:
+                    self._pack_home.setdefault(lane, src)
+                    actions.append(Action(lane=lane, migrate=dst))
+                    self._pack_moves += 1
+            elif self._level == 0 and self._pack_home:
+                cur = {lob.lane: lob.bucket for lob in obs.lanes}
+                for lane, home in sorted(self._pack_home.items()):
+                    b = cur.get(lane)
+                    self._pack_home.pop(lane)
+                    if b is None or b == home:
+                        continue     # gone, or already back where it was
+                    actions.append(Action(lane=lane, migrate=home))
+                    self._pack_moves += 1
         return tuple(actions)
+
+    def forget(self, lane: int) -> None:
+        """Slot recycled: a new session must not inherit its predecessor's
+        packed-home bucket."""
+        self._pack_home.pop(lane, None)
 
     def scheduler_stats(self) -> dict:
         return {
             "ladder_level": self._level,
             "ladder_max_level": self._max_level,
             "ladder_transitions": self._transitions,
+            "pack_moves": self._pack_moves,
         }
 
 
@@ -449,7 +666,8 @@ def make_scheduler(policy: str, buckets: tuple, *, patience: int = 3,
                    up_margin: float = 1.0,
                    ladder: Optional[LadderConfig] = None,
                    base_lut_every: int = 1,
-                   vdd_top: int = 0) -> StaticScheduler:
+                   vdd_top: int = 0,
+                   pack_min_gain: float = 0.05) -> StaticScheduler:
     if policy == "static":
         return StaticScheduler(buckets)
     if policy == "adaptive":
@@ -460,6 +678,10 @@ def make_scheduler(policy: str, buckets: tuple, *, patience: int = 3,
         return DegradationLadder(buckets, ladder=ladder,
                                  base_lut_every=base_lut_every,
                                  vdd_top=vdd_top)
+    if policy == "pack":
+        return PackScheduler(buckets, patience=patience,
+                             min_gain=pack_min_gain)
     raise ValueError(
-        f"policy must be 'static', 'adaptive', or 'ladder', got {policy!r}"
+        f"policy must be 'static', 'adaptive', 'ladder', or 'pack', "
+        f"got {policy!r}"
     )

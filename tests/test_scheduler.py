@@ -319,3 +319,197 @@ def test_rebucket_noop_and_validation():
     assert det.rebuckets == 0
     with pytest.raises(ValueError, match="chunk"):
         det.rebucket(0)
+
+
+# ---------------------------------------------------------------------------
+# Fleet packing (ISSUE 8): the cost model, the planner, and both policies
+# that actuate it
+# ---------------------------------------------------------------------------
+
+
+def _lob(lane, bucket, rate, *, qos="standard", tier=0):
+    from repro.serve.scheduler import LaneObservation
+
+    return LaneObservation(lane=lane, bucket=bucket, qos=qos, tier=tier,
+                           events_per_halfwin=float(rate),
+                           backlog_rounds=0, win=None)
+
+
+def _obs(lanes, buckets, *, phys=4, ring_rounds=4, slots=1000, valid=100):
+    from repro.serve.scheduler import Observation
+
+    return Observation(
+        lanes=tuple(lanes),
+        backlog_rounds={b: 0 for b in buckets},
+        reader_lag_rounds={},
+        drain_wait_s=0.0,
+        last_drain_wait_s={},
+        padding_ratio=0.0,
+        h2d_event_slots=slots,
+        h2d_valid_events=valid,
+        h2d_padding_bytes=0,
+        h2d_by_bucket={},
+        phys=phys,
+        ring_rounds=ring_rounds,
+    )
+
+
+def test_pack_upload_slots_block_shapes():
+    from repro.serve.scheduler import pack_upload_slots
+
+    # no traffic uploads nothing — evacuating a bucket zeroes its cost
+    assert pack_upload_slots(0, 512, 4, 4) == 0
+    assert pack_upload_slots(-1, 512, 4, 4) == 0
+    # a single round rides the cheap 1-round executor: (phys, bucket)
+    assert pack_upload_slots(1, 512, 4, 4) == 4 * 512
+    # 2..K rounds pay a full K-padded block
+    assert pack_upload_slots(2, 128, 4, 4) == 4 * 4 * 128
+    assert pack_upload_slots(4, 128, 4, 4) == 4 * 4 * 128
+    # K+1: one full block plus the 1-round remainder
+    assert pack_upload_slots(5, 128, 4, 4) == 4 * 4 * 128 + 4 * 128
+    # K+2: one full block plus another K-padded block
+    assert pack_upload_slots(6, 128, 4, 4) == 2 * 4 * 4 * 128
+
+
+def test_plan_pack_evacuates_the_costlier_sparse_bucket():
+    from repro.serve.scheduler import plan_pack
+
+    # 96 ev/win in 128 -> 1 cheap round (4*128); two 100 ev/win lanes in
+    # 512 -> a full (phys, 512) slab each pass.  Moving the sparse pair
+    # into 128 keeps the 1-round cost (their rounds merge into slabs the
+    # busy lane already pays for): saved = 4*512.
+    obs = _obs([_lob(0, 128, 96), _lob(1, 512, 100), _lob(2, 512, 100)],
+               (128, 512))
+    moves, saved, before = plan_pack(obs)
+    assert moves == ((1, 512, 128), (2, 512, 128))
+    assert saved == 4 * 512
+    assert before == 4 * 128 + 4 * 512
+    # zero-rate lanes are not movers and pin nothing
+    obs2 = _obs([_lob(0, 128, 96), _lob(1, 512, 100), _lob(2, 512, 0)],
+                (128, 512))
+    moves2, _, _ = plan_pack(obs2)
+    assert moves2 == ((1, 512, 128),)
+
+
+def test_plan_pack_gates():
+    from repro.serve.scheduler import plan_pack
+
+    lanes = [_lob(0, 128, 96), _lob(1, 512, 100)]
+    # padding gate: no observed padded uploads -> planner stays quiet
+    quiet = _obs(lanes, (128, 512), slots=100, valid=100)
+    assert plan_pack(quiet) == ((), 0, 0)
+    # single bucket: nowhere to pack
+    one = _obs([_lob(0, 128, 96)], (128,))
+    assert plan_pack(one) == ((), 0, 0)
+    # min_gain: the same qualifying move is rejected at a high threshold
+    obs = _obs(lanes, (128, 512))
+    moves, saved, before = plan_pack(obs, min_gain=0.05)
+    assert moves and saved >= 0.05 * before
+    rejected = plan_pack(obs, min_gain=0.95)
+    assert rejected[0] == () and rejected[2] == before
+
+
+def test_plan_pack_tie_breaks_deterministically():
+    from repro.serve.scheduler import plan_pack
+
+    # 512 ev/win in 128 (full K block) vs 100 ev/win in 512 (full slab):
+    # either consolidation saves the same 2048 slots, so the tie breaks
+    # toward the smallest (src, dst) pair — (128, 512).
+    obs = _obs([_lob(0, 128, 512), _lob(1, 512, 100)], (128, 512))
+    moves, saved, _ = plan_pack(obs)
+    assert moves == ((0, 128, 512),)
+    assert saved == 4 * 4 * 128
+
+
+def test_pack_scheduler_patience_and_stats():
+    from repro.serve.scheduler import PackScheduler
+
+    obs = _obs([_lob(0, 128, 96), _lob(1, 512, 100)], (128, 512))
+    quiet = _obs([_lob(0, 128, 96), _lob(1, 512, 100)], (128, 512),
+                 slots=100, valid=100)
+    s = PackScheduler((128, 512), patience=2)
+    assert s.policy == "pack"
+    assert s.needs_pump_observation and not s.needs_observation
+    assert s.decide(obs) == ()              # streak 1: parked
+    # a non-qualifying observation resets the streak
+    assert s.decide(quiet) == ()
+    assert s.decide(obs) == ()              # streak restarts at 1
+    acts = s.decide(obs)                    # streak 2: emit
+    assert [a.migrate for a in acts] == [128]
+    assert acts[0].lane == 1
+    st = s.scheduler_stats()
+    assert st["pack_moves"] == 1 and st["pack_saved_slots"] == 4 * 512
+    # streak reset after emitting: the next observation parks again
+    assert s.decide(obs) == ()
+    with pytest.raises(ValueError, match="patience"):
+        PackScheduler((128, 512), patience=0)
+    with pytest.raises(ValueError, match="min_gain"):
+        PackScheduler((128, 512), min_gain=1.5)
+
+
+def test_ladder_pack_rung_engages_at_max_level_and_unpacks_home():
+    from repro.serve.scheduler import DegradationLadder, LadderConfig
+
+    lad = DegradationLadder(
+        (128, 512),
+        ladder=LadderConfig(classes=(("standard", 2),), patience=1,
+                            recover_patience=1, hi_rounds=1.0,
+                            lo_rounds=0.5),
+        base_lut_every=2, vdd_top=3,
+    )
+
+    def hot_obs(lanes):
+        o = _obs(lanes, (128, 512))
+        return o._replace(
+            lanes=tuple(l._replace(backlog_rounds=9) for l in o.lanes))
+
+    # below max level: knob actions only, never placement
+    acts = lad.decide(hot_obs([_lob(0, 128, 96), _lob(1, 512, 100)]))
+    assert lad.level == 1 < lad._max_level
+    assert acts and all(a.migrate is None for a in acts)
+    # pinned at max level: the pack rung fires alongside the knob actions
+    acts = lad.decide(
+        hot_obs([_lob(0, 128, 96, tier=1), _lob(1, 512, 100, tier=1)]))
+    assert lad.level == 2 == lad._max_level
+    migrates = [(a.lane, a.migrate) for a in acts if a.migrate is not None]
+    assert migrates == [(1, 128)]
+    assert lad._pack_home == {1: 512}
+    # partial recovery: still no placement action either way
+    calm = [_lob(0, 128, 96, tier=2), _lob(1, 128, 100, tier=2)]
+    acts = lad.decide(_obs(calm, (128, 512)))
+    assert lad.level == 1
+    assert all(a.migrate is None for a in acts)
+    # full recovery to level 0 sends the packed lane home
+    calm = [_lob(0, 128, 96, tier=1), _lob(1, 128, 100, tier=1)]
+    acts = lad.decide(_obs(calm, (128, 512)))
+    assert lad.level == 0
+    migrates = [(a.lane, a.migrate) for a in acts if a.migrate is not None]
+    assert migrates == [(1, 512)]
+    assert lad._pack_home == {}
+    assert lad.scheduler_stats()["pack_moves"] == 2
+    # forget() clears a recycled slot's packed home
+    lad._pack_home[1] = 512
+    lad.forget(1)
+    assert lad._pack_home == {}
+    # pack=False: the rung never fires even pinned at max level
+    off = DegradationLadder(
+        (128, 512),
+        ladder=LadderConfig(classes=(("standard", 1),), patience=1,
+                            recover_patience=1, pack=False),
+        base_lut_every=2, vdd_top=3,
+    )
+    off.decide(hot_obs([_lob(0, 128, 96), _lob(1, 512, 100)]))
+    assert off.level == 1 == off._max_level
+    acts = off.decide(
+        hot_obs([_lob(0, 128, 96, tier=1), _lob(1, 512, 100, tier=1)]))
+    assert all(a.migrate is None for a in acts)
+
+
+def test_make_scheduler_pack_policy():
+    from repro.serve.scheduler import PackScheduler
+
+    s = make_scheduler("pack", BUCKETS, patience=3, pack_min_gain=0.1)
+    assert isinstance(s, PackScheduler)
+    assert s.patience == 3 and s.min_gain == 0.1
+    with pytest.raises(ValueError, match="pack"):
+        make_scheduler("greedy", BUCKETS)
