@@ -74,6 +74,15 @@ _GATE_STRUCTURAL = (
     # placement — both machine-independent at fixed sizes
     ("_pump_stage_overlap_ratio", "higher"),
     ("_pack_padding_saved_ratio", "higher"),
+    # fleet SLO scenarios (ISSUE 9): the diurnal ramp must keep migrating
+    # lanes, the flash crowd must keep actuating ladder transitions, and
+    # the heterogeneous mix must keep packing sparse buckets — all
+    # structural control-plane witnesses, zero means the policy quietly
+    # stopped observing/deciding/actuating under its scenario; their p99
+    # and rate rows ride along ungated (smoke-sized wall time is noise)
+    ("_slo_migrations", "higher"),
+    ("_slo_transitions", "higher"),
+    ("_slo_pack_moves", "higher"),
 )
 _GATE_TIME = (
     ("_slab_p99_ms", "lower"),
@@ -170,6 +179,7 @@ def main(argv=None) -> None:
         bench_throughput,
         bench_tos_kernels,
         roofline_table,
+        scenarios,
     )
 
     modules = [
@@ -179,6 +189,7 @@ def main(argv=None) -> None:
         ("auc(fig11)", bench_auc),
         ("tos_kernels(perf)", bench_tos_kernels),
         ("streaming(serving)", bench_streaming),
+        ("scenarios(slo)", scenarios),
         ("roofline(dryrun)", roofline_table),
     ]
     print("name,us_per_call,derived")

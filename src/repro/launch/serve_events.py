@@ -72,9 +72,36 @@ import time
 
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.core import pipeline
 from repro.events import synthetic
 from repro.serve import DetectorPool
+
+# The console rendering of a metrics emission: the pipeline/coalescing/
+# pack summary keys, rendered by a LogSink from the SAME record the JSONL
+# trail gets — one emit, N sinks, no bespoke report block.
+_SUMMARY_FIELDS = (
+    "pump_stages", "pump_stage_s", "pump_stage_hidden_s",
+    "pump_stage_overlap", "ctrl_batched_writes", "ctrl_actions_coalesced",
+    "observation_rebuilds", "observation_reuses", "h2d_event_slots",
+    "h2d_valid_events", "migrations_total",
+)
+
+
+def _attach_sinks(pool, metrics_out):
+    """Wire the driver's sinks onto the pool registry: a console summary
+    LogSink (always) plus a JSONL trail when ``--metrics-out`` is given,
+    fanned out through one CompositeSink so a broken file sink can never
+    take the console reporting down with it."""
+    sinks = [obs_mod.LogSink(write=lambda s: print("  " + s),
+                             fields=_SUMMARY_FIELDS)]
+    jsonl = None
+    if metrics_out:
+        jsonl = obs_mod.JsonlSink(metrics_out)
+        sinks.append(jsonl)
+    composite = obs_mod.CompositeSink(sinks)
+    pool.metrics.attach(composite)
+    return jsonl
 
 
 def main(argv=None):
@@ -129,6 +156,13 @@ def main(argv=None):
     ap.add_argument("--migrate-patience", type=int, default=3,
                     help="consecutive drains past the hysteresis threshold "
                          "before an adaptive migration commits")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH.jsonl",
+                    help="append every metrics emission (periodic + final) "
+                         "as one JSON record per line to this file")
+    ap.add_argument("--metrics-interval", type=int, default=25,
+                    help="serving rounds between periodic metrics "
+                         "emissions (0 disables the periodic emits; the "
+                         "final emission always happens)")
     ap.add_argument("--dvfs", action="store_true",
                     help="online (in-step) DVFS instead of fixed 1.2 V")
     ap.add_argument("--backend", default="jnp",
@@ -180,7 +214,10 @@ def main(argv=None):
     ps0 = pool.pool_stats()              # baselines: exclude warmup work
     drains0 = ps0["pump_forced_drains"]
     drain_wait0 = ps0["pump_drain_wait_s"]
+    # sinks attach after warmup so the trail starts at the serving loop
+    jsonl = _attach_sinks(pool, args.metrics_out)
 
+    serve_rounds = 0
     lanes, cursors = {}, {}
     lat_ms, done = [], 0
     dropped_seen = 0
@@ -217,6 +254,10 @@ def main(argv=None):
         for lane in lanes.values():
             pool.poll(lane)
         lat_ms.append((time.perf_counter() - t1) * 1e3)
+        serve_rounds += 1
+        if args.metrics_interval > 0 and \
+                serve_rounds % args.metrics_interval == 0:
+            pool.emit_metrics("periodic")
         ps = pool.pool_stats()
         # mid-pump makes-room events are counted by the pool itself
         # (host_fetches deltas are racy in async mode: the reader counts a
@@ -276,20 +317,11 @@ def main(argv=None):
           f"{ps['h2d_event_slots']} uploaded slots "
           f"({ps['h2d_valid_events']} valid events) — "
           f"{ps['migrations_total']} migration(s), policy={ps['policy']}")
-    print(f"pump pipeline (depth {ps['pipeline_depth']}): "
-          f"{ps['pump_stages_overlapped']}/{ps['pump_stages']} stages "
-          f"overlapped device compute "
-          f"(ratio {ps['pump_stage_overlap_ratio']:.2f}); "
-          f"{ps['pump_stage_hidden_s'] * 1e3:.2f} of "
-          f"{ps['pump_stage_s'] * 1e3:.2f} ms stage time hidden behind a "
-          f"busy device; {ps['ctrl_actions_coalesced']} knob write(s) "
-          f"coalesced into {ps['ctrl_batched_writes']} batched update(s); "
-          f"observation cache {ps['observation_reuses']} reuse(s) / "
-          f"{ps['observation_rebuilds']} rebuild(s)")
-    if "pack_moves" in ps:
-        print(f"pack: {ps['pack_moves']} packing migration(s), "
-              f"{ps.get('pack_saved_slots', 0)} upload slot(s) saved "
-              f"(planner estimate)")
+    # pipeline/coalescing/pack summary: one registry emission rendered by
+    # the attached sinks (console LogSink + optional JSONL trail) — the
+    # record is the report, scheduler counters ride in record["scheduler"]
+    print(f"pump pipeline (depth {ps['pipeline_depth']}) final emission:")
+    pool.emit_metrics("final")
     if args.policy == "ladder":
         print(f"ladder: level {ps['ladder_level']}/{ps['ladder_max_level']} "
               f"at exit, {ps['ladder_transitions']} tier transition(s), "
@@ -302,6 +334,9 @@ def main(argv=None):
               f"{st['migrations']} migration(s) {st['migration_log']}")
     print(f"compiled executors: {pool.compile_cache_sizes()} "
           f"(membership churn and migration must not recompile)")
+    if jsonl is not None:
+        jsonl.close()
+        print(f"metrics trail: {args.metrics_out}")
     pool.close()
     return dt, lat
 

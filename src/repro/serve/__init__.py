@@ -72,8 +72,18 @@ batch pipeline folds, so a served stream is bit-identical to
 shard, per K-round block, across live migrations, and at every ladder
 tier, where the knob settings are bit-identical to a config respecialized
 to the same operating point (property-tested).
+
+Every witness counter below is owned by the pool's metrics registry
+(``repro.obs``; attach sinks via ``DetectorPool(metrics=...)`` or
+``pool.metrics.attach(...)``) — ``stats()``/``pool_stats()`` are thin
+byte-stable exports of registry handles.
+
 """
-from repro.serve.pool import DetectorPool  # noqa: F401
+from repro.obs.schema import stats_reference_table as _stats_table
+
+__doc__ += _stats_table()
+
+from repro.serve.pool import DetectorPool  # noqa: F401,E402
 from repro.serve.runtime import PoolRuntime  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
     Action,

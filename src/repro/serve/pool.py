@@ -65,6 +65,7 @@ from __future__ import annotations
 
 from typing import Optional
 
+from repro import obs as obs_mod
 from repro.serve import scheduler as scheduler_mod
 from repro.serve.runtime import PoolRuntime
 
@@ -93,12 +94,13 @@ class DetectorPool:
                  migrate_patience: int = 3,
                  migrate_margin: float = 0.9,
                  ladder: Optional[scheduler_mod.LadderConfig] = None,
-                 scheduler: Optional[scheduler_mod.StaticScheduler] = None):
+                 scheduler: Optional[scheduler_mod.StaticScheduler] = None,
+                 metrics: Optional[obs_mod.MetricsRegistry] = None):
         self._rt = PoolRuntime(
             cfg, capacity, seed=seed, ring_rounds=ring_rounds,
             buckets=buckets, on_overflow=on_overflow, shard=shard,
             drain_mode=drain_mode, ring_depth=ring_depth,
-            pipeline_depth=pipeline_depth,
+            pipeline_depth=pipeline_depth, metrics=metrics,
         )
         if scheduler is not None:
             if tuple(scheduler.buckets) != self._rt.buckets:
@@ -114,6 +116,9 @@ class DetectorPool:
                 base_lut_every=cfg.lut_every_chunks,
                 vdd_top=self._rt.vdd_top,
             )
+        # one registry per pool: policy counters re-home onto the
+        # runtime's so a single emission carries both halves of the loop
+        self._sched.bind_metrics(self._rt.metrics)
         self._cfg = cfg
         # Migration targets decided during non-blocking polls: staging
         # seals+drains (it may wait on the reader), which poll(wait=False)
@@ -341,3 +346,13 @@ class DetectorPool:
         if callable(stats_fn):
             out.update(stats_fn())
         return out
+
+    def emit_metrics(self, kind: str = "pool") -> dict:
+        """Snapshot the pool's registry into one record, fold the
+        scheduler's policy counters in as extras, and fan it out to every
+        attached sink (``pool.metrics.attach(...)``).  Returns the record."""
+        extra = {"policy": self._sched.policy}
+        stats_fn = getattr(self._sched, "scheduler_stats", None)
+        if callable(stats_fn):
+            extra.update(stats_fn())
+        return self._rt.metrics.emit(kind, extra={"scheduler": extra})

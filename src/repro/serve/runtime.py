@@ -97,7 +97,6 @@ from __future__ import annotations
 import collections
 import queue
 import threading
-import time
 from typing import Optional
 
 import jax
@@ -106,6 +105,8 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
+from repro import obs as obs_mod
+from repro.obs.schema import POOL_BUCKET_STATS, POOL_STATS
 from repro.core import dvfs as dvfs_mod
 from repro.core import pipeline as pipeline_mod
 from repro.core import state as state_mod
@@ -279,7 +280,8 @@ class PoolRuntime:
                  shard: object = "auto",
                  drain_mode: str = "async",
                  ring_depth: int = 2,
-                 pipeline_depth: int = 2):
+                 pipeline_depth: int = 2,
+                 metrics: Optional[obs_mod.MetricsRegistry] = None):
         streaming_mod._check_streamable(cfg)
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
@@ -380,7 +382,6 @@ class PoolRuntime:
         # Applied at the start of the next pump pass; discarded by
         # disconnect (a reused slot must inherit nothing).
         self._staged: dict[int, tuple[dict, int]] = {}
-        self._migrations = 0
 
         # Donation keyed off the stacked state's actual placement (never
         # jax.default_backend()); a no-op on CPU-resident pools.
@@ -403,12 +404,7 @@ class PoolRuntime:
         self._spares: dict[int, collections.deque] = {}
         self._exec: dict[int, object] = {}      # K-block executor
         self._exec1: dict[int, object] = {}     # 1-round fast path (K > 1)
-        self._ring_count: dict[int, int] = {}   # live-ring occupancy mirror
-        self._dropped_dev: dict[int, int] = {}  # drops confirmed by fetches
-        self._dropped_pred: dict[int, int] = {} # predicted, not yet fetched
-        self._sealed_rounds: dict[int, int] = {}  # handed to reader, undrained
         self._inflight: dict[int, int] = {}       # sealed rings being fetched
-        self._last_drain_wait: dict[int, float] = {}  # s, last forced drain
         for b in buckets:
             self._rings[b] = self._make_ring(b)
             self._spares[b] = collections.deque(
@@ -418,33 +414,19 @@ class PoolRuntime:
             self._exec[b] = self._build_executor(b)
             if ring_rounds > 1:
                 self._exec1[b] = self._build_single_executor(b)
-            self._ring_count[b] = 0
-            self._dropped_dev[b] = 0
-            self._dropped_pred[b] = 0
-            self._sealed_rounds[b] = 0
             self._inflight[b] = 0
-            self._last_drain_wait[b] = 0.0
 
-        self._host_fetches = 0     # blocking result transfers (ring drains)
-        self._rounds_executed = 0
-        self._pump_drain_wait = 0.0  # s the pump spent on drains/seals
-        self._pump_forced_drains = 0  # mid-pump makes-room events
-        # H2D upload audit, per bucket (both executor paths account here;
-        # totals are the sums).  Per-bucket resolution is what the packing
-        # objective consumes: which bucket's slab is the fleet paying for.
-        self._h2d_slots_b = {b: 0 for b in buckets}  # slots incl. padding
-        self._h2d_valid_b = {b: 0 for b in buckets}  # valid events in them
-        # -- pump pipeline instrumentation ---------------------------------
+        # -- witnesses: every counter/gauge below lives in the metrics
+        # registry (repro.obs) — the single write path.  ``stats()`` /
+        # ``pool_stats()`` / Observation are thin exports of these handles;
+        # descriptions come from repro.obs.schema (one source of truth for
+        # docs, HELP text, and the golden-key tests).  Handles are bound
+        # once here so hot paths pay one locked add, no name resolution.
+        self._metrics = (metrics if metrics is not None
+                         else obs_mod.MetricsRegistry(namespace="pool"))
+        self._declare_metrics(buckets)
         self._pass_dispatches = 0  # blocks dispatched in the current pass
-        self._stage_total = 0      # blocks staged, ever
-        self._stage_overlapped = 0  # staged while a pass block was in flight
-        self._stage_time_s = 0.0   # wall time spent gathering/uploading
-        self._stage_hidden_s = 0.0  # stage wall time with device still busy
         self._busy_probe = None    # an output array of the last dispatch
-        self._ctrl_batched_writes = 0    # coalesced ctrl-leaf replaces
-        self._ctrl_actions_coalesced = 0  # knob actions folded into them
-        self._obs_rebuilds = 0     # LaneObservations built fresh
-        self._obs_reuses = 0       # LaneObservations served from cache
         # One pump at a time: _seal_ring can wait on the cv (releasing the
         # lock) AFTER chunks were popped into a pending block, so a second
         # concurrent pump could otherwise collect and execute LATER chunks
@@ -505,6 +487,64 @@ class PoolRuntime:
             )
 
         self._vrebase = jax.jit(_rebase)
+
+    # -- metrics ------------------------------------------------------------
+
+    def _declare_metrics(self, buckets: tuple) -> None:
+        """Declare every runtime witness on the registry and bind its
+        handle(s).  Pool-wide scalars are label-less metrics; per-bucket
+        tallies are one labeled metric each, bound per configured bucket.
+        ``dropped_rounds_predicted`` and ``ring_sealed_rounds`` are gauges
+        (drops move predicted -> confirmed on fetch; seals drain back
+        down); everything else only grows."""
+        reg = self._metrics
+        p, bk = POOL_STATS, POOL_BUCKET_STATS
+
+        def ctr(name):
+            return reg.counter(name, p[name])
+
+        self._m_host_fetches = ctr("host_fetches")
+        self._m_rounds_executed = ctr("rounds_executed")
+        self._m_drain_wait = ctr("pump_drain_wait_s")
+        self._m_forced_drains = ctr("pump_forced_drains")
+        self._m_stages = ctr("pump_stages")
+        self._m_stages_overlapped = ctr("pump_stages_overlapped")
+        self._m_stage_s = ctr("pump_stage_s")
+        self._m_stage_hidden_s = ctr("pump_stage_hidden_s")
+        self._m_ctrl_writes = ctr("ctrl_batched_writes")
+        self._m_ctrl_coalesced = ctr("ctrl_actions_coalesced")
+        self._m_obs_rebuilds = ctr("observation_rebuilds")
+        self._m_obs_reuses = ctr("observation_reuses")
+        self._m_migrations = ctr("migrations_total")
+
+        def per_bucket(metric):
+            return {b: metric.labels(bucket=b) for b in buckets}
+
+        lbl = ("bucket",)
+        self._m_h2d_slots = per_bucket(
+            reg.counter("h2d_event_slots", bk["h2d_event_slots"], lbl))
+        self._m_h2d_valid = per_bucket(
+            reg.counter("h2d_valid_events", bk["h2d_valid_events"], lbl))
+        self._m_ring_count = per_bucket(
+            reg.gauge("ring_rounds_buffered", bk["ring_rounds_buffered"],
+                      lbl))
+        self._m_sealed = per_bucket(
+            reg.gauge("ring_sealed_rounds", bk["ring_sealed_rounds"], lbl))
+        self._m_dropped_dev = per_bucket(
+            reg.counter("dropped_rounds_confirmed",
+                        p["dropped_rounds_confirmed"], lbl))
+        self._m_dropped_pred = per_bucket(
+            reg.gauge("dropped_rounds_predicted",
+                      "overflow drops predicted for undrained rounds", lbl))
+        self._m_last_drain_wait = per_bucket(
+            reg.gauge("last_drain_wait_s",
+                      "wall seconds of this bucket's last forced drain",
+                      lbl))
+
+    @property
+    def metrics(self) -> obs_mod.MetricsRegistry:
+        """The pool-scoped metrics registry (attach sinks here)."""
+        return self._metrics
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -778,11 +818,11 @@ class PoolRuntime:
     def host_fetches(self) -> int:
         """Blocking result transfers so far (one per ring drain; counted on
         the reader thread in async mode)."""
-        return self._host_fetches
+        return self._m_host_fetches.value()
 
     @property
     def rounds_executed(self) -> int:
-        return self._rounds_executed
+        return self._m_rounds_executed.value()
 
     def compile_cache_size(self) -> int:
         """Total executor executables across buckets and shapes (grows only
@@ -1079,7 +1119,7 @@ class PoolRuntime:
             ln.gen += 1           # bucket (and backlog-rounds basis) changed
             ln.migrations += 1
             ln.migration_log.append((ln.events_folded, old, new_bucket))
-            self._migrations += 1
+            self._m_migrations.inc()
 
     # -- control loop: observe -> decide -> actuate --------------------------
 
@@ -1100,7 +1140,7 @@ class PoolRuntime:
             cached = ln.obs_cache
             if cached is not None and cached[0] == ln.gen:
                 lob = cached[1]
-                self._obs_reuses += 1
+                self._m_obs_reuses.inc()
             else:
                 eps = state_mod.rate_estimate_eps(
                     ln.r_p1, ln.r_p2, self._cfg.dvfs_cfg
@@ -1115,17 +1155,19 @@ class PoolRuntime:
                     win=ln.r_win,
                 )
                 ln.obs_cache = (ln.gen, lob)
-                self._obs_rebuilds += 1
+                self._m_obs_rebuilds.inc()
             backlog[lob.bucket] += lob.backlog_rounds
             lanes.append(lob)
-        h2d_slots = sum(self._h2d_slots_b.values())
-        h2d_valid = sum(self._h2d_valid_b.values())
+        h2d_slots = sum(h.value() for h in self._m_h2d_slots.values())
+        h2d_valid = sum(h.value() for h in self._m_h2d_valid.values())
         return scheduler_mod.Observation(
             lanes=tuple(lanes),
             backlog_rounds=backlog,
-            reader_lag_rounds=dict(self._sealed_rounds),
-            drain_wait_s=self._pump_drain_wait,
-            last_drain_wait_s=dict(self._last_drain_wait),
+            reader_lag_rounds={b: self._m_sealed[b].value()
+                               for b in self._buckets},
+            drain_wait_s=float(self._m_drain_wait.value()),
+            last_drain_wait_s={b: float(self._m_last_drain_wait[b].value())
+                               for b in self._buckets},
             padding_ratio=(
                 1.0 - h2d_valid / h2d_slots if h2d_slots else 0.0
             ),
@@ -1133,8 +1175,8 @@ class PoolRuntime:
             h2d_valid_events=h2d_valid,
             h2d_padding_bytes=(h2d_slots - h2d_valid) * EVENT_SLOT_BYTES,
             h2d_by_bucket={
-                b: {"slots": self._h2d_slots_b[b],
-                    "valid": self._h2d_valid_b[b]}
+                b: {"slots": self._m_h2d_slots[b].value(),
+                    "valid": self._m_h2d_valid[b].value()}
                 for b in self._buckets
             },
             phys=self._phys,
@@ -1250,8 +1292,8 @@ class PoolRuntime:
             jnp.asarray(shd),
         ))
         self._ctrl_lut, self._ctrl_cap, self._ctrl_shed = lut, cap, shd
-        self._ctrl_batched_writes += 1
-        self._ctrl_actions_coalesced += len(writes)
+        self._m_ctrl_writes.inc()
+        self._m_ctrl_coalesced.inc(len(writes))
         for lane, ln, want in writes:
             self._commit_knobs(lane, ln, want, device_written=True)
 
@@ -1378,18 +1420,21 @@ class PoolRuntime:
             "migration_log": list(ln.migration_log),
             "migration_staged": lane in self._staged,
             "ring_capacity": self._ring_rounds,
-            "ring_rounds_buffered": self._ring_count[b],
-            "ring_sealed_rounds": self._sealed_rounds[b],
+            "ring_rounds_buffered": self._m_ring_count[b].value(),
+            "ring_sealed_rounds": self._m_sealed[b].value(),
             "ring_dropped_rounds": (
-                self._dropped_dev[b] + self._dropped_pred[b]
+                self._m_dropped_dev[b].value()
+                + self._m_dropped_pred[b].value()
             ),
             # -- the ladder's per-lane inputs and outputs (ISSUE 6):
             # how far behind this lane runs (re-chunk backlog depth +
             # reader lag on its bucket + the bucket's last forced-drain
             # wait) and where its degradation knobs currently sit.
             "backlog_rounds": int(ln.buf_ts.size) // b,
-            "reader_lag_rounds": self._sealed_rounds[b],
-            "last_drain_wait_s": self._last_drain_wait[b],
+            "reader_lag_rounds": self._m_sealed[b].value(),
+            # wall-time witnesses export as float even before the first
+            # drain (fresh gauges hold int 0) — the legacy dicts did
+            "last_drain_wait_s": float(self._m_last_drain_wait[b].value()),
             "qos": ln.qos,
             "ladder_tier": ln.tier,
             "ctrl_lut_every": ln.knob_lut_every,
@@ -1433,8 +1478,14 @@ class PoolRuntime:
         with self._lock:
             self._check_open()
             exe = self.compile_cache_sizes()
-            h2d_slots = sum(self._h2d_slots_b.values())
-            h2d_valid = sum(self._h2d_valid_b.values())
+            h2d_slots = sum(h.value() for h in self._m_h2d_slots.values())
+            h2d_valid = sum(h.value() for h in self._m_h2d_valid.values())
+            stages = self._m_stages.value()
+            overlapped = self._m_stages_overlapped.value()
+            dropped_pred = sum(h.value()
+                               for h in self._m_dropped_pred.values())
+            dropped_dev = sum(h.value()
+                              for h in self._m_dropped_dev.values())
             return {
                 "capacity": self._capacity,
                 "active": len(self.active_lanes),
@@ -1446,29 +1497,30 @@ class PoolRuntime:
                 "pipeline_depth": self._pipeline_depth,
                 "on_overflow": self._overflow,
                 "drain_mode": self._drain_mode,
-                "host_fetches": self._host_fetches,
-                "rounds_executed": self._rounds_executed,
-                "pump_drain_wait_s": self._pump_drain_wait,
-                "pump_forced_drains": self._pump_forced_drains,
+                "host_fetches": self._m_host_fetches.value(),
+                "rounds_executed": self._m_rounds_executed.value(),
+                "pump_drain_wait_s": float(self._m_drain_wait.value()),
+                "pump_forced_drains": self._m_forced_drains.value(),
                 # pipelined-pump witnesses: how many block stages began
                 # while an earlier block of the same pass was already
                 # dispatched (structural, deterministic at fixed sizes),
                 # plus the wall time staging took and how much of it ran
                 # while the device still reported the last dispatch busy
-                "pump_stages": self._stage_total,
-                "pump_stages_overlapped": self._stage_overlapped,
+                "pump_stages": stages,
+                "pump_stages_overlapped": overlapped,
                 "pump_stage_overlap_ratio": (
-                    self._stage_overlapped / self._stage_total
-                    if self._stage_total else 0.0
+                    overlapped / stages if stages else 0.0
                 ),
-                "pump_stage_s": self._stage_time_s,
-                "pump_stage_hidden_s": self._stage_hidden_s,
-                "ctrl_batched_writes": self._ctrl_batched_writes,
-                "ctrl_actions_coalesced": self._ctrl_actions_coalesced,
-                "observation_rebuilds": self._obs_rebuilds,
-                "observation_reuses": self._obs_reuses,
-                "reader_lag_rounds": sum(self._sealed_rounds.values()),
-                "migrations_total": self._migrations,
+                "pump_stage_s": float(self._m_stage_s.value()),
+                "pump_stage_hidden_s": float(self._m_stage_hidden_s.value()),
+                "ctrl_batched_writes": self._m_ctrl_writes.value(),
+                "ctrl_actions_coalesced": self._m_ctrl_coalesced.value(),
+                "observation_rebuilds": self._m_obs_rebuilds.value(),
+                "observation_reuses": self._m_obs_reuses.value(),
+                "reader_lag_rounds": sum(
+                    h.value() for h in self._m_sealed.values()
+                ),
+                "migrations_total": self._m_migrations.value(),
                 "migrations_staged": len(self._staged),
                 "h2d_event_slots": h2d_slots,
                 "h2d_valid_events": h2d_valid,
@@ -1481,11 +1533,8 @@ class PoolRuntime:
                 "h2d_padding_bytes": (
                     (h2d_slots - h2d_valid) * EVENT_SLOT_BYTES
                 ),
-                "dropped_rounds_total": (
-                    sum(self._dropped_dev.values())
-                    + sum(self._dropped_pred.values())
-                ),
-                "dropped_rounds_confirmed": sum(self._dropped_dev.values()),
+                "dropped_rounds_total": dropped_dev + dropped_pred,
+                "dropped_rounds_confirmed": dropped_dev,
                 "shed_events_total": sum(
                     ln.shed_events for ln in self._lanes if ln is not None
                 ),
@@ -1502,13 +1551,15 @@ class PoolRuntime:
                             for ln in self._lanes
                             if ln is not None and ln.bucket == b
                         ),
-                        "ring_rounds_buffered": self._ring_count[b],
-                        "ring_sealed_rounds": self._sealed_rounds[b],
+                        "ring_rounds_buffered":
+                            self._m_ring_count[b].value(),
+                        "ring_sealed_rounds": self._m_sealed[b].value(),
                         "ring_dropped_rounds": (
-                            self._dropped_dev[b] + self._dropped_pred[b]
+                            self._m_dropped_dev[b].value()
+                            + self._m_dropped_pred[b].value()
                         ),
-                        "h2d_event_slots": self._h2d_slots_b[b],
-                        "h2d_valid_events": self._h2d_valid_b[b],
+                        "h2d_event_slots": self._m_h2d_slots[b].value(),
+                        "h2d_valid_events": self._m_h2d_valid[b].value(),
                         "executables": exe[b],
                     }
                     for b in self._buckets
@@ -1661,7 +1712,7 @@ class PoolRuntime:
         """
         k = self._ring_rounds
         n = len(rounds)
-        t0 = time.perf_counter()
+        t0 = obs_mod.timer()
         up = self._stager.put if self._stager is not None else jnp.asarray
         if n == 1 and bucket in self._exec1:
             rnd = rounds[0]
@@ -1681,7 +1732,7 @@ class PoolRuntime:
                 bucket, n, True, chunks, up(rnd.mask), up(rnd.n_valid),
                 None, int(rnd.n_valid.sum()),
             )
-            self._h2d_slots_b[bucket] += self._phys * bucket
+            self._m_h2d_slots[bucket].inc(self._phys * bucket)
         else:
             xy = np.zeros((k, self._phys, bucket, 2), np.int32)
             ts = np.zeros((k, self._phys, bucket), np.int32)
@@ -1710,11 +1761,11 @@ class PoolRuntime:
                 jnp.asarray(n_valid), jnp.asarray(round_active),
                 int(n_valid.sum()),
             )
-            self._h2d_slots_b[bucket] += k * self._phys * bucket
-        self._h2d_valid_b[bucket] += blk.n_valid_sum
-        dt = time.perf_counter() - t0
-        self._stage_total += 1
-        self._stage_time_s += dt
+            self._m_h2d_slots[bucket].inc(k * self._phys * bucket)
+        self._m_h2d_valid[bucket].inc(blk.n_valid_sum)
+        dt = obs_mod.timer() - t0
+        self._m_stages.inc()
+        self._m_stage_s.inc(dt)
         if stage_ahead and self._pass_dispatches > 0:
             # structural overlap witness: this stage began with an earlier
             # block staged-but-undispatched in the deque AND a block of
@@ -1722,10 +1773,10 @@ class PoolRuntime:
             # of the dispatch point, concurrent with device compute.  At
             # depth 1 the deque is always empty here, so the serial pump
             # reports 0 by construction.
-            self._stage_overlapped += 1
+            self._m_stages_overlapped.inc()
             if self._busy_probe is not None and \
                     not self._busy_probe.is_ready():
-                self._stage_hidden_s += dt
+                self._m_stage_hidden_s.inc(dt)
         return blk
 
     def _dispatch_block(self, blk: _StagedBlock) -> None:
@@ -1735,13 +1786,14 @@ class PoolRuntime:
         wait, if any, is for a spare ring, not for PCIe) and launch the
         staged block's executor."""
         bucket, k, n = blk.bucket, self._ring_rounds, blk.n
-        if self._overflow == "drain" and self._ring_count[bucket] + n > k:
-            t0 = time.perf_counter()
+        if self._overflow == "drain" and \
+                self._m_ring_count[bucket].value() + n > k:
+            t0 = obs_mod.timer()
             self._drain_bucket(bucket, wait=False)
-            w = time.perf_counter() - t0
-            self._pump_drain_wait += w
-            self._last_drain_wait[bucket] = w
-            self._pump_forced_drains += 1
+            w = obs_mod.timer() - t0
+            self._m_drain_wait.inc(w)
+            self._m_last_drain_wait[bucket].set(w)
+            self._m_forced_drains.inc()
 
         if blk.single:
             self._states, self._rings[bucket] = self._exec1[bucket](
@@ -1753,10 +1805,10 @@ class PoolRuntime:
                 self._states, self._rings[bucket], blk.chunks,
                 blk.mask, blk.n_valid, blk.round_active,
             )
-        c = self._ring_count[bucket]
-        self._ring_count[bucket] = min(c + n, k)
-        self._dropped_pred[bucket] += max(0, c + n - k)
-        self._rounds_executed += n
+        c = self._m_ring_count[bucket].value()
+        self._m_ring_count[bucket].set(min(c + n, k))
+        self._m_dropped_pred[bucket].add(max(0, c + n - k))
+        self._m_rounds_executed.inc(n)
         self._pass_dispatches += 1
         # any output array works as the device-busy probe for the next
         # stage's hidden-time accounting (is_ready() never blocks)
@@ -1784,12 +1836,12 @@ class PoolRuntime:
     def _drain_ring(self, bucket: int) -> None:
         """Sync mode: ONE blocking fetch of the live ring on the calling
         thread, then distribute and mark the ring empty."""
-        if self._ring_count[bucket] == 0:
+        if self._m_ring_count[bucket].value() == 0:
             return
         ring = jax.device_get(self._rings[bucket])
-        self._host_fetches += 1
+        self._m_host_fetches.inc()
         self._distribute(bucket, ring)
-        self._ring_count[bucket] = 0
+        self._m_ring_count[bucket].set(0)
         self._rings[bucket] = self._reset_ring(self._rings[bucket])
 
     def _seal_ring(self, bucket: int, *, block: bool = True) -> None:
@@ -1800,7 +1852,7 @@ class PoolRuntime:
         condition variable — releasing the lock so the reader can
         distribute and recycle — or, with ``block=False``, simply returns
         (the live ring keeps accumulating; a later poll seals it)."""
-        if self._ring_count[bucket] == 0:
+        if self._m_ring_count[bucket].value() == 0:
             return
         while not self._spares[bucket]:
             if not block:
@@ -1811,13 +1863,13 @@ class PoolRuntime:
             # poll, or the pump making room) may have sealed meanwhile —
             # sealing an empty ring would cost a pointless blocking fetch
             # and inflate the rounds-per-fetch witness
-            if self._ring_count[bucket] == 0:
+            if self._m_ring_count[bucket].value() == 0:
                 return
         sealed = self._rings[bucket]
         self._rings[bucket] = self._spares[bucket].popleft()
-        self._sealed_rounds[bucket] += self._ring_count[bucket]
+        self._m_sealed[bucket].add(self._m_ring_count[bucket].value())
         self._inflight[bucket] += 1
-        self._ring_count[bucket] = 0
+        self._m_ring_count[bucket].set(0)
         self._sealed_q.put((bucket, sealed))
 
     def _wait_bucket_drained(self, bucket: int) -> None:
@@ -1851,12 +1903,12 @@ class PoolRuntime:
                 return
             with self._cv:
                 try:
-                    self._host_fetches += 1
+                    self._m_host_fetches.inc()
                     self._distribute(bucket, host)
                     self._spares[bucket].append(self._reset_ring(sealed))
-                    self._sealed_rounds[bucket] = max(
-                        0, self._sealed_rounds[bucket] - int(host.count)
-                    )
+                    self._m_sealed[bucket].set(max(
+                        0, self._m_sealed[bucket].value() - int(host.count)
+                    ))
                     self._inflight[bucket] -= 1
                 except BaseException as e:
                     self._reader_exc = e
@@ -1893,5 +1945,5 @@ class PoolRuntime:
         # resets its dropped counter when recycled, so per-fetch counts are
         # disjoint and the two host tallies always sum to the truth.)
         d = int(ring.dropped)
-        self._dropped_dev[bucket] += d
-        self._dropped_pred[bucket] -= d
+        self._m_dropped_dev[bucket].inc(d)
+        self._m_dropped_pred[bucket].add(-d)

@@ -94,6 +94,9 @@ import dataclasses
 import math
 from typing import NamedTuple, Optional
 
+from repro import obs as obs_mod
+from repro.obs.schema import POLICY_STATS
+
 __all__ = [
     "LaneObservation",
     "Observation",
@@ -213,6 +216,13 @@ class StaticScheduler:
 
     def forget(self, lane: int) -> None:
         """Drop any per-lane observation state (slot recycled)."""
+
+    def bind_metrics(self, registry: obs_mod.MetricsRegistry) -> None:
+        """Re-home this policy's witness counters onto ``registry`` (the
+        pool's, at façade wiring time) so one emission carries the data
+        plane and the control plane alike.  Static/adaptive own no
+        counters; policies that do re-declare their handles there,
+        carrying any pre-bind counts forward."""
 
     def scheduler_stats(self) -> dict:
         """Policy-side counters merged into ``pool_stats()``."""
@@ -436,8 +446,22 @@ class PackScheduler(StaticScheduler):
         self.patience = int(patience)
         self.min_gain = float(min_gain)
         self._streak = 0
-        self._pack_moves = 0
-        self._saved_slots = 0
+        self._declare_metrics(obs_mod.MetricsRegistry(namespace="policy"))
+
+    def _declare_metrics(self, reg: obs_mod.MetricsRegistry) -> None:
+        self._m_pack_moves = reg.counter(
+            "pack_moves", POLICY_STATS["pack_moves"])
+        self._m_saved_slots = reg.counter(
+            "pack_saved_slots", POLICY_STATS["pack_saved_slots"])
+
+    def bind_metrics(self, registry: obs_mod.MetricsRegistry) -> None:
+        moves = self._m_pack_moves.value()
+        saved = self._m_saved_slots.value()
+        self._declare_metrics(registry)
+        if moves:
+            self._m_pack_moves.inc(moves)
+        if saved:
+            self._m_saved_slots.inc(saved)
 
     def decide(self, obs: Observation) -> tuple:
         moves, saved, _before = plan_pack(obs, min_gain=self.min_gain)
@@ -448,15 +472,15 @@ class PackScheduler(StaticScheduler):
         if self._streak < self.patience:
             return ()
         self._streak = 0
-        self._pack_moves += len(moves)
-        self._saved_slots += int(saved)
+        self._m_pack_moves.inc(len(moves))
+        self._m_saved_slots.inc(int(saved))
         return tuple(Action(lane=lane, migrate=dst)
                      for lane, _src, dst in moves)
 
     def scheduler_stats(self) -> dict:
         return {
-            "pack_moves": self._pack_moves,
-            "pack_saved_slots": self._saved_slots,
+            "pack_moves": self._m_pack_moves.value(),
+            "pack_saved_slots": self._m_saved_slots.value(),
         }
 
 
@@ -555,12 +579,34 @@ class DegradationLadder(StaticScheduler):
         self._base = max(1, int(base_lut_every))
         self._top = max(0, int(vdd_top))
         self._max_level = sum(int(m) for _, m in self.ladder.classes)
-        self._level = 0
+        self._level = 0          # control state; mirrored to the gauge
         self._hot = 0            # consecutive observations above hi_rounds
         self._cool = 0           # consecutive observations below lo_rounds
-        self._transitions = 0    # lane tier moves actuated (the CI witness)
         self._pack_home = {}     # lane -> bucket it lived in before packing
-        self._pack_moves = 0     # pack/un-pack migrations emitted
+        self._declare_metrics(obs_mod.MetricsRegistry(namespace="policy"))
+
+    def _declare_metrics(self, reg: obs_mod.MetricsRegistry) -> None:
+        self._m_level = reg.gauge(
+            "ladder_level", POLICY_STATS["ladder_level"])
+        self._m_max_level = reg.gauge(
+            "ladder_max_level", POLICY_STATS["ladder_max_level"])
+        self._m_level.set(self._level)
+        self._m_max_level.set(self._max_level)
+        # lane tier moves actuated (the CI witness)
+        self._m_transitions = reg.counter(
+            "ladder_transitions", POLICY_STATS["ladder_transitions"])
+        # pack/un-pack migrations emitted
+        self._m_pack_moves = reg.counter(
+            "pack_moves", POLICY_STATS["pack_moves"])
+
+    def bind_metrics(self, registry: obs_mod.MetricsRegistry) -> None:
+        trans = self._m_transitions.value()
+        moves = self._m_pack_moves.value()
+        self._declare_metrics(registry)
+        if trans:
+            self._m_transitions.inc(trans)
+        if moves:
+            self._m_pack_moves.inc(moves)
 
     @property
     def level(self) -> int:
@@ -604,11 +650,13 @@ class DegradationLadder(StaticScheduler):
             self._hot, self._cool = self._hot + 1, 0
             if self._hot >= lad.patience and self._level < self._max_level:
                 self._level += 1
+                self._m_level.set(self._level)
                 self._hot = 0
         elif pressure < lad.lo_rounds:
             self._cool, self._hot = self._cool + 1, 0
             if self._cool >= lad.recover_patience and self._level > 0:
                 self._level -= 1
+                self._m_level.set(self._level)
                 self._cool = 0
         else:
             self._hot = self._cool = 0     # dead band: both streaks reset
@@ -623,7 +671,7 @@ class DegradationLadder(StaticScheduler):
                 lane=lob.lane, lut_every=lut_every, vdd_cap=vdd_cap,
                 shed=shed, tier=tier,
             ))
-            self._transitions += 1
+            self._m_transitions.inc()
 
         # bottom rung: placement.  Knobs exhausted (pinned at max level)
         # -> pack lanes into fewer buckets to stop paying H2D padding;
@@ -635,7 +683,7 @@ class DegradationLadder(StaticScheduler):
                 for lane, src, dst in moves:
                     self._pack_home.setdefault(lane, src)
                     actions.append(Action(lane=lane, migrate=dst))
-                    self._pack_moves += 1
+                    self._m_pack_moves.inc()
             elif self._level == 0 and self._pack_home:
                 cur = {lob.lane: lob.bucket for lob in obs.lanes}
                 for lane, home in sorted(self._pack_home.items()):
@@ -644,7 +692,7 @@ class DegradationLadder(StaticScheduler):
                     if b is None or b == home:
                         continue     # gone, or already back where it was
                     actions.append(Action(lane=lane, migrate=home))
-                    self._pack_moves += 1
+                    self._m_pack_moves.inc()
         return tuple(actions)
 
     def forget(self, lane: int) -> None:
@@ -656,8 +704,8 @@ class DegradationLadder(StaticScheduler):
         return {
             "ladder_level": self._level,
             "ladder_max_level": self._max_level,
-            "ladder_transitions": self._transitions,
-            "pack_moves": self._pack_moves,
+            "ladder_transitions": self._m_transitions.value(),
+            "pack_moves": self._m_pack_moves.value(),
         }
 
 

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core import dvfs as dvfs_mod
 from repro.core import hwmodel
+from repro.obs import schema as obs_schema
 from repro.core import pipeline as pipeline_mod
 from repro.core import state as state_mod
 from repro.core import stcf as stcf_mod
@@ -491,7 +492,7 @@ class StreamingDetector:
              self._state.latency_ns, self._state.rate.prev1,
              self._state.rate.prev2)
         )
-        return {
+        out = {
             "n_events": self.n_events,
             "n_chunks": self.n_chunks,
             "chunk": self._cfg.chunk,
@@ -507,3 +508,7 @@ class StreamingDetector:
             "device_energy_pj": float(dev_energy),
             "device_latency_ns": float(dev_latency),
         }
+        # the export and its schema declaration may not drift apart —
+        # repro.obs.schema is the one source of truth for these keys
+        assert out.keys() == obs_schema.SESSION_STATS.keys()
+        return out

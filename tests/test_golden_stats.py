@@ -1,0 +1,150 @@
+"""Golden-key stability: the registry-backed stats exports must stay
+byte-compatible with the pre-refactor dict exports.
+
+``tests/data/golden_stats.json`` was captured from the deterministic
+replay below *before* ``stats()``/``pool_stats()`` moved onto the
+``repro.obs`` metrics registry.  These tests re-run the identical replay
+and assert the exports reproduce the golden key sets AND values exactly
+(wall-clock witness keys excluded from the value comparison — they are
+the only non-deterministic fields).
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import pipeline
+from repro.events import synthetic
+from repro.obs import schema as obs_schema
+from repro.serve import DetectorPool
+from repro.serve.streaming import StreamingDetector
+
+SEED = 11
+N_LANES = 3
+RATES = [40] * 3 + [300] * 5
+GOLDEN = os.path.join(os.path.dirname(__file__), "data",
+                      "golden_stats.json")
+
+
+def _jsonify(obj):
+    """Round-trip through JSON so live exports normalize exactly the way
+    the golden capture did (tuples -> lists, numpy scalars -> python)."""
+    def default(o):
+        if isinstance(o, np.integer):
+            return int(o)
+        if isinstance(o, np.floating):
+            return float(o)
+        if isinstance(o, np.ndarray):
+            return o.tolist()
+        raise TypeError(type(o))
+    return json.loads(json.dumps(obj, sort_keys=True, default=default))
+
+
+def _assert_same(golden, live, path=""):
+    """Deep equality with identical key sets; wall-time witness values
+    are key-checked but not value-compared."""
+    assert type(golden) is type(live), f"{path}: {type(golden)} vs {type(live)}"
+    if isinstance(golden, dict):
+        assert golden.keys() == live.keys(), (
+            f"{path}: key sets differ "
+            f"(+{live.keys() - golden.keys()} -{golden.keys() - live.keys()})")
+        for k in golden:
+            if k in obs_schema.WALL_TIME_KEYS:
+                continue
+            _assert_same(golden[k], live[k], f"{path}.{k}")
+    elif isinstance(golden, list):
+        assert len(golden) == len(live), f"{path}: length differs"
+        for i, (g, v) in enumerate(zip(golden, live)):
+            _assert_same(g, v, f"{path}[{i}]")
+    else:
+        assert golden == live, f"{path}: {golden!r} != {live!r}"
+
+
+@pytest.fixture(scope="module")
+def replay():
+    cfg = pipeline.PipelineConfig(chunk=64, lut_every_chunks=2)
+    half = cfg.dvfs_cfg.half_us
+    streams = [synthetic.ramp_stream(RATES, half, seed=SEED + s)
+               for s in range(N_LANES)]
+    pool = DetectorPool(cfg, capacity=N_LANES, ring_rounds=4,
+                        buckets=(64, 256), policy="adaptive",
+                        migrate_patience=2, drain_mode="sync",
+                        pipeline_depth=2)
+    lanes = {i: pool.connect(seed=SEED + i, chunk=64)
+             for i in range(N_LANES)}
+    pool.set_lane_control(lanes[1], lut_every=3, shed=True)
+    for j in range(len(RATES)):
+        for i, lane in lanes.items():
+            st = streams[i]
+            m = (st.ts // half) == j
+            pool.feed(lane, st.xy[m], st.ts[m])
+        pool.pump()
+        for lane in lanes.values():
+            pool.poll(lane)
+    pool.flush(lanes[2])
+    lane_stats = {str(i): pool.stats(lanes[i]) for i in range(N_LANES)}
+    ps = pool.pool_stats()
+    snap = pool.metrics.snapshot()
+    compiled_once = pool.executors_compiled_once()
+    pool.close()
+
+    det = StreamingDetector(cfg, seed=SEED)
+    st = streams[0]
+    det.feed(st.xy, st.ts)
+    det.flush()
+    ss = det.stats()
+    return lane_stats, ps, ss, snap, compiled_once
+
+
+@pytest.fixture(scope="module")
+def golden():
+    with open(GOLDEN) as f:
+        return json.load(f)
+
+
+def test_compiled_once_on_replay(replay):
+    assert replay[4]
+
+
+def test_lane_stats_golden(replay, golden):
+    live = _jsonify(replay[0])
+    _assert_same(golden["lane_stats"], live, "lane_stats")
+    for i, st in live.items():
+        assert st.keys() == obs_schema.LANE_STATS.keys(), i
+
+
+def test_pool_stats_golden(replay, golden):
+    ps = dict(replay[1])
+    # per-bucket sub-dicts are int-keyed live, str-keyed once JSON'd
+    ps["buckets"] = {str(b): d for b, d in ps["buckets"].items()}
+    live = _jsonify(ps)
+    _assert_same(golden["pool_stats"], live, "pool_stats")
+    assert live.keys() == obs_schema.POOL_STATS.keys()
+    for b, d in live["buckets"].items():
+        assert d.keys() == obs_schema.POOL_BUCKET_STATS.keys(), b
+
+
+def test_session_stats_golden(replay, golden):
+    live = _jsonify(replay[2])
+    _assert_same(golden["session_stats"], live, "session_stats")
+    assert live.keys() == obs_schema.SESSION_STATS.keys()
+
+
+def test_registry_snapshot_agrees_with_pool_stats(replay):
+    """pool_stats() is a thin export of registry handles — the raw
+    registry snapshot must carry identical numbers."""
+    _, ps, _, snap, _ = replay
+    for name in ("host_fetches", "rounds_executed", "migrations_total",
+                 "pump_stages", "pump_stages_overlapped",
+                 "pump_forced_drains", "ctrl_batched_writes",
+                 "ctrl_actions_coalesced", "observation_rebuilds",
+                 "observation_reuses"):
+        assert snap[name] == ps[name], name
+    for b, d in ps["buckets"].items():
+        assert snap[f"h2d_event_slots{{bucket={b}}}"] == d["h2d_event_slots"]
+        assert snap[f"h2d_valid_events{{bucket={b}}}"] == d["h2d_valid_events"]
+        assert snap[f"ring_rounds_buffered{{bucket={b}}}"] == \
+            d["ring_rounds_buffered"]
+        assert snap[f"ring_sealed_rounds{{bucket={b}}}"] == \
+            d["ring_sealed_rounds"]

@@ -1,0 +1,58 @@
+"""Fleet SLO scenarios (``benchmarks/scenarios.py``): smoke-size runs
+must emit their SLO rows through the sinks, keep the compile-once
+invariant, and keep the structural control-plane witnesses nonzero."""
+import sys
+
+import pytest
+
+sys.path.insert(0, ".")  # benchmarks/ is a top-level package in the repo
+
+from benchmarks import scenarios  # noqa: E402
+
+
+def test_scenario_registry_is_complete():
+    assert set(scenarios.SCENARIOS) == set(scenarios._FNS)
+    assert len(scenarios.SCENARIOS) >= 5
+
+
+def test_flapping_scenario_slo_rows(tmp_path):
+    out = str(tmp_path / "slo.jsonl")
+    rows = scenarios.rows(smoke=True, jsonl_out=out, only=("flapping",))
+    names = {n for n, _, _ in rows}
+    assert "scenario_flapping_slo_p99_round_ms" in names
+    assert "scenario_flapping_slo_drop_rate" in names
+    vals = {n: v for n, _, v in rows}
+    # membership churn is data: executors compiled once, nothing dropped
+    assert vals["scenario_flapping_slo_compile_once"] == 1.0
+    assert vals["scenario_flapping_slo_drop_rate"] == 0.0
+    assert vals["scenario_flapping_slo_flaps"] > 0
+
+    from repro.obs import read_jsonl
+    recs = read_jsonl(out)
+    assert len(recs) == 1
+    rec = recs[0]
+    assert rec["kind"] == "slo" and rec["scenario"] == "flapping"
+    assert rec["metrics"]["slo_compile_once"] == 1.0
+    assert rec["metrics"]["round_latency_s"] > 0  # histogram count
+
+
+def test_flash_crowd_scenario_actuates_ladder(tmp_path):
+    rows = scenarios.rows(smoke=True, only=("flash_crowd",))
+    vals = {n: v for n, _, v in rows}
+    # the gated structural witness: zero transitions means the ladder
+    # stopped observing, deciding, or actuating under overload
+    assert vals["scenario_flash_crowd_slo_transitions"] > 0
+    assert vals["scenario_flash_crowd_slo_shed_rate"] > 0
+    assert vals["scenario_flash_crowd_slo_drop_rate"] == 0.0
+
+
+@pytest.mark.slow
+def test_all_scenarios_smoke(tmp_path):
+    out = str(tmp_path / "slo.jsonl")
+    rows = scenarios.rows(smoke=True, jsonl_out=out)
+    names = {n for n, _, _ in rows}
+    for s in scenarios.SCENARIOS:
+        assert any(n.startswith(f"scenario_{s}_slo_") for n in names), s
+    vals = {n: v for n, _, v in rows}
+    assert vals["scenario_diurnal_slo_migrations"] > 0
+    assert vals["scenario_hetero_mix_slo_pack_moves"] > 0
