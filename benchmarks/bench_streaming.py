@@ -32,7 +32,17 @@ Rows per pool size K in {1, 4, 16}:
     win appears from multi-camera pools up (pool4/pool16); a 1-lane CPU
     pool can cross over, since its "fetch" is a memcpy while the thread
     handoff is real — on accelerators the fetch is PCIe-bound and async
-    wins outright.
+    wins outright.  ``poolK_burst_drain_wait_compact_ms`` re-runs the
+    sync burst with ``readout="compact"`` (ISSUE 10): the inline fetch
+    moves packed kept-corner records instead of dense slabs.
+  * ``poolK_d2h_bytes_per_fetch_{dense,compact}`` / ``poolK_d2h_bytes_ratio``
+    — the ISSUE 10 readout-diet witness on a sparse-corner fleet
+    (noise-dominated streams, the regime device-side compaction targets):
+    result bytes per blocking D2H fetch under each readout, and their
+    ratio (~``cap/chunk`` at the ``chunk // 8`` default cap plus cursor
+    overhead; gated lower-is-better by ``--check-regression``, must stay
+    <= 0.25).  Structural shape math at fixed sizes, so it gates cleanly
+    on CPU CI.
   * ``poolK_sharded_events_per_s`` — the lane-sharded pool across local
     devices; on a single-device host the row is reported with a
     ``_skipped`` suffix (derived 0) instead of crashing.
@@ -146,19 +156,24 @@ def _run_pool(cfg, streams, *, ring_rounds: int, shard="auto",
     return dt, np.asarray(lat), fetches, rounds
 
 
-def _run_burst(cfg, streams, *, ring_rounds: int, drain_mode: str = "sync"):
+def _run_burst(cfg, streams, *, ring_rounds: int, drain_mode: str = "sync",
+               readout: str = "dense"):
     """Backlog burst: feed every stream fully, then pump once — the regime
     where the ring's K-rounds-per-fetch contract is fully visible (the
     latency loop above polls every round-trip, so its fetch ratio is bounded
     by the arrival cadence, not the ring depth).  Also returns the pump
     thread's drain wait — the time-to-next-round cost the async reader
-    removes."""
+    removes — and the D2H result bytes the drains fetched (ISSUE 10:
+    ``readout="compact"`` fetches packed kept-corner records instead of
+    dense slabs)."""
     k = len(streams)
     pool = DetectorPool(cfg, capacity=k, ring_rounds=ring_rounds,
-                        drain_mode=drain_mode)
+                        drain_mode=drain_mode, readout=readout)
     pool.warmup(streams[0].xy, streams[0].ts)  # counters are steady-state
     fetches0, rounds0 = pool.host_fetches, pool.rounds_executed
-    dw0 = pool.pool_stats()["pump_drain_wait_s"]  # exclude warm drains
+    ps0 = pool.pool_stats()                    # exclude warm drains
+    dw0 = ps0["pump_drain_wait_s"]
+    d2h0 = ps0["d2h_bytes"]
     lanes = {i: pool.connect(seed=SEED + i) for i in range(k)}
     for i, lane in lanes.items():
         pool.feed(lane, streams[i].xy, streams[i].ts)
@@ -169,9 +184,11 @@ def _run_burst(cfg, streams, *, ring_rounds: int, drain_mode: str = "sync"):
     dt = time.perf_counter() - t0
     rounds = pool.rounds_executed - rounds0
     fetches = pool.host_fetches - fetches0
-    drain_wait = pool.pool_stats()["pump_drain_wait_s"] - dw0
+    ps = pool.pool_stats()
+    drain_wait = ps["pump_drain_wait_s"] - dw0
+    d2h_bytes = ps["d2h_bytes"] - d2h0
     pool.close()
-    return dt, rounds, fetches, drain_wait
+    return dt, rounds, fetches, drain_wait, d2h_bytes
 
 
 def _run_ramp(cfg, k, *, policy, rates):
@@ -439,18 +456,52 @@ def rows(smoke: bool = False):
 
         # backlog burst: rounds-per-fetch hits the ring depth (K -> 1)
         for tag, rr in ((f"pool{k}", 1), (f"pool{k}_ring", RING_ROUNDS)):
-            _, rounds, fetches, _ = _run_burst(cfg, streams, ring_rounds=rr)
+            _, rounds, fetches, _, _ = _run_burst(cfg, streams,
+                                                  ring_rounds=rr)
             out.append((f"{tag}_burst_rounds_per_fetch", 0.0,
                         rounds / max(fetches, 1)))
 
         # drain-wait contrast: burst through a 2-slot ring so every other
         # block must make room first; sync fetches inline, async swaps
         for mode in ("sync", "async"):
-            _, _, _, dw = _run_burst(
+            _, _, _, dw, _ = _run_burst(
                 cfg, streams, ring_rounds=DRAIN_WAIT_RING, drain_mode=mode
             )
             out.append((f"pool{k}_burst_drain_wait_{mode}_ms", 0.0,
                         dw * 1e3))
+        # same burst with the compact readout (ISSUE 10): the inline sync
+        # fetch now moves packed records instead of dense slabs, so this
+        # row reads against ..._drain_wait_sync_ms
+        _, _, _, dw, _ = _run_burst(
+            cfg, streams, ring_rounds=DRAIN_WAIT_RING, drain_mode="sync",
+            readout="compact",
+        )
+        out.append((f"pool{k}_burst_drain_wait_compact_ms", 0.0, dw * 1e3))
+
+        # D2H readout diet (ISSUE 10): result bytes per blocking fetch on
+        # a sparse-corner fleet (noise-dominated streams keep few events,
+        # the regime the compaction targets), dense vs compact.  The
+        # bytes-per-fetch rows and their ratio are structural — shape
+        # math at fixed sizes, not wall time — and the ratio is gated by
+        # --check-regression (must stay ~cap/chunk, i.e. <= 0.25).
+        sparse_streams = [
+            synthetic.shapes_stream(duration_us=duration,
+                                    signal_rate_per_us=0.02,
+                                    noise_rate_per_us=0.25,
+                                    seed=SEED + 32 + s)
+            for s in range(k)
+        ]
+        per_fetch = {}
+        for ro in ("dense", "compact"):
+            _, _, fetches, _, d2h = _run_burst(
+                cfg, sparse_streams, ring_rounds=DRAIN_WAIT_RING,
+                drain_mode="sync", readout=ro,
+            )
+            per_fetch[ro] = d2h / max(fetches, 1)
+            out.append((f"pool{k}_d2h_bytes_per_fetch_{ro}", 0.0,
+                        per_fetch[ro]))
+        out.append((f"pool{k}_d2h_bytes_ratio", 0.0,
+                    per_fetch["compact"] / max(per_fetch["dense"], 1.0)))
 
         # lane-sharded pool: needs >1 local device; report, don't crash
         if single_device:

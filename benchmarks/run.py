@@ -21,9 +21,10 @@ baseline JSON and the process exits non-zero on a regression.
     ``*_fetches_per_round`` lower-is-better, the ISSUE 5 migration
     witnesses ``*_migration_count`` / ``*_migration_padding_saved_ratio``,
     the ISSUE 6 overload witness ``*_overload_ladder_transitions``, both
-    higher-is-better, and the ISSUE 7 fused-step witness
-    ``*_fused_roundtrips_per_chunk``, lower-is-better) count blocking
-    transfers per executed round and
+    higher-is-better, the ISSUE 7 fused-step witness
+    ``*_fused_roundtrips_per_chunk``, lower-is-better, and the ISSUE 10
+    readout-diet witness ``*_d2h_bytes_ratio``, lower-is-better) count
+    blocking transfers per executed round and
     the control plane's work — machine-independent and deterministic
     at fixed sizes, so they get the tight ``--tol`` (default 0.35 = 35%).
     These catch "the ring quietly started fetching every round" and "the
@@ -74,6 +75,12 @@ _GATE_STRUCTURAL = (
     # placement — both machine-independent at fixed sizes
     ("_pump_stage_overlap_ratio", "higher"),
     ("_pack_padding_saved_ratio", "higher"),
+    # compact D2H readout (ISSUE 10): result bytes per fetch under
+    # readout="compact" relative to dense on the sparse-corner fleet —
+    # this ratio rising means the readout quietly fell back to dense
+    # slabs (or the overflow fallback started firing on sparse traffic);
+    # structural shape math, machine-independent at fixed sizes
+    ("_d2h_bytes_ratio", "lower"),
     # fleet SLO scenarios (ISSUE 9): the diurnal ramp must keep migrating
     # lanes, the flash crowd must keep actuating ladder transitions, and
     # the heterogeneous mix must keep packing sparse buckets — all

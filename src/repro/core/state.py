@@ -18,6 +18,10 @@ explicit here instead of living inside one monolithic pipeline function:
                         K-round executor pushes per-round outputs into, so
                         the host fetches once per drain instead of once per
                         round (``ring_init`` / ``ring_push``).
+  ``CompactRingState``— the ring plus per-slot compacted kept-corner
+                        records, so drains fetch ``O(cap)`` bytes per
+                        slot-lane instead of the dense slab
+                        (``compact_ring_init`` / ``ring_push_compact``).
 
 ``detector_step`` folds exactly one chunk:
 
@@ -66,6 +70,7 @@ __all__ = [
     "ChunkInput",
     "ChunkOutput",
     "RingState",
+    "CompactRingState",
     "control_init",
     "detector_init",
     "detector_step",
@@ -74,6 +79,8 @@ __all__ = [
     "rate_estimate_eps",
     "ring_init",
     "ring_push",
+    "compact_ring_init",
+    "ring_push_compact",
     "ring_slot_order",
     "select_update",
     "chunk_input_riders",
@@ -288,6 +295,99 @@ def ring_push(
             count=jnp.minimum(r.count + 1, rounds),
             dropped=r.dropped
             + jnp.where(r.count == rounds, jnp.int32(1), jnp.int32(0)),
+        )
+
+    return jax.lax.cond(active, push, lambda r: r, ring)
+
+
+class CompactRingState(NamedTuple):
+    """``RingState`` plus per-slot compacted kept-corner records.
+
+    The pool's ``readout="compact"`` mode pushes both representations per
+    round: the dense ``scores``/``keep`` slabs (HBM writes are cheap and
+    they are the *lossless overflow fallback*) and, via the compaction
+    kernel, ``(cap,)`` record buffers per ``(round, lane)`` slot —
+    ``c_idx[r, l, j]`` / ``c_val[r, l, j]`` hold the event index and score
+    of that slot's j-th kept event in stream order, with ``n_kept`` doubling
+    as the record count.  The drain then fetches ONLY the compact leaves
+    (plus the scalar cursors in the same ``device_get``) and densifies on
+    host; a slot with ``n_kept > cap`` is flagged overflowed and its dense
+    row is fetched in a targeted second gather — drop nothing, ever.
+
+    Field order keeps the ``RingState`` prefix so shared code
+    (``ring_slot_order`` walks, ``_replace`` resets, the runtime's
+    tree-mapped shard specs) treats both rings uniformly.
+    """
+
+    scores: jax.Array   # (R, lanes, chunk) f32 — dense fallback
+    keep: jax.Array     # (R, lanes, chunk) bool — dense fallback
+    n_kept: jax.Array   # (R, lanes) i32 — doubles as compact record count
+    vdd_idx: jax.Array  # (R, lanes) i32
+    n_valid: jax.Array  # (R, lanes) i32
+    mask: jax.Array     # (R, lanes) bool
+    head: jax.Array     # i32 scalar
+    count: jax.Array    # i32 scalar
+    dropped: jax.Array  # i32 scalar
+    c_idx: jax.Array    # (R, lanes, cap) i32 — kept events' chunk indices
+    c_val: jax.Array    # (R, lanes, cap) f32 — kept events' scores
+
+
+def compact_ring_init(
+    rounds: int, lanes: int, chunk: int, cap: int
+) -> CompactRingState:
+    """Empty compact ring: the dense ring plus ``(cap,)`` record buffers
+    per slot-lane (host call; arrays land on the default device)."""
+    if not 1 <= cap <= chunk:
+        raise ValueError(f"compact cap must be in [1, chunk], got {cap}")
+    dense = ring_init(rounds, lanes, chunk)
+    return CompactRingState(
+        *dense,
+        c_idx=jnp.zeros((rounds, lanes, cap), jnp.int32),
+        c_val=jnp.full((rounds, lanes, cap), -jnp.inf, jnp.float32),
+    )
+
+
+def ring_push_compact(
+    ring: CompactRingState,
+    outs: ChunkOutput,
+    mask: jax.Array,
+    n_valid: jax.Array,
+    active: jax.Array,
+    *,
+    compact_fn: Callable,
+) -> CompactRingState:
+    """``ring_push`` that also stores the round's compacted records.
+
+    ``compact_fn(scores, keep) -> (idx, val, count)`` is injected by the
+    caller (the runtime binds either the vmapped jnp oracle or the Pallas
+    compaction op at executor-build time, so this module never imports
+    ``repro.kernels``); ``count`` must equal ``sum(keep)`` per lane — it is
+    cross-checked against ``outs.n_kept`` downstream, not here.  The dense
+    slot is still written every push: it is the lossless fallback the
+    drain reaches for when ``n_kept > cap`` overflows the records.
+    """
+    rounds = ring.scores.shape[0]
+    c_idx, c_val, _ = compact_fn(outs.scores, outs.keep)
+
+    def push(r: CompactRingState) -> CompactRingState:
+        slot = r.head
+
+        def wr(buf, val):
+            return jax.lax.dynamic_update_index_in_dim(buf, val, slot, 0)
+
+        return CompactRingState(
+            scores=wr(r.scores, outs.scores),
+            keep=wr(r.keep, outs.keep),
+            n_kept=wr(r.n_kept, outs.n_kept),
+            vdd_idx=wr(r.vdd_idx, outs.vdd_idx),
+            n_valid=wr(r.n_valid, n_valid),
+            mask=wr(r.mask, mask),
+            head=(slot + 1) % rounds,
+            count=jnp.minimum(r.count + 1, rounds),
+            dropped=r.dropped
+            + jnp.where(r.count == rounds, jnp.int32(1), jnp.int32(0)),
+            c_idx=wr(r.c_idx, c_idx),
+            c_val=wr(r.c_val, c_val),
         )
 
     return jax.lax.cond(active, push, lambda r: r, ring)

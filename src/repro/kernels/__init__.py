@@ -21,6 +21,10 @@ Around it:
 * ``harris_conv`` — the FBF Harris response as a strip-mined conv kernel
   (the LUT *refresh*; the fused step only reads the LUT, refresh stays a
   separate per-``lut_every`` call by design).
+* ``compact`` — device-side stream compaction of dense ring result slots
+  into ``(event_idx, score)`` kept-corner records (the serving pool's
+  ``readout="compact"`` D2H diet: the reader fetches ``O(cap)`` bytes per
+  slot-lane instead of the dense ``O(chunk)`` slab).
 * ``ops`` — the jit-facing wrappers: padding/cropping to tile multiples,
   ``resolve_interpret`` (explicit kwarg > ``REPRO_PALLAS_INTERPRET`` env,
   read per call > backend auto), and ``fused_step_op``, the seam

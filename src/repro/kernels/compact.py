@@ -1,0 +1,98 @@
+"""Device-side stream compaction of ring result slots.
+
+Each ``(round, lane)`` slot of the result ring holds a dense ``(chunk,)``
+score/keep pair, but corners are *sparse* — only a few percent of events
+survive the threshold-ordinal test — so the drain's blocking ``device_get``
+ships mostly ``-inf``.  This kernel packs each lane's kept events into
+``(cap,)`` record buffers (event index + score) plus an i32 count *on
+device*, so the reader thread fetches ``O(cap)`` bytes per slot-lane
+instead of ``O(chunk)``: the near-memory thesis applied to the readout
+path, the same way the macro never ships the dense surface off-chip.
+
+One grid cell per lane; the cell streams its ``(1, E)`` score/keep blocks
+through a sequential ``fori_loop`` carrying the ``(1, cap)`` record
+buffers and a running kept-count — the loop spelling of the oracle's
+cumsum-scatter (``ref.compact_ref``), bit-exact against it by
+construction: writer ``j`` is the j-th kept event in stream order, and
+records past ``cap`` are suppressed (the caller falls back to the dense
+slot it still has — overflow is lossless by design, never a drop).
+
+Unused record slots read ``idx=0, val=-inf`` so a host densify can
+scatter the first ``min(count, cap)`` records into a ``-inf``/``False``
+field and reproduce the dense slot bit-for-bit.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["compact_slots_call"]
+
+
+def _compact_kernel(scores_ref, keep_ref, idx_out, val_out, cnt_out, *,
+                    n_events: int, cap: int):
+    def body(i, carry):
+        idx, val, n = carry
+        kept = keep_ref[0, i] > 0
+        write = kept & (n < cap)
+        slot = jnp.minimum(n, cap - 1)
+        cur_i = jax.lax.dynamic_slice(idx, (0, slot), (1, 1))[0, 0]
+        cur_v = jax.lax.dynamic_slice(val, (0, slot), (1, 1))[0, 0]
+        new_i = jnp.where(write, i, cur_i).astype(jnp.int32)
+        new_v = jnp.where(write, scores_ref[0, i], cur_v)
+        idx = jax.lax.dynamic_update_slice(
+            idx, new_i.reshape(1, 1), (0, slot)
+        )
+        val = jax.lax.dynamic_update_slice(
+            val, new_v.astype(jnp.float32).reshape(1, 1), (0, slot)
+        )
+        return idx, val, n + kept.astype(jnp.int32)
+
+    idx0 = jnp.zeros((1, cap), jnp.int32)
+    val0 = jnp.full((1, cap), -jnp.inf, jnp.float32)
+    idx, val, n = jax.lax.fori_loop(
+        0, n_events, body, (idx0, val0, jnp.int32(0))
+    )
+    idx_out[...] = idx
+    val_out[...] = val
+    cnt_out[0] = n
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "interpret"))
+def compact_slots_call(
+    scores: jax.Array,    # (L, E) f32 dense slot scores
+    keep: jax.Array,      # (L, E) i32 (0/1) dense keep flags
+    *,
+    cap: int,
+    interpret: bool,
+):
+    """Compact ``L`` lane slots at once: one grid cell per lane.
+
+    Returns ``(idx (L, cap) i32, val (L, cap) f32, count (L,) i32)``;
+    ``count`` is the TOTAL kept (it may exceed ``cap`` — that is the
+    caller's overflow signal, the records themselves stop at ``cap``).
+    """
+    l, e = scores.shape
+    kernel = functools.partial(_compact_kernel, n_events=e, cap=cap)
+    return pl.pallas_call(
+        kernel,
+        grid=(l,),
+        in_specs=[
+            pl.BlockSpec((1, e), lambda i: (i, 0)),
+            pl.BlockSpec((1, e), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),
+            pl.BlockSpec((1, cap), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((l, cap), jnp.int32),
+            jax.ShapeDtypeStruct((l, cap), jnp.float32),
+            jax.ShapeDtypeStruct((l,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scores, keep.astype(jnp.int32))

@@ -10,6 +10,10 @@
                          ``kernels.fused_step``).
 ``harris_response_op`` — Pallas Harris when the surface fits VMEM, jnp
                          fallback otherwise.
+``compact_slots_op``   — device-side stream compaction of dense ring
+                         result slots into kept-corner records
+                         (``kernels.compact``; the D2H readout diet for
+                         ``readout="compact"`` pools).
 
 All auto-pad surfaces to tile multiples and crop back, so callers keep
 native sensor shapes (e.g. DAVIS240's 180 x 240).
@@ -25,6 +29,7 @@ the kwarg through every backend route.
 from __future__ import annotations
 
 import functools
+import math
 import os
 
 import jax
@@ -39,12 +44,13 @@ from repro.core.tos import (
     _scatter_last_center_value,
     _suffix_cover_counts,
 )
-from repro.kernels import fused_step, harris_conv, tos_update
+from repro.kernels import compact, fused_step, harris_conv, tos_update
 
 __all__ = [
     "tos_update_op",
     "fused_step_op",
     "harris_response_op",
+    "compact_slots_op",
     "default_interpret",
     "resolve_interpret",
 ]
@@ -217,6 +223,42 @@ def _fused_step_jit(
         stcf_enabled=stcf_enabled, interpret=interpret,
     )
     return tos_o[:h, :w], sae_o[:h, :w], keep.astype(bool), scores
+
+
+def compact_slots_op(
+    scores: jax.Array,
+    keep: jax.Array,
+    *,
+    cap: int,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Pack dense result slots into kept-corner records on device.
+
+    ``scores``/``keep`` carry any leading batch shape over a trailing
+    event axis ``(..., E)``; returns ``(idx (..., cap) i32,
+    val (..., cap) f32, count (...,) i32)`` where record ``j`` of a slot
+    is its j-th kept event in stream order (``ref.compact_ref`` is the
+    oracle).  ``count`` is the total kept — ``count > cap`` flags
+    overflow; the records themselves stop at ``cap`` and the caller keeps
+    the dense slot as the lossless fallback.
+    """
+    return _compact_slots_jit(
+        scores, keep, cap=cap, interpret=resolve_interpret(interpret)
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "interpret"))
+def _compact_slots_jit(scores, keep, *, cap, interpret):
+    lead = scores.shape[:-1]
+    e = scores.shape[-1]
+    flat = math.prod(lead)
+    idx, val, cnt = compact.compact_slots_call(
+        scores.reshape(flat, e).astype(jnp.float32),
+        keep.reshape(flat, e).astype(jnp.int32),
+        cap=cap, interpret=interpret,
+    )
+    return (idx.reshape(*lead, cap), val.reshape(*lead, cap),
+            cnt.reshape(lead))
 
 
 def harris_response_op(

@@ -16,7 +16,32 @@ from repro.core.tos import (  # noqa: F401
     tos_update_sequential as tos_seq_ref,
 )
 
-__all__ = ["tos_seq_ref", "tos_batched_ref", "harris_ref", "counts_ref"]
+__all__ = ["tos_seq_ref", "tos_batched_ref", "harris_ref", "counts_ref",
+           "compact_ref"]
+
+
+def compact_ref(scores, keep, *, cap: int):
+    """Stream-compaction oracle for one ``(E,)`` result slot.
+
+    Packs the kept events' ``(event_idx, score)`` records into the first
+    ``min(n_kept, cap)`` slots of two ``(cap,)`` buffers via the classic
+    cumsum-scatter: position ``j`` holds the j-th kept event in stream
+    order.  Unused record slots read ``idx=0, val=-inf``; records past
+    ``cap`` are routed to a trash slot that is sliced off (overflow is the
+    *caller's* problem — the ring keeps the dense slot around as the
+    lossless fallback).  Returns ``(idx i32, val f32, count i32)``.
+    """
+    e = scores.shape[0]
+    pos = jnp.cumsum(keep.astype(jnp.int32)) - 1
+    tgt = jnp.where(keep & (pos < cap), pos, cap)
+    idx = jnp.zeros((cap + 1,), jnp.int32).at[tgt].set(
+        jnp.arange(e, dtype=jnp.int32)
+    )
+    val = jnp.full((cap + 1,), -jnp.inf, jnp.float32).at[tgt].set(
+        scores.astype(jnp.float32)
+    )
+    count = jnp.sum(keep.astype(jnp.int32))
+    return idx[:cap], val[:cap], count
 
 
 def counts_ref(shape, xy, valid, r):

@@ -25,6 +25,14 @@ buffered/dropped rounds, pump drain wait) — the serving-side counterpart of
     thread on the fetch.  Kept for comparison and debugging; both modes are
     bit-exact (property-tested).
 
+``--readout`` picks the D2H representation the drains fetch: ``dense``
+(whole result slabs) or ``compact`` (packed kept-corner records — a
+device-side stream-compaction pass shrinks each fetch by roughly
+``chunk / cap``; per-slot overflow falls back to the dense row
+losslessly, and ``pool_stats()`` reports the byte diet as
+``d2h_bytes`` / ``d2h_bytes_saved``).  Results are bit-identical in
+every combination of drain mode and readout.
+
 ``--policy`` picks the control plane:
 
   * ``static`` (default): PR 4 placement — each lane stays in the bucket
@@ -124,6 +132,16 @@ def main(argv=None):
                     choices=("async", "sync"),
                     help="async: reader thread fetches sealed rings off the "
                          "pump thread; sync: drains block the caller")
+    ap.add_argument("--readout", default="dense",
+                    choices=("dense", "compact"),
+                    help="ring readout representation: dense fetches whole "
+                         "(rounds, lanes, chunk) result slabs; compact "
+                         "fetches packed kept-corner records (~chunk/cap "
+                         "fewer D2H bytes per drain, dense-row fallback on "
+                         "overflow; results bit-identical either way)")
+    ap.add_argument("--compact-cap", type=int, default=None,
+                    help="kept-corner records per ring slot under "
+                         "--readout compact (default: chunk // 8)")
     ap.add_argument("--policy", default="static",
                     choices=("static", "adaptive", "ladder", "pack"),
                     help="control plane: static=PR 4 placement for life; "
@@ -199,6 +217,8 @@ def main(argv=None):
                         buckets=buckets,
                         on_overflow=args.overflow,
                         drain_mode=args.drain_mode,
+                        readout=args.readout,
+                        compact_cap=args.compact_cap,
                         policy=args.policy,
                         pipeline_depth=args.pipeline_depth,
                         migrate_patience=args.migrate_patience)
@@ -206,6 +226,7 @@ def main(argv=None):
     print(f"pool: capacity {args.sessions}, ring_rounds {args.ring_rounds} "
           f"x depth {ps['ring_depth']} "
           f"({args.overflow}, drain_mode={args.drain_mode}, "
+          f"readout={ps['readout']}, "
           f"policy={ps['policy']}, buckets={pool.buckets}), "
           f"sharded={ps['sharded']} over {ps['devices']} device(s)")
 
@@ -312,6 +333,12 @@ def main(argv=None):
           f"{(ps['pump_drain_wait_s'] - drain_wait0) * 1e3:.2f} ms total "
           f"({args.drain_mode}; async seals swap buffers instead of "
           f"fetching), reader lag {ps['reader_lag_rounds']} round(s)")
+    d2h = ps["d2h_bytes"]
+    print(f"d2h readout ({ps['readout']}): {d2h / 1e6:.3f} MB fetched over "
+          f"{ps['host_fetches']} fetch(es), "
+          f"{ps['d2h_bytes_saved'] / 1e6:.3f} MB saved vs dense, "
+          f"{ps['d2h_compact_overflow_slots']} overflow slot(s) "
+          f"fell back to dense rows")
     pad = ps["h2d_padding_bytes"]
     print(f"h2d padding: {pad / 1e6:.3f} MB over "
           f"{ps['h2d_event_slots']} uploaded slots "

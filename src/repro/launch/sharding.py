@@ -27,6 +27,7 @@ from jax.sharding import (
 
 from repro.meshctx import logical_to_spec
 from repro.models.common import ModelConfig
+from repro.obs.d2h import leaves_nbytes
 
 __all__ = [
     "make_rules", "param_shardings", "batch_shardings", "data_axes",
@@ -143,7 +144,9 @@ class HostStager:
         if self._pinned is None:
             return jnp.asarray(arr)
         staged = jax.device_put(arr, self._pinned)
-        self.staged_bytes += staged.nbytes
+        # byte math lives in repro.obs (the CI metrics-ownership lint
+        # bans ad-hoc nbytes arithmetic in serve/ and launch/)
+        self.staged_bytes += leaves_nbytes(staged)
         # retain the pinned slab until `depth` newer uploads have staged:
         # the second-hop copy may still be reading these locked pages when
         # the caller moves on to stage the next block

@@ -23,8 +23,10 @@ from repro.obs.sinks import (  # noqa: F401
     read_jsonl,
 )
 from repro.obs import schema  # noqa: F401
+from repro.obs.d2h import leaves_nbytes  # noqa: F401
 
 __all__ = [
+    "leaves_nbytes",
     "Counter",
     "Gauge",
     "Histogram",

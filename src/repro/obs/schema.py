@@ -74,6 +74,7 @@ POOL_STATS = {
     "pipeline_depth": "pump stage-ahead depth (1 = serial pump)",
     "on_overflow": "ring overflow policy (drop_oldest | drain)",
     "drain_mode": "reader drain mode (sync | async)",
+    "readout": "ring readout representation (dense | compact)",
     "policy": "scheduler policy name",
     "host_fetches": "blocking device->host result transfers",
     "rounds_executed": "chunk rounds dispatched to executors",
@@ -96,6 +97,9 @@ POOL_STATS = {
     "h2d_padding_bytes": "upload bytes spent on padding slots",
     "h2d_pinned_staging": "True when uploads stage via pinned host memory",
     "h2d_staged_uploads": "uploads that went through the pinned stager",
+    "d2h_bytes": "result bytes fetched device->host across drains",
+    "d2h_bytes_saved": "dense-equivalent bytes the compact readout skipped",
+    "d2h_compact_overflow_slots": "slot-lanes that fell back to dense rows",
     "dropped_rounds_total": "rounds lost to overflow (confirmed+predicted)",
     "dropped_rounds_confirmed": "overflow drops confirmed by fetches",
     "shed_events_total": "shed events across currently-connected lanes",

@@ -20,6 +20,26 @@ plane.
               the fetch off the pump thread; lanes shard across local
               devices; membership is an active-mask lane system
               (join/leave/migrate/re-knob without recompilation).
+              The *readout* — what a drain actually transfers — comes in
+              two representations.  ``readout="dense"`` (default) fetches
+              each ring's whole ``(rounds, lanes, chunk)`` score/keep
+              slabs.  ``readout="compact"`` runs a device-side stream
+              compaction in the same executor dispatch: each pushed
+              round also packs its kept corners into ``(cap,)`` record
+              arrays (event index + score; ``cap = chunk // 8`` by
+              default, ``compact_cap=`` to override), and the drain
+              fetches only those records plus the scalar cursors in one
+              transfer — roughly a ``chunk / cap``-fold D2H byte diet,
+              reported as ``d2h_bytes`` / ``d2h_bytes_saved``.  Slots
+              whose kept count overflows the cap fall back to their
+              dense rows (a targeted second gather, counted in
+              ``d2h_compact_overflow_slots``) so nothing is ever
+              dropped; the fetch densifies on host, so results are
+              bit-identical to dense in both drain modes
+              (property-tested).  The compaction itself follows the
+              kernel package's dual-path discipline: a jnp
+              ``cumsum``-scatter oracle on the jnp backend, a Pallas
+              kernel on the pallas backends.
               The pump itself is *pipelined*: each block's pass splits
               into a **stage** phase (host gather + H2D upload through the
               pinned-host stager, no ring or state touched) and a

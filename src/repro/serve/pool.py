@@ -80,7 +80,12 @@ class DetectorPool:
     overload ladder; ``policy="pack"`` fleet-wide padding-minimizing lane
     packing).  ``pipeline_depth`` sizes the pump's stage-ahead window
     (blocks staged while earlier blocks run on device; 1 = the serial
-    pre-PR 8 pump, bit-exact either way)."""
+    pre-PR 8 pump, bit-exact either way).  ``readout="compact"`` stores
+    each ring slot's kept corners as packed ``(cap,)`` records on device
+    so drains fetch ~``chunk/cap``-fold fewer D2H bytes (``compact_cap``
+    overrides the ``chunk // 8`` default per-slot record capacity;
+    slot-lanes whose kept count overflows the cap fall back to their
+    dense rows losslessly) — results stay bit-identical to ``"dense"``."""
 
     def __init__(self, cfg, capacity: int, *, seed: int = 0,
                  ring_rounds: int = 8,
@@ -90,6 +95,8 @@ class DetectorPool:
                  drain_mode: str = "async",
                  ring_depth: int = 2,
                  pipeline_depth: int = 2,
+                 readout: str = "dense",
+                 compact_cap: Optional[int] = None,
                  policy: str = "static",
                  migrate_patience: int = 3,
                  migrate_margin: float = 0.9,
@@ -100,7 +107,8 @@ class DetectorPool:
             cfg, capacity, seed=seed, ring_rounds=ring_rounds,
             buckets=buckets, on_overflow=on_overflow, shard=shard,
             drain_mode=drain_mode, ring_depth=ring_depth,
-            pipeline_depth=pipeline_depth, metrics=metrics,
+            pipeline_depth=pipeline_depth, readout=readout,
+            compact_cap=compact_cap, metrics=metrics,
         )
         if scheduler is not None:
             if tuple(scheduler.buckets) != self._rt.buckets:

@@ -118,6 +118,7 @@ __all__ = ["PoolRuntime"]
 
 _OVERFLOW_POLICIES = ("drain", "drop_oldest")
 _DRAIN_MODES = ("sync", "async")
+_READOUTS = ("dense", "compact")
 _STOP = object()          # reader-thread shutdown sentinel
 
 # H2D bytes per uploaded chunk slot: xy int32 pair + ts int32 + valid bool.
@@ -281,6 +282,8 @@ class PoolRuntime:
                  drain_mode: str = "async",
                  ring_depth: int = 2,
                  pipeline_depth: int = 2,
+                 readout: str = "dense",
+                 compact_cap: Optional[int] = None,
                  metrics: Optional[obs_mod.MetricsRegistry] = None):
         streaming_mod._check_streamable(cfg)
         if capacity < 1:
@@ -307,6 +310,12 @@ class PoolRuntime:
                 "ring_depth must be >= 2 (one live ring plus at least one "
                 "spare for the reader)"
             )
+        if readout not in _READOUTS:
+            raise ValueError(
+                f"readout must be one of {_READOUTS}, got {readout!r}"
+            )
+        if compact_cap is not None and int(compact_cap) < 1:
+            raise ValueError("compact_cap must be >= 1")
         if buckets is None:
             buckets = (cfg.chunk,)
         buckets = tuple(sorted({int(b) for b in buckets}))
@@ -321,6 +330,17 @@ class PoolRuntime:
         self._drain_mode = drain_mode
         self._ring_depth = ring_depth
         self._pipeline_depth = int(pipeline_depth)
+        self._readout = readout
+        # Per-bucket compact record capacity: by default chunk/8 — corners
+        # are sparse (luvHarris keeps a few percent), so an eighth of the
+        # chunk absorbs real traffic with headroom while keeping the fetch
+        # ~5x smaller; a slot that still overflows falls back to its dense
+        # row, losslessly.  An explicit compact_cap clamps to the bucket.
+        self._compact_caps = {
+            int(b): (max(1, int(b) // 8) if compact_cap is None
+                     else max(1, min(int(compact_cap), int(b))))
+            for b in buckets
+        }
         self._half_us = int(cfg.dvfs_cfg.half_us)
         self._online = bool(cfg.dvfs and cfg.dvfs_online)
         self._tab = dvfs_mod.op_point_table(cfg.dvfs_cfg)
@@ -516,6 +536,15 @@ class PoolRuntime:
         self._m_obs_rebuilds = ctr("observation_rebuilds")
         self._m_obs_reuses = ctr("observation_reuses")
         self._m_migrations = ctr("migrations_total")
+        # D2H accounting (parity with the H2D side): honest fetched bytes
+        # on BOTH readouts, the dense-equivalent bytes compaction skipped,
+        # and how many slot-lanes overflowed into the dense fallback.
+        # Incremented inside the fetch paths — which run UNLOCKED on the
+        # reader thread in async mode; registry handles carry their own
+        # per-metric locks, so that is safe by design.
+        self._m_d2h_bytes = ctr("d2h_bytes")
+        self._m_d2h_saved = ctr("d2h_bytes_saved")
+        self._m_d2h_overflow = ctr("d2h_compact_overflow_slots")
 
         def per_bucket(metric):
             return {b: metric.labels(bucket=b) for b in buckets}
@@ -585,9 +614,11 @@ class PoolRuntime:
         lane0 = sharding_mod.lane_spec(0)
         lane1 = sharding_mod.lane_spec(1)
         states_spec = jax.tree.map(lambda _: lane0, self._states)
-        ring_spec = state_mod.RingState(
-            scores=lane1, keep=lane1, n_kept=lane1, vdd_idx=lane1,
-            n_valid=lane1, mask=lane1, head=P(), count=P(), dropped=P(),
+        # Shape-generic over ring flavours (RingState / CompactRingState):
+        # every per-slot buffer carries the lane axis second, every cursor
+        # is a scalar — so the spec is derivable from the leaf rank.
+        ring_spec = jax.tree.map(
+            lambda a: lane1 if a.ndim >= 2 else P(), self._rings[bucket]
         )
         # Pin output shardings to the same spelling lane_put uses for the
         # inputs: jit would otherwise canonicalize equivalent specs (e.g.
@@ -618,6 +649,7 @@ class PoolRuntime:
         reader holds are different buffers, so async drain stays safe)."""
         tcfg = pipeline_mod._trace_cfg(self._cfg, chunk=bucket)
         donate = ("states", "ring") if self._donate else ()
+        push = self._ring_push_fn(bucket)
 
         def block(states, ring, chunks, mask, n_valid, round_active):
             def body(carry, xs):
@@ -629,7 +661,7 @@ class PoolRuntime:
                         lambda s, c: state_mod.detector_step(tcfg, s, c)
                     )(states, chunk)
                     states = _mask_tree(m, new_states, states)
-                    ring = state_mod.ring_push(ring, outs, m, nv, act)
+                    ring = push(ring, outs, m, nv, act)
                     return states, ring
 
                 states, ring = jax.lax.cond(
@@ -671,15 +703,14 @@ class PoolRuntime:
         ``compile_cache_sizes``)."""
         tcfg = pipeline_mod._trace_cfg(self._cfg, chunk=bucket)
         donate = ("states", "ring") if self._donate else ()
+        push = self._ring_push_fn(bucket)
 
         def single(states, ring, chunk, mask, n_valid):
             new_states, outs = jax.vmap(
                 lambda s, c: state_mod.detector_step(tcfg, s, c)
             )(states, chunk)
             states = _mask_tree(mask, new_states, states)
-            ring = state_mod.ring_push(
-                ring, outs, mask, n_valid, jnp.bool_(True)
-            )
+            ring = push(ring, outs, mask, n_valid, jnp.bool_(True))
             return states, ring
 
         if self._mesh is not None:
@@ -707,10 +738,49 @@ class PoolRuntime:
         )
 
     def _make_ring(self, bucket: int) -> state_mod.RingState:
-        ring = state_mod.ring_init(self._ring_rounds, self._phys, bucket)
+        if self._readout == "compact":
+            ring = state_mod.compact_ring_init(
+                self._ring_rounds, self._phys, bucket,
+                self._compact_caps[bucket],
+            )
+        else:
+            ring = state_mod.ring_init(self._ring_rounds, self._phys, bucket)
         if self._mesh is not None:
             ring = sharding_mod.lane_put(self._mesh, ring, 1)
         return ring
+
+    def _ring_push_fn(self, bucket: int):
+        """The executor's ring-push callable, chosen once at build time so
+        the compiled-once witness holds: dense readout pushes the plain
+        ring; compact readout pushes through ``ring_push_compact`` with the
+        compaction routine bound — the jnp ``cumsum``-scatter oracle on the
+        jnp backend (keeping that path Pallas-free), the Pallas compaction
+        kernel on every pallas backend (same dual-path discipline as the
+        fused step, parity-tested in ``tests/test_compact_ring.py``)."""
+        if self._readout != "compact":
+            return state_mod.ring_push
+        cap = self._compact_caps[bucket]
+        if self._cfg.backend == "jnp":
+            from repro.kernels import ref as ref_mod  # pure jnp, Pallas-free
+
+            compact_fn = jax.vmap(
+                lambda s, k: ref_mod.compact_ref(s, k, cap=cap)
+            )
+        else:
+            from repro.kernels import ops
+
+            interpret = self._cfg.interpret
+
+            def compact_fn(s, k):
+                return ops.compact_slots_op(
+                    s, k, cap=cap, interpret=interpret
+                )
+
+        import functools
+
+        return functools.partial(
+            state_mod.ring_push_compact, compact_fn=compact_fn
+        )
 
     def _reset_ring(self, ring: state_mod.RingState) -> state_mod.RingState:
         """Mark a drained ring empty (count/dropped -> 0) without touching
@@ -1497,6 +1567,7 @@ class PoolRuntime:
                 "pipeline_depth": self._pipeline_depth,
                 "on_overflow": self._overflow,
                 "drain_mode": self._drain_mode,
+                "readout": self._readout,
                 "host_fetches": self._m_host_fetches.value(),
                 "rounds_executed": self._m_rounds_executed.value(),
                 "pump_drain_wait_s": float(self._m_drain_wait.value()),
@@ -1533,6 +1604,9 @@ class PoolRuntime:
                 "h2d_padding_bytes": (
                     (h2d_slots - h2d_valid) * EVENT_SLOT_BYTES
                 ),
+                "d2h_bytes": self._m_d2h_bytes.value(),
+                "d2h_bytes_saved": self._m_d2h_saved.value(),
+                "d2h_compact_overflow_slots": self._m_d2h_overflow.value(),
                 "dropped_rounds_total": dropped_dev + dropped_pred,
                 "dropped_rounds_confirmed": dropped_dev,
                 "shed_events_total": sum(
@@ -1838,7 +1912,7 @@ class PoolRuntime:
         thread, then distribute and mark the ring empty."""
         if self._m_ring_count[bucket].value() == 0:
             return
-        ring = jax.device_get(self._rings[bucket])
+        ring = self._fetch_ring(self._rings[bucket])
         self._m_host_fetches.inc()
         self._distribute(bucket, ring)
         self._m_ring_count[bucket].set(0)
@@ -1880,9 +1954,87 @@ class PoolRuntime:
             self._cv.wait()
 
     def _fetch_ring(self, ring: state_mod.RingState):
-        """The blocking device transfer (reader thread, no lock held).
-        Split out so tests can inject fetch failures."""
-        return jax.device_get(ring)
+        """The blocking device transfer (both drain modes funnel through
+        here; on the async path it runs on the reader thread with no lock
+        held — the D2H registry handles are internally locked, so the
+        accounting below is thread-safe).  Split out so tests can inject
+        fetch failures.  Always returns a *dense* host ``RingState`` —
+        compact rings are densified here, so ``_distribute`` and the
+        public result contract never see the representation change."""
+        if self._readout == "compact":
+            return self._fetch_compact(ring)
+        host = jax.device_get(ring)
+        self._m_d2h_bytes.inc(obs_mod.leaves_nbytes(*host))
+        return host
+
+    def _fetch_compact(self, ring: state_mod.CompactRingState):
+        """Compact readout: fetch the packed ``(cap,)`` kept-corner records
+        plus the scalar cursors in ONE ``device_get`` (no per-scalar
+        syncs), gather dense rows only for slot-lanes whose kept count
+        overflowed the cap (lossless fallback — drop nothing, ever), and
+        scatter back to a dense host ``RingState``.
+
+        The densify is bit-exact: ``detector_step`` scores every non-kept
+        event exactly ``-inf`` with ``keep=False``, which is precisely the
+        fill value, so scattering the ``n_kept`` records reproduces the
+        dense row byte-for-byte.  ``vdd_idx`` is only consumed by
+        ``account_chunk`` when DVFS is online; fixed-Vdd pools skip that
+        leaf entirely and substitute zeros the accounting never reads."""
+        rounds, lanes, chunk = ring.scores.shape
+        cap = ring.c_idx.shape[2]
+        leaves = [ring.c_idx, ring.c_val, ring.n_kept, ring.n_valid,
+                  ring.mask, ring.head, ring.count, ring.dropped]
+        if self._online:
+            leaves.append(ring.vdd_idx)
+        (c_idx, c_val, n_kept, n_valid, mask,
+         head, count, dropped, *rest) = jax.device_get(leaves)
+        vdd_idx = rest[0] if rest else np.zeros((rounds, lanes), np.int32)
+        fetched = obs_mod.leaves_nbytes(*leaves)
+
+        # Overflowed slot-lanes fall back to their dense rows.  Restrict
+        # the scan to undrained slots: recycled rings only reset their
+        # cursors, so stale (already-drained) slots can still look masked.
+        live = state_mod.ring_slot_order(int(head), int(count), rounds)
+        rows = [
+            (slot, int(lane))
+            for slot in live
+            for lane in np.flatnonzero(mask[slot] & (n_kept[slot] > cap))
+        ]
+        over = []
+        if rows:
+            over = jax.device_get(
+                [(ring.scores[s, l], ring.keep[s, l]) for s, l in rows]
+            )
+            fetched += obs_mod.leaves_nbytes(*over)
+            self._m_d2h_overflow.inc(len(rows))
+
+        scores = np.full((rounds, lanes, chunk), -np.inf, np.float32)
+        keep = np.zeros((rounds, lanes, chunk), bool)
+        for slot in live:
+            for lane in np.flatnonzero(mask[slot]):
+                nk = int(n_kept[slot, lane])
+                if nk > cap:
+                    continue  # filled from the overflow gather below
+                idx = c_idx[slot, lane, :nk]
+                scores[slot, lane, idx] = c_val[slot, lane, :nk]
+                keep[slot, lane, idx] = True
+        for (slot, lane), (s_row, k_row) in zip(rows, over):
+            scores[slot, lane] = np.asarray(s_row, np.float32)
+            keep[slot, lane] = np.asarray(k_row, bool)
+
+        self._m_d2h_bytes.inc(fetched)
+        # nbytes is metadata on device arrays — the dense-equivalent
+        # baseline costs no transfer and no sync.
+        dense_eq = obs_mod.leaves_nbytes(
+            ring.scores, ring.keep, ring.n_kept, ring.vdd_idx,
+            ring.n_valid, ring.mask, ring.head, ring.count, ring.dropped,
+        )
+        self._m_d2h_saved.inc(max(0, dense_eq - fetched))
+        return state_mod.RingState(
+            scores=scores, keep=keep, n_kept=n_kept, vdd_idx=vdd_idx,
+            n_valid=n_valid, mask=mask, head=head, count=count,
+            dropped=dropped,
+        )
 
     def _reader_loop(self) -> None:
         """Async drain: fetch sealed rings FIFO (order preserves the

@@ -139,8 +139,13 @@ def test_registry_snapshot_agrees_with_pool_stats(replay):
                  "pump_stages", "pump_stages_overlapped",
                  "pump_forced_drains", "ctrl_batched_writes",
                  "ctrl_actions_coalesced", "observation_rebuilds",
-                 "observation_reuses"):
+                 "observation_reuses", "d2h_bytes", "d2h_bytes_saved",
+                 "d2h_compact_overflow_slots"):
         assert snap[name] == ps[name], name
+    # dense readout reports honest fetch bytes (and saves nothing)
+    assert ps["d2h_bytes"] > 0
+    assert ps["d2h_bytes_saved"] == 0
+    assert ps["d2h_compact_overflow_slots"] == 0
     for b, d in ps["buckets"].items():
         assert snap[f"h2d_event_slots{{bucket={b}}}"] == d["h2d_event_slots"]
         assert snap[f"h2d_valid_events{{bucket={b}}}"] == d["h2d_valid_events"]
